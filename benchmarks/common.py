@@ -1,0 +1,57 @@
+"""Shared benchmark plumbing: the paper's evaluation system (§V-A)."""
+
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+from repro.core import (Constraints, Explorer, Platform, QuantSpec,
+                        SystemConfig, get_link)
+from repro.core.hwmodel import EYERISS_LIKE, SIMBA_LIKE
+
+PAPER_CNNS = ["vgg16", "resnet50", "squeezenet11", "googlenet",
+              "regnetx_400mf", "efficientnet_b0"]
+
+
+def paper_system(variant: str = "efficient") -> SystemConfig:
+    """Platform A: 16-bit Eyeriss-like; B: Simba-like; GigE link (§V-A).
+
+    Energy-table variants (Fig. 2 sensitivity ablation, EXPERIMENTS
+    §Paper-validation): 'efficient' = int8 SMB with low static power (our
+    default Accelergy-class constants); 'leaky' = both platforms
+    leakage-dominated (50/80 mW) — under which the paper's dual
+    latency+energy win for VGG/SqueezeNet reproduces, because the slow SMB
+    pays static energy for its longer runtime."""
+    import dataclasses
+    eyr, smb = EYERISS_LIKE, SIMBA_LIKE
+    if variant == "leaky":
+        eyr = dataclasses.replace(
+            eyr, energy=dataclasses.replace(eyr.energy, leakage_w=0.05))
+        smb = dataclasses.replace(
+            smb, energy=dataclasses.replace(smb.energy, leakage_w=0.08))
+    return SystemConfig(
+        [Platform("A", eyr, QuantSpec(bits=16)),
+         Platform("B", smb, QuantSpec(bits=8))],
+        [get_link("gige")])
+
+
+def chain_system(n_eyr: int = 2, n_smb: int = 2) -> SystemConfig:
+    """§V-C: chain of 2×EYR then 2×SMB over GigE."""
+    plats = ([Platform(f"EYR{i}", EYERISS_LIKE, QuantSpec(bits=16))
+              for i in range(n_eyr)] +
+             [Platform(f"SMB{i}", SIMBA_LIKE, QuantSpec(bits=8))
+              for i in range(n_smb)])
+    return SystemConfig(plats, [get_link("gige")] * (len(plats) - 1))
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

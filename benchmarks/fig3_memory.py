@@ -1,0 +1,56 @@
+"""Fig. 3 reproduction: per-cut memory on both platforms for
+EfficientNet-B0 (two 16-bit platforms).  The paper's observation: unlike
+the other CNNs (front-heavy memory), EfficientNet-B0's platform-A memory
+*grows* with later cuts, so memory-efficient cuts are early (before
+Conv_56) or late (after Conv_79)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import csv_row, timed
+from repro.core import (Explorer, Platform, QuantSpec, SystemConfig, get_link)
+from repro.core.hwmodel import EYERISS_LIKE
+from repro.models.cnn.zoo import build_cnn
+
+
+def run(out_dir: str = "experiments"):
+    os.makedirs(out_dir, exist_ok=True)
+    graph = build_cnn("efficientnet_b0").to_graph()
+    system = SystemConfig(
+        [Platform("A", EYERISS_LIKE, QuantSpec(bits=16)),
+         Platform("B", EYERISS_LIKE, QuantSpec(bits=16))],
+        [get_link("gige")])
+
+    def explore():
+        ex = Explorer(graph, system, objectives=("latency", "memory"))
+        res = ex.run(seed=0)
+        return ex, res
+
+    (ex, res), dt = timed(explore)
+    points = []
+    for e in res.all_evals:
+        points.append({"cut": e.cuts[0],
+                       "layer": res.schedule[e.cuts[0]].name,
+                       "mem_A_MiB": e.memory_bytes[0] / 2 ** 20,
+                       "mem_B_MiB": e.memory_bytes[1] / 2 ** 20,
+                       "sum_MiB": sum(e.memory_bytes) / 2 ** 20})
+    # find the memory valley: best cuts by total memory
+    points_sorted = sorted(points, key=lambda p: p["sum_MiB"])
+    best = points_sorted[:5]
+    worst = points_sorted[-5:]
+    out = {"points": points, "best5": best, "worst5": worst,
+           "explore_s": round(dt, 2)}
+    with open(os.path.join(out_dir, "fig3_memory.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    best_names = ",".join(p["layer"] for p in best[:3])
+    return [csv_row("fig3_efficientnet_memory", dt * 1e6,
+                    f"best_cuts={best_names};"
+                    f"min_sum={best[0]['sum_MiB']:.1f}MiB;"
+                    f"max_sum={worst[-1]['sum_MiB']:.1f}MiB")]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

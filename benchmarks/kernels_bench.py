@@ -1,0 +1,85 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp oracle on CPU.
+
+On CPU these numbers measure the *correctness harness*, not TPU speed —
+the derived column therefore reports the arithmetic intensity and the
+projected v5e roofline time for each kernel invocation, which is the
+number that matters for the §Roofline analysis."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.kernels import ref
+
+V5E_FLOPS = 197e12
+V5E_BW = 819e9
+
+
+def _bench(fn, *args, repeat=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeat
+
+
+def run(out_dir: str = "experiments"):
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # quant_matmul 512x512x512
+    m = k = n = 512
+    x = jax.random.normal(key, (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.05
+    w_scale = jnp.abs(w).max(axis=0) / 127.0
+    w_q = jnp.clip(jnp.round(w / w_scale), -128, 127).astype(jnp.int8)
+    x_scale = jnp.abs(x).max() / 127.0
+    dt = _bench(jax.jit(ref.quant_matmul), x, w_q, w_scale, x_scale)
+    flops = 2 * m * k * n
+    bytes_ = (m * k + k * n + m * n) * 4
+    roof = max(flops / V5E_FLOPS, bytes_ / V5E_BW)
+    rows.append(csv_row("quant_matmul_512", dt * 1e6,
+                        f"AI={flops/bytes_:.1f};v5e_roofline_us={roof*1e6:.1f}"))
+
+    # ssd_scan b2 t512 h4 p64 n64
+    b, t, h, p, nst, chunk = 2, 512, 4, 64, 64, 128
+    ks = jax.random.split(key, 5)
+    xs = jax.random.normal(ks[0], (b, t, h, p))
+    dts = jax.nn.softplus(jax.random.normal(ks[1], (b, t, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, t, nst)) * 0.5
+    C = jax.random.normal(ks[4], (b, t, nst)) * 0.5
+    fn = jax.jit(lambda *a: ref.ssd_scan(*a, chunk))
+    dt1 = _bench(fn, xs, dts, A, B, C)
+    # SSD flops: intra-chunk (c*c*n + c*c*p) + states per chunk
+    nc = t // chunk
+    flops = 2 * b * nc * (chunk * chunk * nst + h * chunk * chunk * p
+                          + 2 * h * chunk * p * nst)
+    bytes_ = (xs.size + dts.size + B.size + C.size) * 4 * 2
+    roof = max(flops / V5E_FLOPS, bytes_ / V5E_BW)
+    rows.append(csv_row("ssd_scan_512", dt1 * 1e6,
+                        f"AI={flops/bytes_:.1f};v5e_roofline_us={roof*1e6:.2f}"))
+
+    # window attention t1024 w256
+    t2, w2, h2, hd = 1024, 256, 8, 64
+    q = jax.random.normal(ks[0], (1, t2, h2, hd))
+    kk = jax.random.normal(ks[1], (1, t2, h2, hd))
+    v = jax.random.normal(ks[2], (1, t2, h2, hd))
+    fn2 = jax.jit(lambda *a: ref.window_attn(*a, w2))
+    dt2 = _bench(fn2, q, kk, v)
+    flops = 2 * 2 * t2 * w2 * h2 * hd
+    bytes_ = (q.size * 3 + q.size) * 4
+    roof = max(flops / V5E_FLOPS, bytes_ / V5E_BW)
+    rows.append(csv_row("window_attn_1k_w256", dt2 * 1e6,
+                        f"AI={flops/bytes_:.1f};v5e_roofline_us={roof*1e6:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

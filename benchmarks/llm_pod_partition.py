@@ -1,0 +1,68 @@
+"""The paper's technique applied to every assigned architecture: pipeline
+stage boundaries across 2 and 4 TPU pods over inter-pod DCI, chosen by the
+explorer from each model's layer graph (at train_4k's sequence length).
+
+Outputs, per arch: the selected cuts, stage balance, pipelined-throughput
+gain over a single pod, and whether the explorer kept all stages (Table-II
+effect on pods: transmission overhead can make fewer stages optimal)."""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from benchmarks.common import csv_row, timed
+from repro.core import (Explorer, Platform, QuantSpec, SystemConfig,
+                        get_link)
+from repro.core.hwmodel.arch import TPU_V5E
+from repro.models.registry import ARCH_IDS, build_model, get_config
+
+SEQ = 4096
+
+
+def run(out_dir: str = "experiments"):
+    os.makedirs(out_dir, exist_ok=True)
+    pod = Platform("pod", dataclasses.replace(TPU_V5E,
+                                              mem_bytes=256 * 16 * 2 ** 30),
+                   QuantSpec(bits=16))
+    rows, out = [], {}
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        graph = model.to_graph(SEQ)
+        shared = (model.shared_groups()
+                  if hasattr(model, "shared_groups") else None)
+        out[arch] = {}
+        for n_pods in (2, 4):
+            system = SystemConfig([pod] * n_pods,
+                                  [get_link("dci")] * (n_pods - 1))
+
+            def explore():
+                ex = Explorer(graph, system,
+                              objectives=("latency", "throughput"),
+                              shared_groups=shared)
+                return ex.run(seed=0)
+
+            res, dt = timed(explore)
+            s = res.selected
+            gain = (s.throughput / res.baselines[0].throughput
+                    if res.baselines[0].throughput else 0.0)
+            out[arch][f"{n_pods}pods"] = {
+                "cuts": list(s.cuts),
+                "stages_used": s.n_partitions,
+                "stage_latency_ms": [round(t * 1e3, 2)
+                                     for t in s.stage_latency_s],
+                "throughput_gain_x": round(gain, 2),
+            }
+            rows.append(csv_row(
+                f"pods_{arch}_{n_pods}", dt * 1e6,
+                f"stages={s.n_partitions}/{n_pods};th_gain={gain:.2f}x"))
+    with open(os.path.join(out_dir, "llm_pod_partition.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,82 @@
+"""§Roofline report: formats the dry-run JSON (single-pod 10×4 sweep) into
+the per-(arch × shape) table — three terms, dominant bottleneck, MODEL_FLOPS
+ratio, one-line recommendation."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from benchmarks.common import csv_row
+
+RECOMMEND = {
+    "compute": "increase per-chip work (bigger microbatch) or cut redundant"
+               " recompute (remat policy)",
+    "memory": "fuse/bf16-ify residual traffic, tighten dispatch buffers,"
+              " shard the KV cache further",
+    "collective": "reshard to cut all-gathers (2D weight sharding along the"
+                  " contracted dim), overlap collectives with compute,"
+                  " or shrink the model axis",
+}
+
+
+def load_rows(path: str = "experiments/dryrun_single_pod.json") -> List[dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def format_table(rows: List[dict]) -> str:
+    out = ["| arch | shape | compute_s | memory_s | collective_s | bound | "
+           "useful | args GiB/dev | temp GiB/dev |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skipped ({r['reason'][:40]}...) | — | — | — |")
+            continue
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"ERROR | — | — | — |")
+            continue
+        mem = r["memory"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+            f"{mem['argument_bytes']/2**30:.2f} | "
+            f"{mem['temp_bytes']/2**30:.2f} |")
+    return "\n".join(out)
+
+
+def run(out_dir: str = "experiments"):
+    rows = load_rows()
+    csv = []
+    if not rows:
+        return [csv_row("roofline_report", 0.0,
+                        "missing=experiments/dryrun_single_pod.json —"
+                        " run python -m repro.launch.dryrun --all --out ...")]
+    ok = [r for r in rows if "error" not in r and not r.get("skipped")]
+    table = format_table(rows)
+    with open(os.path.join(out_dir, "roofline_table.md"), "w") as f:
+        f.write(table + "\n")
+    by_dom = {}
+    for r in ok:
+        by_dom.setdefault(r["dominant"], []).append(r)
+    for dom, rs in sorted(by_dom.items()):
+        worst = max(rs, key=lambda r: r["bound_s"])
+        csv.append(csv_row(
+            f"roofline_{dom}_bound", 0.0,
+            f"n={len(rs)};worst={worst['arch']}x{worst['shape']}"
+            f"@{worst['bound_s']:.2f}s;fix={RECOMMEND[dom][:40]}"))
+    csv.append(csv_row("roofline_total", 0.0,
+                       f"ok={len(ok)};skipped={sum(1 for r in rows if r.get('skipped'))};"
+                       f"errors={sum(1 for r in rows if 'error' in r)}"))
+    return csv
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

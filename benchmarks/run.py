@@ -1,0 +1,53 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run             # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig2
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+BENCHES = [
+    ("fig2", "benchmarks.fig2_pareto"),            # Fig. 2: six-CNN pareto
+    ("fig3", "benchmarks.fig3_memory"),            # Fig. 3: memory vs cut
+    ("table2", "benchmarks.table2_multipartition"),  # Table II: 4-platform
+    ("accuracy", "benchmarks.accuracy_measured"),  # §IV-C measured + QAT
+    ("link", "benchmarks.link_sensitivity"),       # link co-design sweep
+    ("pods", "benchmarks.llm_pod_partition"),      # technique on 10 archs
+    ("kernels", "benchmarks.kernels_bench"),       # Pallas kernel micro
+    ("roofline", "benchmarks.roofline_report"),    # §Roofline table
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: " +
+                         ",".join(k for k, _ in BENCHES))
+    args = ap.parse_args()
+    subset = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, module in BENCHES:
+        if subset and key not in subset:
+            continue
+        try:
+            import importlib
+            mod = importlib.import_module(module)
+            for row in mod.run():
+                print(row, flush=True)
+        except Exception:
+            failures += 1
+            print(f"{key},0.0,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,37 @@
+"""§V-C scenario: an automotive chain — sensor node (EYR), two zonal
+gateways (EYR + SMB), central unit (SMB), all over Gigabit Ethernet.
+NSGA-II explores multi-cut schedules; the Table-II effect appears: small
+CNNs don't profit from 4 partitions, EfficientNet-B0 does.
+
+  PYTHONPATH=src python examples/automotive_chain.py
+"""
+
+from collections import Counter
+
+from repro.core import Explorer, Platform, QuantSpec, SystemConfig, get_link
+from repro.core.hwmodel import EYERISS_LIKE, SIMBA_LIKE
+from repro.models.cnn.zoo import build_cnn
+
+system = SystemConfig(
+    [Platform("sensor", EYERISS_LIKE, QuantSpec(bits=16)),
+     Platform("zone-1", EYERISS_LIKE, QuantSpec(bits=16)),
+     Platform("zone-2", SIMBA_LIKE, QuantSpec(bits=8)),
+     Platform("central", SIMBA_LIKE, QuantSpec(bits=8))],
+    [get_link("gige")] * 3)
+
+for name in ("squeezenet11", "efficientnet_b0"):
+    graph = build_cnn(name).to_graph()
+    # throughput included: the §V-C discussion is throughput-driven, and
+    # without it single-platform schedules dominate the 3-objective front
+    # (see benchmarks/table2_multipartition.py for both objective sets)
+    ex = Explorer(graph, system,
+                  objectives=("latency", "energy", "bandwidth", "throughput"))
+    res = ex.run(seed=0, pop_size=48, n_gen=30)
+    counts = Counter(e.n_partitions for e in res.pareto)
+    print(f"\n{name}: pareto front of {len(res.pareto)} schedules")
+    print("  partitions used: " +
+          ", ".join(f"{k}: {counts.get(k, 0)}" for k in (1, 2, 3, 4)))
+    s = res.selected
+    print(f"  selected {s.cuts} -> {s.n_partitions} partitions, "
+          f"lat={s.latency_s*1e3:.2f} ms, E={s.energy_j*1e3:.2f} mJ, "
+          f"th={s.throughput:.0f}/s")

@@ -1,0 +1,37 @@
+"""Quickstart: automatically find the best partitioning point for SqueezeNet
+on a two-platform embedded system (16-bit Eyeriss-like + 8-bit Simba-like,
+Gigabit Ethernet) — the paper's §V-A setup in ~20 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import (Constraints, Explorer, Platform, QuantSpec,
+                        SystemConfig, get_link)
+from repro.core.hwmodel import EYERISS_LIKE, SIMBA_LIKE
+from repro.models.cnn.zoo import build_cnn
+
+# 1. the DNN as a layer graph (ONNX-equivalent op granularity)
+graph = build_cnn("squeezenet11").to_graph()
+print(f"SqueezeNet v1.1: {len(graph)} nodes, "
+      f"{graph.total_params/1e6:.2f}M params, "
+      f"{graph.total_macs/1e9:.2f} GMACs")
+
+# 2. the distributed system
+system = SystemConfig(
+    platforms=[Platform("sensor-node", EYERISS_LIKE, QuantSpec(bits=16)),
+               Platform("central-unit", SIMBA_LIKE, QuantSpec(bits=8))],
+    links=[get_link("gige")])
+
+# 3. explore: filter by memory/link, evaluate HW costs, NSGA-II Pareto
+explorer = Explorer(graph, system,
+                    objectives=("latency", "energy", "throughput"),
+                    constraints=Constraints(max_link_bytes=2_000_000))
+result = explorer.run(seed=0)
+
+print(result.summary())
+print("\nPareto front:")
+for ev in sorted(result.pareto, key=lambda e: e.latency_s):
+    name = (result.schedule[ev.cuts[0]].name if ev.cuts[0] >= 0
+            else "all-on-central-unit")
+    print(f"  cut after {name:24s} lat={ev.latency_s*1e3:7.3f} ms  "
+          f"E={ev.energy_j*1e3:7.3f} mJ  th={ev.throughput:8.1f}/s")

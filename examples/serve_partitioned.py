@@ -1,0 +1,19 @@
+"""End-to-end serving example (the paper-kind driver): warm-train a reduced
+smollm-360m, let the explorer pick the partition, serve batched requests
+both monolithically and partitioned, verify identical outputs, and report
+Def.-4 pipelined throughput.
+
+This is a thin wrapper over ``repro.launch.serve`` (the real driver):
+
+  PYTHONPATH=src python examples/serve_partitioned.py
+"""
+
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "smollm-360m", "--requests", "8",
+                "--prompt-len", "32", "--max-new", "16",
+                "--warm-steps", "40"]
+    raise SystemExit(main())

@@ -1,0 +1,70 @@
+"""Checkpointing: flat .npz pytree save/restore (orbax is unavailable).
+
+Pytrees are flattened with '/'-joined key paths; dtypes/shapes round-trip
+exactly.  Works for params, optimizer state, and RNG-free model state.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_key_str(k) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return f"#{k.idx}"
+    return str(k)
+
+
+def save(path: str, tree, step: Optional[int] = None) -> str:
+    """Save pytree; returns the file written."""
+    os.makedirs(path, exist_ok=True)
+    fname = os.path.join(path, f"ckpt_{step or 0:08d}.npz")
+    flat = _flatten(tree)
+    np.savez(fname, **flat)
+    return fname
+
+
+def restore(path: str, like, step: Optional[int] = None):
+    """Restore into the structure of ``like`` (a template pytree)."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    fname = os.path.join(path, f"ckpt_{step:08d}.npz")
+    data = np.load(fname)
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for pth, leaf in leaves_p:
+        key = "/".join(_key_str(k) for k in pth)
+        arr = data[key]
+        out.append(jnp.asarray(arr, dtype=leaf.dtype if hasattr(leaf, "dtype")
+                               else None))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = []
+    for f in os.listdir(path):
+        m = re.match(r"ckpt_(\d+)\.npz$", f)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None

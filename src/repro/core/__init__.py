@@ -1,0 +1,13 @@
+"""Core library: the paper's contribution — automated, hardware-aware DNN
+inference partitioning for distributed systems."""
+
+from repro.core.accuracy import MeasuredAccuracy, ProxyAccuracy
+from repro.core.explorer import ExplorationResult, Explorer
+from repro.core.graph import LayerGraph, linearize
+from repro.core.layers import LayerInfo
+from repro.core.link import LinkModel, get_link
+from repro.core.memory import MemoryModel, segment_memory, split_memory
+from repro.core.partition import (Constraints, PartitionEval,
+                                  PartitionEvaluator, Platform, SystemConfig,
+                                  single_platform_eval)
+from repro.core.quant import QuantSpec

@@ -1,0 +1,66 @@
+"""Accuracy oracles for the exploration (§IV-C).
+
+Two implementations of the ``accuracy_fn(cuts) -> float`` protocol:
+
+* :class:`ProxyAccuracy` — analytic noise model, used when no trained model
+  is attached (fast path, and the only option during early filtering).
+  Quantizing a layer to ``b`` bits injects noise ~ 2^-b weighted by a
+  per-layer sensitivity (default: parameter count share — heavier layers
+  hurt more).  This reproduces the paper's qualitative finding that later
+  cuts (more layers on the 16-bit platform) give higher top-1.
+
+* :class:`MeasuredAccuracy` — runs real fake-quant inference of a JAX model
+  on a validation set for each platform assignment, optionally after QAT
+  (see ``repro.quantize``).  Results are cached per cut vector.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+from repro.core.layers import LayerInfo
+from repro.core.partition import SystemConfig
+
+
+@dataclasses.dataclass
+class ProxyAccuracy:
+    schedule: Sequence[LayerInfo]
+    system: SystemConfig
+    base_accuracy: float = 1.0
+    noise_scale: float = 4.0      # accuracy points lost per unit noise
+
+    def __post_init__(self):
+        total = sum(max(l.params, 1) for l in self.schedule) or 1
+        self._weight = [max(l.params, 1) / total for l in self.schedule]
+
+    @staticmethod
+    def _noise(bits: int) -> float:
+        return 2.0 ** (-bits + 4)   # 8b -> 1/16, 16b -> ~6e-5
+
+    def __call__(self, cuts: Sequence[int]) -> float:
+        bounds = [-1] + [max(int(c), -1) for c in cuts] + [len(self.schedule) - 1]
+        loss = 0.0
+        for k, plat in enumerate(self.system.platforms):
+            n = self._noise(plat.quant.bits)
+            for i in range(bounds[k] + 1, bounds[k + 1] + 1):
+                loss += self._weight[i] * n
+        return max(0.0, self.base_accuracy - self.noise_scale * loss)
+
+
+@dataclasses.dataclass
+class MeasuredAccuracy:
+    """Wraps an expensive measured evaluation with caching.
+
+    ``measure(cuts)`` should run calibrated fake-quant inference (and QAT if
+    enabled) for the platform assignment implied by ``cuts`` and return
+    top-1 accuracy in [0, 1].
+    """
+    measure: Callable[[Tuple[int, ...]], float]
+    _cache: Dict[Tuple[int, ...], float] = dataclasses.field(default_factory=dict)
+
+    def __call__(self, cuts: Sequence[int]) -> float:
+        key = tuple(int(c) for c in cuts)
+        if key not in self._cache:
+            self._cache[key] = float(self.measure(key))
+        return self._cache[key]

@@ -1,0 +1,4 @@
+from repro.core.hwmodel.arch import (AcceleratorArch, EYERISS_LIKE,
+                                     SIMBA_LIKE, TPU_V5E, get_arch)
+from repro.core.hwmodel.energy import EnergyTable
+from repro.core.hwmodel.mapper import LayerCost, evaluate_layer, evaluate_segment

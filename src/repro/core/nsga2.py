@@ -1,0 +1,212 @@
+"""NSGA-II for the partition-point search (§IV, [14] pymoo replacement).
+
+Decision variables are integer vectors (sorted cut positions). Implements:
+fast non-dominated sorting, crowding distance, constrained-domination binary
+tournament, uniform + blend integer crossover, reset mutation, elitism.
+
+All objectives are minimized.  Constraints are "violation amounts":
+``g_i(x) <= 0`` feasible; total violation = Σ max(0, g_i).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+# -- non-dominated sorting ----------------------------------------------------
+
+def dominates(f: np.ndarray, g: np.ndarray) -> bool:
+    """True iff f Pareto-dominates g (minimization)."""
+    return bool(np.all(f <= g) and np.any(f < g))
+
+
+def constrained_dominates(f: np.ndarray, cv_f: float,
+                          g: np.ndarray, cv_g: float) -> bool:
+    """Deb's constraint-domination."""
+    if cv_f <= 0 < cv_g:
+        return True
+    if cv_g <= 0 < cv_f:
+        return False
+    if cv_f > 0 and cv_g > 0:
+        return cv_f < cv_g
+    return dominates(f, g)
+
+
+def fast_non_dominated_sort(F: np.ndarray,
+                            CV: Optional[np.ndarray] = None) -> List[np.ndarray]:
+    """Return fronts (lists of indices), best front first."""
+    n = len(F)
+    if CV is None:
+        CV = np.zeros(n)
+    S: List[List[int]] = [[] for _ in range(n)]
+    n_dom = np.zeros(n, dtype=int)
+    fronts: List[List[int]] = [[]]
+    for p in range(n):
+        for q in range(n):
+            if p == q:
+                continue
+            if constrained_dominates(F[p], CV[p], F[q], CV[q]):
+                S[p].append(q)
+            elif constrained_dominates(F[q], CV[q], F[p], CV[p]):
+                n_dom[p] += 1
+        if n_dom[p] == 0:
+            fronts[0].append(p)
+    i = 0
+    while fronts[i]:
+        nxt: List[int] = []
+        for p in fronts[i]:
+            for q in S[p]:
+                n_dom[q] -= 1
+                if n_dom[q] == 0:
+                    nxt.append(q)
+        i += 1
+        fronts.append(nxt)
+    return [np.asarray(f, dtype=int) for f in fronts if len(f)]
+
+
+def crowding_distance(F: np.ndarray) -> np.ndarray:
+    """Crowding distance of points in one front."""
+    n, m = F.shape
+    if n <= 2:
+        return np.full(n, np.inf)
+    d = np.zeros(n)
+    for j in range(m):
+        idx = np.argsort(F[:, j], kind="stable")
+        fmin, fmax = F[idx[0], j], F[idx[-1], j]
+        d[idx[0]] = d[idx[-1]] = np.inf
+        if fmax - fmin <= 0:
+            continue
+        d[idx[1:-1]] += (F[idx[2:], j] - F[idx[:-2], j]) / (fmax - fmin)
+    return d
+
+
+# -- GA machinery -------------------------------------------------------------
+
+@dataclasses.dataclass
+class NSGA2Result:
+    X: np.ndarray            # population decision vectors
+    F: np.ndarray            # objectives
+    CV: np.ndarray           # constraint violations
+    pareto_idx: np.ndarray   # indices of the final first front (feasible)
+    history: List[dict]
+
+    @property
+    def pareto_X(self) -> np.ndarray:
+        return self.X[self.pareto_idx]
+
+    @property
+    def pareto_F(self) -> np.ndarray:
+        return self.F[self.pareto_idx]
+
+
+def _tournament(rng, F, CV, crowd) -> int:
+    a, b = rng.integers(0, len(F), size=2)
+    if constrained_dominates(F[a], CV[a], F[b], CV[b]):
+        return int(a)
+    if constrained_dominates(F[b], CV[b], F[a], CV[a]):
+        return int(b)
+    return int(a if crowd[a] >= crowd[b] else b)
+
+
+def _repair(x: np.ndarray, lo: int, hi: int) -> np.ndarray:
+    """Clip to bounds, sort, and de-duplicate cut vectors (strictly
+    increasing positions)."""
+    x = np.clip(np.sort(x), lo, hi)
+    for i in range(1, len(x)):
+        if x[i] <= x[i - 1]:
+            x[i] = min(hi, x[i - 1] + 1)
+    for i in range(len(x) - 2, -1, -1):  # if saturated at hi, push left
+        if x[i] >= x[i + 1]:
+            x[i] = max(lo, x[i + 1] - 1)
+    return x
+
+
+def nsga2(evaluate: Callable[[np.ndarray], Tuple[np.ndarray, np.ndarray]],
+          n_var: int, lower: int, upper: int,
+          pop_size: Optional[int] = None, n_gen: Optional[int] = None,
+          seed: int = 0, candidates: Optional[Sequence[Sequence[int]]] = None,
+          ) -> NSGA2Result:
+    """Run NSGA-II over integer cut vectors in [lower, upper]^n_var.
+
+    evaluate(X) -> (F, CV): objectives matrix (pop, n_obj) and violation
+    vector (pop,). ``candidates`` optionally seeds the population (e.g. the
+    feasible-filtered cut list from the explorer).
+
+    The paper sizes population/generations by layer count; we mirror that:
+    pop = clip(4·L_range^0.5, 16, 96) rounded to 4, gens = clip(L/2, 10, 60).
+    """
+    rng = np.random.default_rng(seed)
+    span = upper - lower + 1
+    if pop_size is None:
+        pop_size = int(np.clip(4 * np.sqrt(span * n_var), 16, 96)) // 4 * 4
+    if n_gen is None:
+        n_gen = int(np.clip(span // 2, 10, 60))
+
+    # init population
+    X = rng.integers(lower, upper + 1, size=(pop_size, n_var))
+    if candidates is not None and len(candidates):
+        cand = np.asarray(list(candidates), dtype=int)
+        k = min(len(cand), pop_size // 2)
+        X[:k] = cand[rng.permutation(len(cand))[:k]]
+    X = np.stack([_repair(x, lower, upper) for x in X])
+    F, CV = evaluate(X)
+    history: List[dict] = []
+
+    for gen in range(n_gen):
+        fronts = fast_non_dominated_sort(F, CV)
+        crowd = np.zeros(len(F))
+        for fr in fronts:
+            crowd[fr] = crowding_distance(F[fr])
+        # offspring
+        children = []
+        while len(children) < pop_size:
+            p1 = X[_tournament(rng, F, CV, crowd)]
+            p2 = X[_tournament(rng, F, CV, crowd)]
+            mask = rng.random(n_var) < 0.5
+            c1 = np.where(mask, p1, p2).copy()
+            c2 = np.where(mask, p2, p1).copy()
+            for c in (c1, c2):
+                # blend step: move a coordinate toward the midpoint sometimes
+                if rng.random() < 0.3 and n_var > 0:
+                    j = rng.integers(n_var)
+                    c[j] = (int(p1[j]) + int(p2[j])) // 2
+                # mutation: random reset or +-local step
+                for j in range(n_var):
+                    r = rng.random()
+                    if r < 0.5 / max(n_var, 1):
+                        c[j] = rng.integers(lower, upper + 1)
+                    elif r < 2.0 / max(n_var, 1):
+                        c[j] += rng.integers(-3, 4)
+                children.append(_repair(c, lower, upper))
+        Xc = np.stack(children[:pop_size])
+        Fc, CVc = evaluate(Xc)
+        # elitist environmental selection
+        Xall = np.concatenate([X, Xc]); Fall = np.concatenate([F, Fc])
+        CVall = np.concatenate([CV, CVc])
+        fronts = fast_non_dominated_sort(Fall, CVall)
+        keep: List[int] = []
+        for fr in fronts:
+            if len(keep) + len(fr) <= pop_size:
+                keep.extend(fr.tolist())
+            else:
+                cd = crowding_distance(Fall[fr])
+                order = np.argsort(-cd, kind="stable")
+                keep.extend(fr[order[: pop_size - len(keep)]].tolist())
+                break
+        keep_arr = np.asarray(keep)
+        X, F, CV = Xall[keep_arr], Fall[keep_arr], CVall[keep_arr]
+        history.append({"gen": gen,
+                        "best": F.min(axis=0).tolist(),
+                        "feasible": int((CV <= 0).sum())})
+
+    fronts = fast_non_dominated_sort(F, CV)
+    first = fronts[0]
+    feas = first[CV[first] <= 0]
+    pareto = feas if len(feas) else first
+    # unique decision vectors on the front
+    _, uniq = np.unique(X[pareto], axis=0, return_index=True)
+    return NSGA2Result(X=X, F=F, CV=CV, pareto_idx=pareto[np.sort(uniq)],
+                       history=history)

@@ -1,0 +1,226 @@
+"""Partition evaluation — Definitions 1–4 over a concrete system.
+
+A *system* is a chain of platforms connected by links (the paper's §V-C
+four-platform chain generalizes the two-platform case).  Given a linear
+schedule and a sorted cut vector, this module produces every optimization
+metric of Table I's last row: latency, bandwidth, energy, memory, accuracy
+and throughput.
+
+Cut encoding: platform ``k`` executes ``schedule[cuts[k-1]+1 .. cuts[k]]``
+(with ``cuts[-1] := -1`` and ``cuts[n] := L-1`` implied).  A cut may be
+``-1`` (empty leading segment) or repeat the previous value (platform
+skipped); that is how the explorer discovers that *fewer* partitions can be
+optimal (Table II).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.graph import LayerGraph
+from repro.core.hwmodel.arch import AcceleratorArch
+from repro.core.hwmodel.mapper import LayerCost, layer_cost_table
+from repro.core.layers import LayerInfo
+from repro.core.link import LinkModel
+from repro.core.memory import MemoryModel, segment_memory
+from repro.core.quant import QuantSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Platform:
+    """One compute node in the chain."""
+    name: str
+    arch: AcceleratorArch
+    quant: QuantSpec
+    mem_capacity: Optional[int] = None   # defaults to arch.mem_bytes
+
+    @property
+    def capacity(self) -> int:
+        return self.mem_capacity if self.mem_capacity is not None else self.arch.mem_bytes
+
+    @property
+    def memory_model(self) -> MemoryModel:
+        return MemoryModel(bytes_per_param=self.quant.bits / 8.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemConfig:
+    """A chain: platforms[i] --links[i]--> platforms[i+1]."""
+    platforms: Sequence[Platform]
+    links: Sequence[LinkModel]
+
+    def __post_init__(self):
+        assert len(self.links) == len(self.platforms) - 1
+
+    @property
+    def n_cuts(self) -> int:
+        return len(self.platforms) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Constraints:
+    max_link_bytes: Optional[int] = None       # per-cut bandwidth budget
+    min_accuracy: Optional[float] = None
+    max_latency_s: Optional[float] = None
+    max_energy_j: Optional[float] = None
+    min_throughput: Optional[float] = None
+
+
+@dataclasses.dataclass
+class PartitionEval:
+    cuts: Tuple[int, ...]
+    latency_s: float
+    energy_j: float
+    throughput: float              # inferences / s (Def. 4)
+    link_bytes: int                # max bytes over any active link
+    memory_bytes: Tuple[int, ...]  # per platform (Def. 3)
+    accuracy: float
+    stage_latency_s: Tuple[float, ...]
+    link_latency_s: Tuple[float, ...]
+    violation: float = 0.0
+
+    @property
+    def n_partitions(self) -> int:
+        """Number of platforms that execute at least one layer."""
+        return sum(1 for t in self.stage_latency_s if t > 0)
+
+    def as_objectives(self, keys: Sequence[str]) -> List[float]:
+        table = {
+            "latency": self.latency_s,
+            "energy": self.energy_j,
+            "throughput": -self.throughput,       # maximize
+            "bandwidth": float(self.link_bytes),
+            "memory": float(max(self.memory_bytes)),
+            "accuracy": -self.accuracy,           # maximize
+        }
+        return [table[k] for k in keys]
+
+
+class PartitionEvaluator:
+    """Evaluates cut vectors against a system; caches per-arch cost tables."""
+
+    def __init__(self, graph: LayerGraph, schedule: Sequence[LayerInfo],
+                 system: SystemConfig,
+                 accuracy_fn: Optional[Callable[[Sequence[int]], float]] = None,
+                 batch: int = 1,
+                 shared_groups: Optional[Dict[str, str]] = None):
+        self.graph = graph
+        self.schedule = list(schedule)
+        self.system = system
+        self.batch = batch
+        self.accuracy_fn = accuracy_fn or (lambda cuts: 1.0)
+        self.shared_groups = shared_groups
+        self._tables: Dict[str, List[LayerCost]] = {}
+        self._prefix: Dict[str, np.ndarray] = {}
+        self._cut_bytes_cache: Dict[Tuple[int, float], int] = {}
+        for plat in system.platforms:
+            key = plat.arch.name
+            if key not in self._tables:
+                tab = layer_cost_table(self.schedule, plat.arch, batch)
+                self._tables[key] = tab
+                lat = np.array([c.latency_s for c in tab])
+                en = np.array([c.energy_j for c in tab])
+                self._prefix[key] = np.stack([
+                    np.concatenate([[0.0], np.cumsum(lat)]),
+                    np.concatenate([[0.0], np.cumsum(en)])])
+
+    # -- O(1) segment cost via prefix sums -----------------------------------
+    def _segment_cost(self, arch_name: str, a: int, b: int) -> Tuple[float, float]:
+        """Latency/energy of schedule[a..b] inclusive; zero when a > b."""
+        if a > b:
+            return 0.0, 0.0
+        pre = self._prefix[arch_name]
+        return float(pre[0, b + 1] - pre[0, a]), float(pre[1, b + 1] - pre[1, a])
+
+    def _cut_bytes(self, p: int, bpe: float) -> int:
+        key = (p, bpe)
+        if key not in self._cut_bytes_cache:
+            self._cut_bytes_cache[key] = self.graph.cut_bytes(
+                self.schedule, p, bpe)
+        return self._cut_bytes_cache[key]
+
+    def evaluate(self, cuts: Sequence[int],
+                 constraints: Optional[Constraints] = None) -> PartitionEval:
+        L = len(self.schedule)
+        cuts = tuple(max(int(c), -1) for c in cuts)
+        assert list(cuts) == sorted(cuts), f"cuts must be sorted: {cuts}"
+        assert len(cuts) == self.system.n_cuts
+        bounds = [-1] + list(cuts) + [L - 1]
+        plats = self.system.platforms
+
+        stage_lat: List[float] = []
+        energy = 0.0
+        for k, plat in enumerate(plats):
+            a, b = bounds[k] + 1, bounds[k + 1]
+            lat, en = self._segment_cost(plat.arch.name, a, b)
+            stage_lat.append(lat)
+            energy += en
+
+        link_lat: List[float] = []
+        link_bytes_all: List[int] = []
+        for k, link in enumerate(self.system.links):
+            p = cuts[k]
+            sent = bounds[k + 1] > bounds[k]       # producer side ran something
+            remaining = bounds[-1] > bounds[k + 1]  # anything left downstream
+            if p < 0 or p >= L - 1 or not (sent and remaining):
+                link_lat.append(0.0)
+                link_bytes_all.append(0)
+                continue
+            nbytes = self._cut_bytes(p, plats[k].quant.bits / 8.0) * self.batch
+            link_lat.append(link.latency_s(nbytes))
+            energy += link.energy_j(nbytes)
+            link_bytes_all.append(nbytes)
+
+        latency = sum(stage_lat) + sum(link_lat)
+        # Def. 4: asynchronous pipeline — slowest active module bounds rate
+        active = [t for t in stage_lat if t > 0] + [t for t in link_lat if t > 0]
+        throughput = 1.0 / max(active) if active else 0.0
+
+        mems = []
+        for k, plat in enumerate(plats):
+            seg = self.schedule[bounds[k] + 1: bounds[k + 1] + 1]
+            mems.append(segment_memory(seg, plat.memory_model,
+                                       self.shared_groups, self.batch))
+        acc = float(self.accuracy_fn(cuts))
+        ev = PartitionEval(cuts=cuts, latency_s=latency, energy_j=energy,
+                           throughput=throughput,
+                           link_bytes=max(link_bytes_all) if link_bytes_all else 0,
+                           memory_bytes=tuple(mems), accuracy=acc,
+                           stage_latency_s=tuple(stage_lat),
+                           link_latency_s=tuple(link_lat))
+        ev.violation = self._violation(ev, constraints)
+        return ev
+
+    def _violation(self, ev: PartitionEval,
+                   cons: Optional[Constraints]) -> float:
+        v = 0.0
+        for k, plat in enumerate(self.system.platforms):
+            cap = plat.capacity
+            if ev.memory_bytes[k] > cap:
+                v += (ev.memory_bytes[k] - cap) / cap
+        if cons is None:
+            return v
+        if cons.max_link_bytes and ev.link_bytes > cons.max_link_bytes:
+            v += (ev.link_bytes - cons.max_link_bytes) / cons.max_link_bytes
+        if cons.min_accuracy and ev.accuracy < cons.min_accuracy:
+            v += cons.min_accuracy - ev.accuracy
+        if cons.max_latency_s and ev.latency_s > cons.max_latency_s:
+            v += (ev.latency_s - cons.max_latency_s) / cons.max_latency_s
+        if cons.max_energy_j and ev.energy_j > cons.max_energy_j:
+            v += (ev.energy_j - cons.max_energy_j) / cons.max_energy_j
+        if cons.min_throughput and ev.throughput < cons.min_throughput:
+            v += (cons.min_throughput - ev.throughput) / cons.min_throughput
+        return v
+
+
+def single_platform_eval(evaluator: PartitionEvaluator, platform_idx: int,
+                         constraints: Optional[Constraints] = None
+                         ) -> PartitionEval:
+    """Run the whole DNN on one platform (the paper's square markers)."""
+    L = len(evaluator.schedule)
+    n = evaluator.system.n_cuts
+    cuts = [(-1 if k < platform_idx else L - 1) for k in range(n)]
+    return evaluator.evaluate(cuts, constraints)

@@ -1,0 +1,129 @@
+"""Quantization machinery — §IV-C accuracy exploration.
+
+Implements calibration (range estimation over feature maps and weights),
+fake quantization (quantize→dequantize in float, so accuracy can be measured
+quickly, exactly as the paper does) and the straight-through estimator used
+by Quantization-Aware Training.
+
+Everything is pure JAX; model integration lives in ``repro.quantize``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Uniform symmetric/affine quantizer description for one platform."""
+
+    bits: int = 8
+    symmetric: bool = True
+    per_channel: bool = False     # weights: quantize per output channel
+    channel_axis: int = 0
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.bits - 1)) if self.symmetric else 0
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1 if self.symmetric else 2 ** self.bits - 1
+
+
+def compute_scale_zp(lo: jnp.ndarray, hi: jnp.ndarray,
+                     spec: QuantSpec) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scale and zero-point from calibrated ranges."""
+    if spec.symmetric:
+        amax = jnp.maximum(jnp.abs(lo), jnp.abs(hi))
+        scale = jnp.maximum(amax / spec.qmax, 1e-12)
+        zp = jnp.zeros_like(scale)
+    else:
+        lo = jnp.minimum(lo, 0.0)
+        hi = jnp.maximum(hi, 0.0)
+        scale = jnp.maximum((hi - lo) / (spec.qmax - spec.qmin), 1e-12)
+        zp = jnp.round(spec.qmin - lo / scale)
+    return scale, zp
+
+
+def fake_quant(x: jnp.ndarray, scale: jnp.ndarray, zp: jnp.ndarray,
+               spec: QuantSpec) -> jnp.ndarray:
+    """Quantize→dequantize with straight-through gradients (QAT-ready)."""
+    q = jnp.clip(jnp.round(x / scale + zp), spec.qmin, spec.qmax)
+    dq = (q - zp) * scale
+    # STE: identity gradient inside the representable range
+    return x + jax.lax.stop_gradient(dq - x)
+
+
+def calibrate(x: jnp.ndarray, spec: QuantSpec,
+              percentile: Optional[float] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Range estimation. ``percentile`` (e.g. 99.9) clips outliers —
+    minmax when None (the paper's parameter calibration step)."""
+    if spec.per_channel:
+        axes = tuple(i for i in range(x.ndim) if i != spec.channel_axis)
+        if percentile is None:
+            lo, hi = x.min(axis=axes), x.max(axis=axes)
+        else:
+            flat = jnp.moveaxis(x, spec.channel_axis, 0).reshape(x.shape[spec.channel_axis], -1)
+            lo = jnp.percentile(flat, 100 - percentile, axis=1)
+            hi = jnp.percentile(flat, percentile, axis=1)
+        shape = [1] * x.ndim
+        shape[spec.channel_axis] = -1
+        return lo.reshape(shape), hi.reshape(shape)
+    if percentile is None:
+        return x.min(), x.max()
+    return jnp.percentile(x, 100 - percentile), jnp.percentile(x, percentile)
+
+
+def quantize_tensor(x: jnp.ndarray, spec: QuantSpec,
+                    percentile: Optional[float] = None) -> jnp.ndarray:
+    """One-shot calibrate + fake-quant (used for weights)."""
+    lo, hi = calibrate(x, spec, percentile)
+    scale, zp = compute_scale_zp(lo, hi, spec)
+    return fake_quant(x, scale, zp, spec)
+
+
+class ActObserver:
+    """Running min/max observer for activation calibration passes."""
+
+    def __init__(self, spec: QuantSpec):
+        self.spec = spec
+        self.lo: Optional[jnp.ndarray] = None
+        self.hi: Optional[jnp.ndarray] = None
+
+    def update(self, x: jnp.ndarray) -> None:
+        lo, hi = calibrate(x, self.spec)
+        self.lo = lo if self.lo is None else jnp.minimum(self.lo, lo)
+        self.hi = hi if self.hi is None else jnp.maximum(self.hi, hi)
+
+    def quantizer(self):
+        assert self.lo is not None, "observer never saw data"
+        scale, zp = compute_scale_zp(self.lo, self.hi, self.spec)
+        spec = self.spec
+        return lambda x: fake_quant(x, scale, zp, spec)
+
+
+def quantize_pytree(params, spec: QuantSpec, percentile: Optional[float] = None):
+    """Fake-quantize every float leaf of a parameter pytree (weights path).
+
+    1-D leaves (biases, norms) are left in float — standard practice and what
+    integer accelerators do (bias is accumulated at full precision).
+    """
+    def q(leaf):
+        if not isinstance(leaf, jnp.ndarray) or leaf.ndim <= 1 \
+           or not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        s = spec
+        if spec.per_channel and leaf.ndim >= 2:
+            s = dataclasses.replace(spec, channel_axis=leaf.ndim - 1)
+        return quantize_tensor(leaf, s, percentile)
+    return jax.tree_util.tree_map(q, params)
+
+
+def quantization_error(x: jnp.ndarray, spec: QuantSpec) -> float:
+    """RMS fake-quant error, used by tests and the accuracy proxy."""
+    return float(jnp.sqrt(jnp.mean((quantize_tensor(x, spec) - x) ** 2)))

@@ -1,0 +1,2 @@
+from repro.data.synthetic import (SyntheticImages, SyntheticTokens,
+                                  batch_iterator, make_batch_for)

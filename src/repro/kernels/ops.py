@@ -1,0 +1,62 @@
+"""Jit'd kernel wrappers with implementation dispatch.
+
+``impl`` resolution: 'pallas' uses the Pallas kernel (interpret=True on CPU
+— a correctness harness; compiled Mosaic on real TPU), 'ref' uses the
+pure-jnp oracle, 'auto' picks ref on CPU backends and pallas on TPU.
+Dry-run lowering always uses 'ref' (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def resolve_impl(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+def quant_matmul(x, w_q, w_scale, x_scale, impl: str = "pallas"):
+    if resolve_impl(impl) == "ref":
+        return _ref.quant_matmul(x, w_q, w_scale, x_scale)
+    from repro.kernels.quant_matmul import quant_matmul as k
+    m, kk = x.shape
+    n = w_q.shape[1]
+    if m % 128 or n % 128 or kk % 128:   # fall back off-grid shapes
+        return _ref.quant_matmul(x, w_q, w_scale, x_scale)
+    return k(x, w_q, w_scale, x_scale, interpret=_interpret())
+
+
+def ssd_scan(x, dt, A, B, C, chunk: int = 128, impl: str = "pallas"
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if resolve_impl(impl) == "ref":
+        return _ref.ssd_scan(x, dt, A, B, C, chunk)
+    from repro.kernels.ssd_scan import ssd_scan as k
+    return k(x, dt, A, B, C, chunk=chunk, interpret=_interpret())
+
+
+def window_attn(q, k, v, window: int, impl: str = "pallas"):
+    if resolve_impl(impl) == "ref":
+        group = q.shape[2] // k.shape[2]
+        k_e = jnp.repeat(k, group, axis=2)
+        v_e = jnp.repeat(v, group, axis=2)
+        return _ref.window_attn(q, k_e, v_e, window)
+    from repro.kernels.window_attn import window_attn as kern
+    t = q.shape[1]
+    bq = bk = 128 if t % 128 == 0 and window % 128 == 0 else None
+    if bq is None:
+        group = q.shape[2] // k.shape[2]
+        return _ref.window_attn(q, jnp.repeat(k, group, axis=2),
+                                jnp.repeat(v, group, axis=2), window)
+    return kern(q, k, v, window=window, bq=bq, bk=bk,
+                interpret=_interpret())

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# -- quant_matmul -------------------------------------------------------------
+
+def quant_matmul(x: jnp.ndarray, w_q: jnp.ndarray, w_scale: jnp.ndarray,
+                 x_scale: jnp.ndarray) -> jnp.ndarray:
+    """Fake-quant matmul: y = q(x) @ (w_q * w_scale).
+
+    x: (M, K) float; w_q: (K, N) int8; w_scale: (N,); x_scale: scalar.
+    x is quantized symmetric-8bit on the fly with the given scale.
+    """
+    xq = jnp.clip(jnp.round(x / x_scale), -128, 127)
+    acc = (xq.astype(jnp.float32) @ w_q.astype(jnp.float32))
+    return acc * x_scale * w_scale[None, :]
+
+
+# -- ssd_scan ------------------------------------------------------------------
+
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             B: jnp.ndarray, C: jnp.ndarray, chunk: int,
+             init_state: Optional[jnp.ndarray] = None
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD without the D skip term (the op adds it outside).
+
+    Shapes as in repro.nn.ssm.ssd_chunked.  Returns (y, final_state)."""
+    from repro.nn.ssm import ssd_chunked
+    return ssd_chunked(x, dt, A, B, C, chunk, D=None, init_state=init_state)
+
+
+# -- window_attn ----------------------------------------------------------------
+
+def window_attn(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                window: int) -> jnp.ndarray:
+    """Sliding-window causal attention.
+
+    q, k, v: (B, T, H, hd) (same head count — GQA expansion happens in the
+    caller).  Position i attends to j in (i-window, i].  Returns (B,T,H,hd).
+    """
+    b, t, h, hd = q.shape
+    pos = jnp.arange(t)
+    mask = (pos[None, :] <= pos[:, None]) & (pos[None, :] > pos[:, None] - window)
+    scores = jnp.einsum("bihd,bjhd->bhij", q, k) / jnp.sqrt(hd)
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhij,bjhd->bihd", p, v)

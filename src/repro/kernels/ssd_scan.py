@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan.
+
+TPU adaptation of the SSD algorithm (DESIGN.md §6): the intra-chunk term is
+a (C×C)·(C×P) matmul chain (MXU work — this is exactly the "duality" the
+paper exploits), the inter-chunk recurrence is carried in a VMEM scratch
+state that persists across the sequential chunk axis of the grid.
+
+Grid: (B, H, NC) — NC (chunks) is the innermost, sequential dimension, so
+the (P, N) state scratch is a true running carry per (batch, head).
+Block shapes: x (1, C, 1, P), B/C (1, C, N), state scratch (P, N) f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # pltpu scratch shapes; interpret mode emulates them on CPU
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _VMEM = None
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, state):
+    nc = pl.program_id(2)
+    n_chunks = pl.num_programs(2)
+
+    @pl.when(nc == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    x = x_ref[0, :, 0, :]                       # (C, P)
+    dt = dt_ref[0, :, 0]                        # (C,)
+    a = a_ref[0]                                # scalar (negative)
+    bm = b_ref[0]                               # (C, N)
+    cm = c_ref[0]                               # (C, N)
+
+    chunk = x.shape[0]
+    dA = dt * a                                 # (C,) log-decay
+    cs = jnp.cumsum(dA)                         # inclusive cumsum
+
+    # intra-chunk: (C B^T ⊙ L) (dt x)
+    seg = cs[:, None] - cs[None, :]
+    mask = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+    L = jnp.where(mask, jnp.exp(seg), 0.0)
+    cb = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)
+    xdt = x * dt[:, None]                       # (C, P)
+    y_intra = jnp.dot(cb * L, xdt, preferred_element_type=jnp.float32)
+
+    # inter-chunk: carried state contribution
+    y_inter = jnp.dot(cm, state[...].T,
+                      preferred_element_type=jnp.float32) * jnp.exp(cs)[:, None]
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: H <- exp(Σ dA) H + Σ_i decay_i B_i (dt x)_i
+    decay_to_end = jnp.exp(cs[-1] - cs)         # (C,)
+    s_new = jnp.dot(xdt.T, bm * decay_to_end[:, None],
+                    preferred_element_type=jnp.float32)   # (P, N)
+    state[...] = jnp.exp(cs[-1]) * state[...] + s_new
+
+    @pl.when(nc == n_chunks - 1)
+    def _emit_state():
+        st_ref[0, 0] = state[...].astype(st_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             B: jnp.ndarray, C: jnp.ndarray, *, chunk: int = 128,
+             interpret: bool = True):
+    """x: (b,T,h,p); dt: (b,T,h); A: (h,); B,C: (b,T,n).
+
+    Returns (y (b,T,h,p), final_state (b,h,p,n)).  D-skip is applied by the
+    caller (ops.ssd_scan)."""
+    b, t, h, p = x.shape
+    n = B.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    ncs = t // chunk
+    grid = (b, h, ncs)
+    scratch = [] if _VMEM is None else [_VMEM((p, n), jnp.float32)]
+    y, st = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return y, st

@@ -1,0 +1,69 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""§Perf diagnostic: lower one (arch × shape), print the roofline terms and
+the top collectives with their JAX op provenance.
+
+  PYTHONPATH=src python -m repro.launch.diagnose --arch qwen2-72b --shape train_4k
+"""
+
+import argparse
+
+import jax
+
+from repro.configs.base import INPUT_SHAPES
+from repro.launch import rules as R
+from repro.launch.hlo_analysis import analyze_text, top_collectives
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze
+from repro.launch.steps import build_setup
+from repro.models.registry import ARCH_IDS, get_config
+from repro.nn import sharding as shd
+
+
+def diagnose(arch: str, shape_name: str, multi_pod: bool = False, k: int = 15,
+             opts: tuple = (), grad_accum: int = 1):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = R.activation_rules(
+        shape.kind, multi_pod,
+        batch_divisible=shape.global_batch % (
+            mesh.shape.get("pod", 1) * mesh.shape["data"]) == 0,
+        opts=tuple(opts))
+    shd.set_mesh(mesh, rules)
+    try:
+        with mesh:
+            setup = build_setup(shape.kind, cfg, shape, mesh, multi_pod,
+                                grad_accum=grad_accum)
+            jitted = jax.jit(setup.step_fn, in_shardings=setup.in_shardings,
+                             out_shardings=setup.out_shardings)
+            compiled = jitted.lower(*setup.arg_shapes).compile()
+        text = compiled.as_text()
+        roof = analyze(compiled, setup.cfg, shape, mesh.devices.size)
+        print(f"== {arch} × {shape_name}: compute={roof.compute_s:.3f}s "
+              f"memory={roof.memory_s:.3f}s coll={roof.collective_s:.3f}s "
+              f"({roof.dominant}-bound) useful={roof.useful_flops_ratio:.2f}")
+        print(f"   breakdown: { {k2: f'{v/2**30:.1f}GiB' for k2, v in roof.coll_breakdown.items() if v} }")
+        print(f"   temp/dev: {compiled.memory_analysis().temp_size_in_bytes/2**30:.1f} GiB")
+        print("   top collectives (bytes x trips | kind | op):")
+        for nbytes, kind, op, comp in top_collectives(text, k):
+            print(f"     {nbytes/2**30:8.2f} GiB  {kind:20s} {op[:95]}")
+        return compiled, roof
+    finally:
+        shd.set_mesh(None)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES), required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--opt", action="append", default=[],
+                    choices=["attn_heads", "mla_latent", "fsdp", "remat_dots", "expert_ep", "softmax_low"])
+    ap.add_argument("--accum", type=int, default=1)
+    args = ap.parse_args()
+    diagnose(args.arch, args.shape, args.multi_pod, args.top,
+             opts=tuple(args.opt), grad_accum=args.accum)

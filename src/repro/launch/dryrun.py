@@ -1,0 +1,135 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production mesh, print memory/cost analysis, and emit roofline rows.
+
+MUST be run as a module (``python -m repro.launch.dryrun``) so the XLA flag
+above is set before jax initializes its backends.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  python -m repro.launch.dryrun --all                  # 10 × 4 single-pod
+  python -m repro.launch.dryrun --all --multi-pod      # 2-pod (512 chips)
+  python -m repro.launch.dryrun --arch ... --shape ... --out results.json
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import INPUT_SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze
+from repro.launch.steps import build_setup
+from repro.models.registry import ARCH_IDS, get_config, supports_shape
+from repro.nn import sharding as shd
+from repro.launch import rules as R
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool = False,
+               verbose: bool = True, opts: tuple = (),
+               grad_accum: int = 1) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if not supports_shape(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "full-attention arch without sub-quadratic variant"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    kind = shape.kind
+    t0 = time.time()
+    rules = R.activation_rules(
+        kind, multi_pod,
+        batch_divisible=shape.global_batch % (
+            mesh.shape.get("pod", 1) * mesh.shape["data"]) == 0,
+        opts=tuple(opts))
+    shd.set_mesh(mesh, rules)
+    try:
+        with mesh:
+            setup = build_setup(kind, cfg, shape, mesh, multi_pod,
+                                grad_accum=grad_accum)
+            jitted = jax.jit(setup.step_fn,
+                             in_shardings=setup.in_shardings,
+                             out_shardings=setup.out_shardings)
+            lowered = jitted.lower(*setup.arg_shapes)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            ma = compiled.memory_analysis()
+            roof = analyze(compiled, setup.cfg, shape, n_dev)
+            row = {
+                "arch": arch, "shape": shape_name, "kind": kind,
+                "multi_pod": multi_pod, "n_devices": n_dev,
+                "opts": list(opts),
+                "lower_s": round(t_lower, 1),
+                "compile_s": round(t_compile, 1),
+                "memory": {
+                    "argument_bytes": getattr(ma, "argument_size_in_bytes", 0),
+                    "output_bytes": getattr(ma, "output_size_in_bytes", 0),
+                    "temp_bytes": getattr(ma, "temp_size_in_bytes", 0),
+                    "generated_code_bytes": getattr(
+                        ma, "generated_code_size_in_bytes", 0),
+                },
+                **roof.row(),
+            }
+            if verbose:
+                print(f"[dryrun] {arch} × {shape_name}"
+                      f"{' ×2pod' if multi_pod else ''}: "
+                      f"compute={roof.compute_s*1e3:.1f}ms "
+                      f"memory={roof.memory_s*1e3:.1f}ms "
+                      f"coll={roof.collective_s*1e3:.1f}ms "
+                      f"→ {roof.dominant}-bound; "
+                      f"args/dev={row['memory']['argument_bytes']/2**30:.2f}GiB "
+                      f"temp/dev={row['memory']['temp_bytes']/2**30:.2f}GiB "
+                      f"useful={roof.useful_flops_ratio:.2f} "
+                      f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+                print(f"         memory_analysis: {ma}")
+            return row
+    except Exception as e:
+        if verbose:
+            traceback.print_exc()
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "error": f"{type(e).__name__}: {e}"}
+    finally:
+        shd.set_mesh(None)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--opt", action="append", default=[],
+                    choices=["attn_heads", "mla_latent", "fsdp", "remat_dots", "expert_ep", "softmax_low"],
+                    help="enable a §Perf optimization (repeatable)")
+    args = ap.parse_args()
+
+    rows = []
+    if args.all:
+        pairs = [(a, s) for a in ARCH_IDS for s in INPUT_SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+    for arch, shape in pairs:
+        rows.append(dryrun_one(arch, shape, args.multi_pod,
+                               opts=tuple(args.opt)))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"wrote {len(rows)} rows to {args.out}")
+    n_err = sum(1 for r in rows if "error" in r)
+    n_skip = sum(1 for r in rows if r.get("skipped"))
+    print(f"dry-run: {len(rows) - n_err - n_skip} ok, {n_skip} skipped, "
+          f"{n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,43 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Capture the §Perf hillclimb results: baseline vs optimized roofline rows
+for the three selected pairs, written to experiments/hillclimb_optimized.json.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb_capture
+"""
+
+import json
+
+from repro.launch.dryrun import dryrun_one
+
+PAIRS = [
+    # (arch, shape, final opts)
+    ("qwen2-72b", "train_4k", ("fsdp",)),
+    ("deepseek-v3-671b", "decode_32k", ("expert_ep",)),
+    ("musicgen-large", "prefill_32k", ()),   # loop/layout fixes are default
+    ("deepseek-v3-671b", "train_4k", ("attn_heads",)),  # bonus hillclimb D
+]
+
+
+def main():
+    out = []
+    for arch, shape, opts in PAIRS:
+        base = dryrun_one(arch, shape, verbose=False, opts=())
+        opt = dryrun_one(arch, shape, verbose=False, opts=opts) if opts else base
+        row = {"arch": arch, "shape": shape, "opts": list(opts),
+               "baseline": base, "optimized": opt}
+        if "error" not in base and "error" not in opt:
+            b, o = base["bound_s"], opt["bound_s"]
+            row["speedup_on_bound"] = round(b / o, 2) if o else None
+            print(f"{arch} × {shape}: bound {b:.3f}s -> {o:.3f}s "
+                  f"({row['speedup_on_bound']}x) opts={list(opts)}")
+        out.append(row)
+    with open("experiments/hillclimb_optimized.json", "w") as f:
+        json.dump(out, f, indent=1)
+    print("wrote experiments/hillclimb_optimized.json")
+
+
+if __name__ == "__main__":
+    main()

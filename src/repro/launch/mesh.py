@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module constants) so importing never touches jax
+device state.  The dry-run sets XLA_FLAGS host-device-count=512 before any
+jax import; the single-pod mesh then uses the first 256 devices, the
+multi-pod mesh all 512 (2 pods × 16 × 16).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — the "
+            "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count"
+            "=512 before importing jax")
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(model: Optional[int] = None) -> Mesh:
+    """Tiny mesh over whatever devices exist (tests / CPU examples)."""
+    devices = jax.devices()
+    n = len(devices)
+    m = model or 1
+    assert n % m == 0
+    return Mesh(np.asarray(devices).reshape(n // m, m), ("data", "model"))

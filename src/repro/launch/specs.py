@@ -1,0 +1,70 @@
+"""ShapeDtypeStruct input specs for every (arch × input-shape) pair.
+
+No device allocation: the dry-run lowers against these stand-ins.
+``run_config`` also derives the shape-adapted model config:
+
+* ``long_500k`` keeps the sliding-window attention variant (the
+  sub-quadratic mode); every other shape uses full attention — matching how
+  these models are actually served (DESIGN.md §4).
+* all production-mesh runs compute in bfloat16.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+
+
+def run_config(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    window = cfg.window if shape.name == "long_500k" else None
+    return dataclasses.replace(cfg, window=window, dtype="bfloat16")
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Batch ShapeDtypeStructs for a train/prefill step (full sequences)."""
+    b, t = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if cfg.family == "audio":
+        return {"codes": jax.ShapeDtypeStruct((b, cfg.n_codebooks, t), i32),
+                "labels": jax.ShapeDtypeStruct((b, cfg.n_codebooks, t), i32)}
+    specs = {"tokens": jax.ShapeDtypeStruct((b, t), i32),
+             "labels": jax.ShapeDtypeStruct((b, t), i32)}
+    if cfg.family == "vlm":
+        # the ViT frontend stub delivers patch embeddings; text fills the rest
+        tv = cfg.n_patches
+        tt = t - tv
+        specs = {"tokens": jax.ShapeDtypeStruct((b, tt), i32),
+                 "labels": jax.ShapeDtypeStruct((b, t), i32),
+                 "vision_embeds": jax.ShapeDtypeStruct((b, tv, cfg.d_model),
+                                                       jnp.bfloat16),
+                 "positions3": jax.ShapeDtypeStruct((3, b, t), i32)}
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig
+                 ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """One-token decode batch."""
+    b = shape.global_batch
+    i32 = jnp.int32
+    if cfg.family == "audio":
+        return {"codes": jax.ShapeDtypeStruct((b, cfg.n_codebooks, 1), i32)}
+    out = {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    if cfg.family == "vlm":
+        out["positions3"] = jax.ShapeDtypeStruct((3, b, 1), i32)
+    return out
+
+
+def cache_capacity(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    cap = shape.seq_len
+    if cfg.window is not None:
+        cap = min(cap, cfg.window)
+    return cap
+
+
+def eval_shapes(fn, *args, **kw):
+    return jax.eval_shape(fn, *args, **kw)

@@ -1,0 +1,137 @@
+"""Jit-able step builders used by both the dry-run and the real drivers.
+
+``build_train_setup`` / ``build_serve_setup`` return (step_fn, arg_specs,
+in_shardings, out_shardings) without allocating anything — the dry-run
+lowers them against ShapeDtypeStructs; the drivers call them with real
+arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import rules as R
+from repro.launch import specs as S
+from repro.models.registry import build_model
+from repro.optim.optimizers import get_optimizer
+from repro.training.train_lib import make_train_step
+
+
+def _replicated(tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda l: NamedSharding(mesh, P(*([None] * len(l.shape)))), tree)
+
+
+@dataclasses.dataclass
+class Setup:
+    cfg: ModelConfig
+    model: Any
+    step_fn: Any                    # callable(*args)
+    arg_shapes: Tuple               # ShapeDtypeStructs
+    in_shardings: Tuple
+    out_shardings: Any
+
+
+def build_train_setup(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                      multi_pod: bool = False, seed: int = 0,
+                      grad_accum: int = 1) -> Setup:
+    cfg = S.run_config(cfg, shape)
+    model = build_model(cfg)
+    opt = get_optimizer(cfg.optimizer, 1e-4)
+    train_step = make_train_step(model, cfg, opt, grad_accum=grad_accum)
+
+    key = jax.random.PRNGKey(seed)
+    params_shapes, state_shapes = jax.eval_shape(model.init, key)
+    opt_shapes = jax.eval_shape(opt.init, params_shapes)
+    batch_shapes = S.input_specs(cfg, shape)
+
+    hybrid = cfg.family == "hybrid"
+    p_shard = R.params_shardings(params_shapes, mesh, hybrid)
+    o_shard = R.params_shardings(opt_shapes, mesh, hybrid)
+    b_shard = R.batch_shardings(batch_shapes, mesh, multi_pod,
+                                shape.global_batch)
+    s_shard = _replicated(state_shapes, mesh)
+    metrics_shapes = jax.eval_shape(
+        train_step, params_shapes, opt_shapes, state_shapes, batch_shapes)[3]
+    out_shardings = (p_shard, o_shard, s_shard, _replicated(metrics_shapes, mesh))
+    return Setup(cfg, model, train_step,
+                 (params_shapes, opt_shapes, state_shapes, batch_shapes),
+                 (p_shard, o_shard, s_shard, b_shard), out_shardings)
+
+
+def build_prefill_setup(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                        multi_pod: bool = False, seed: int = 0) -> Setup:
+    cfg = S.run_config(cfg, shape)
+    model = build_model(cfg)
+
+    def prefill_step(params, batch):
+        logits, _ = model.apply(params, {}, batch, train=False)
+        # return only last-token logits (what serving needs)
+        return logits[:, -1]
+
+    key = jax.random.PRNGKey(seed)
+    params_shapes, _ = jax.eval_shape(model.init, key)
+    batch_shapes = S.input_specs(cfg, shape)
+    batch_shapes.pop("labels", None)
+    hybrid = cfg.family == "hybrid"
+    p_shard = R.params_shardings(params_shapes, mesh, hybrid)
+    b_shard = R.batch_shardings(batch_shapes, mesh, multi_pod,
+                                shape.global_batch)
+    out_shapes = jax.eval_shape(prefill_step, params_shapes, batch_shapes)
+    out_shard = NamedSharding(
+        mesh, P(("pod", "data") if multi_pod else "data",
+                *([None] * (len(out_shapes.shape) - 1)))
+        if shape.global_batch % (mesh.shape.get("pod", 1) * mesh.shape["data"]) == 0
+        else P(*([None] * len(out_shapes.shape))))
+    return Setup(cfg, model, prefill_step, (params_shapes, batch_shapes),
+                 (p_shard, b_shard), out_shard)
+
+
+def build_serve_setup(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                      multi_pod: bool = False, seed: int = 0) -> Setup:
+    """One-token decode step against a seq_len-deep cache."""
+    cfg = S.run_config(cfg, shape)
+    model = build_model(cfg)
+
+    def serve_step(params, caches, batch):
+        logits, new_caches = model.decode_step(params, caches, batch)
+        return logits, new_caches
+
+    key = jax.random.PRNGKey(seed)
+    params_shapes, _ = jax.eval_shape(model.init, key)
+    cap = S.cache_capacity(cfg, shape)
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_caches(shape.global_batch, cap, jnp.bfloat16))
+    batch_shapes = S.decode_specs(cfg, shape)
+
+    hybrid = cfg.family == "hybrid"
+    p_shard = R.params_shardings(params_shapes, mesh, hybrid)
+    c_shard = R.cache_shardings(cache_shapes, mesh, multi_pod,
+                                shape.global_batch)
+    b_shard = R.batch_shardings(batch_shapes, mesh, multi_pod,
+                                shape.global_batch)
+    logits_shapes, _ = jax.eval_shape(serve_step, params_shapes, cache_shapes,
+                                      batch_shapes)
+    out_shardings = (_replicated(logits_shapes, mesh), c_shard)
+    return Setup(cfg, model, serve_step,
+                 (params_shapes, cache_shapes, batch_shapes),
+                 (p_shard, c_shard, b_shard), out_shardings)
+
+
+def build_setup(kind: str, cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                multi_pod: bool = False, grad_accum: int = 1) -> Setup:
+    if kind == "train":
+        return build_train_setup(cfg, shape, mesh, multi_pod,
+                                 grad_accum=grad_accum)
+    if kind == "prefill":
+        return build_prefill_setup(cfg, shape, mesh, multi_pod)
+    if kind == "decode":
+        return build_serve_setup(cfg, shape, mesh, multi_pod)
+    raise KeyError(kind)

@@ -1,0 +1,330 @@
+"""Unified decoder-only LM covering the dense / moe / audio / vlm families
+(ssm + hybrid live in ``repro.models.ssm_lm``).
+
+Layers are stacked and executed with ``lax.scan`` (MaxText-style): fast
+compiles at 80 layers, clean remat, and pipeline-stage splitting for the
+partitioner.  Parameters are stacked pytrees with a leading ``layers`` axis.
+
+Public API (same for every family — the launcher depends only on this):
+  init(key) -> (params, state)
+  apply(params, state, batch, train=...) -> (logits, aux)
+  init_caches(batch_size, capacity, dtype) -> cache pytree
+  decode_step(params, caches, batch) -> (logits, new_caches)
+  to_graph(seq) -> LayerGraph (partitioner view, per-block granularity)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import layers as GL
+from repro.core.graph import LayerGraph
+from repro.nn.attention import (GQAAttention, MLAAttention, MLAConfig,
+                                init_cache, init_mla_cache)
+from repro.nn.layers import rms_norm
+from repro.nn.moe import MoEFFN
+from repro.nn.module import Module, normal_init
+from repro.nn.sharding import shard
+
+
+def _dtype(cfg: ModelConfig):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.dtype]
+
+
+def gated_mlp_init(key, d, ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": normal_init(k1, (d, ff), d ** -0.5, dtype),
+            "w_up": normal_init(k2, (d, ff), d ** -0.5, dtype),
+            "w_down": normal_init(k3, (ff, d), ff ** -0.5, dtype)}
+
+
+def gated_mlp(params, x):
+    w_g = shard(params["w_gate"], ("embed", "mlp"))
+    w_u = shard(params["w_up"], ("embed", "mlp"))
+    w_d = shard(params["w_down"], ("mlp", "embed"))
+    h = jax.nn.silu(x @ w_g) * (x @ w_u)
+    return h @ w_d
+
+
+class DecoderBlock(Module):
+    """Pre-norm attention + FFN block. kind: 'dense' or 'moe'."""
+
+    def __init__(self, cfg: ModelConfig, kind: str):
+        self.cfg = cfg
+        self.kind = kind
+        dt = _dtype(cfg)
+        if cfg.use_mla:
+            self.attn = MLAAttention(MLAConfig(
+                d_model=cfg.d_model, n_heads=cfg.n_heads,
+                q_lora_rank=cfg.q_lora_rank, kv_lora_rank=cfg.kv_lora_rank,
+                qk_nope_dim=cfg.qk_nope_dim, qk_rope_dim=cfg.qk_rope_dim,
+                v_head_dim=cfg.v_head_dim, rope_theta=cfg.rope_theta), dt)
+        else:
+            self.attn = GQAAttention(
+                cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.resolved_head_dim,
+                qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm, window=cfg.window,
+                rope_theta=cfg.rope_theta,
+                mrope_sections=cfg.mrope_sections, dtype=dt)
+        if kind == "moe":
+            self.ffn = MoEFFN(cfg.d_model, cfg.moe_d_ff, cfg.n_experts,
+                              cfg.top_k, cfg.n_shared,
+                              sigmoid_gate=cfg.sigmoid_gate, dtype=dt)
+        else:
+            self.ffn = None
+        self.dt = dt
+
+    def init(self, key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p = {"ln1": jnp.ones((self.cfg.d_model,), self.dt),
+             "ln2": jnp.ones((self.cfg.d_model,), self.dt),
+             "attn": self.attn.init(k1)[0]}
+        if self.kind == "moe":
+            p["moe"] = self.ffn.init(k2)[0]
+        else:
+            p["mlp"] = gated_mlp_init(k3, self.cfg.d_model, self.cfg.d_ff,
+                                      self.dt)
+        return p, {}
+
+    def apply(self, params, state, x, *, positions=None, cache=None,
+              impl="ref", train=False, **kw):
+        h = rms_norm(x, params["ln1"])
+        if cache is not None:
+            a, new_cache = self.attn.apply(params["attn"], {}, h,
+                                           positions=positions, cache=cache,
+                                           impl=impl)
+        else:
+            a, _ = self.attn.apply(params["attn"], {}, h,
+                                   positions=positions, impl=impl)
+            new_cache = None
+        x = x + a
+        h = rms_norm(x, params["ln2"])
+        if self.kind == "moe":
+            f, aux = self.ffn.apply(params["moe"], {}, h)
+        else:
+            f, aux = gated_mlp(params["mlp"], h), {}
+        x = x + f
+        x = shard(x, ("batch", "seq", "act_embed"))
+        return x, (new_cache, aux)
+
+
+def _stack_init(block: Module, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: block.init(k)[0])(keys)
+
+
+def _scan_blocks(block: DecoderBlock, stacked_params, x, positions,
+                 caches=None, impl="ref", train=False, remat=False):
+    """Run x through n stacked blocks via lax.scan.
+
+    caches: stacked cache pytree with leading layer axis (or None).
+    Returns (x, new_caches, aux_sums).
+    """
+    def body(carry, layer_in):
+        h = carry
+        p, c = layer_in
+        h2, (new_c, aux) = block.apply(p, {}, h, positions=positions,
+                                       cache=c, impl=impl, train=train)
+        aux_vals = tuple(aux[k] for k in sorted(aux)) if aux else ()
+        return h2, (new_c, aux_vals)
+
+    if remat:
+        from repro.nn.sharding import current_rules
+        policy = None
+        if current_rules().get("remat_policy") == "dots":
+            # §Perf "remat_dots": keep matmul outputs, skip the backward
+            # re-gather of ZeRO-3 weights at the cost of saved activations
+            policy = jax.checkpoint_policies.checkpoint_dots
+        body = jax.checkpoint(body, prevent_cse=False, policy=policy)
+
+    xs = (stacked_params, caches)
+    x, (new_caches, aux_stack) = jax.lax.scan(body, x, xs)
+    aux = {}
+    if aux_stack:
+        names = sorted(["lb_loss", "z_loss", "dropped"])
+        for name, v in zip(names, aux_stack):
+            aux[name] = v.mean()
+    return x, new_caches, aux
+
+
+class DecoderLM(Module):
+    """Decoder-only LM for dense / moe / audio / vlm configs."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dt = _dtype(cfg)
+        self.block = DecoderBlock(cfg, "dense" if cfg.family != "moe" else "moe")
+        self.n_dense = cfg.first_dense if cfg.family == "moe" else cfg.n_layers
+        self.n_moe = cfg.n_layers - cfg.first_dense if cfg.family == "moe" else 0
+        if self.n_moe:
+            self.dense_block = DecoderBlock(cfg, "dense")
+            self.moe_block = DecoderBlock(cfg, "moe")
+        else:
+            self.dense_block = self.block
+            self.moe_block = None
+
+    # -- init ----------------------------------------------------------------
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        vocab_rows = cfg.vocab * max(cfg.n_codebooks, 1)
+        p: Dict[str, Any] = {
+            "embed": normal_init(ks[0], (vocab_rows, cfg.d_model), 0.02,
+                                 self.dt),
+            "final_norm": jnp.ones((cfg.d_model,), self.dt),
+        }
+        if self.n_dense:
+            p["blocks_dense"] = _stack_init(self.dense_block, ks[1],
+                                            self.n_dense)
+        if self.n_moe:
+            p["blocks_moe"] = _stack_init(self.moe_block, ks[2], self.n_moe)
+        if not cfg.tied_embeddings:
+            p["head"] = normal_init(ks[3], (cfg.d_model, vocab_rows),
+                                    cfg.d_model ** -0.5, self.dt)
+        if cfg.family == "vlm":
+            # projector stub: maps frontend patch embeddings into d_model
+            p["vis_proj"] = normal_init(ks[4], (cfg.d_model, cfg.d_model),
+                                        cfg.d_model ** -0.5, self.dt)
+        if cfg.mtp:
+            p["mtp_block"] = _stack_init(self.dense_block, ks[5], cfg.mtp)
+            p["mtp_proj"] = normal_init(ks[6], (2 * cfg.d_model, cfg.d_model),
+                                        (2 * cfg.d_model) ** -0.5, self.dt)
+        return p, {}
+
+    # -- embedding / head per family ------------------------------------------
+    def _embed(self, params, batch) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+        cfg = self.cfg
+        table = shard(params["embed"], ("vocab", "embed"))
+        if cfg.family == "audio":
+            codes = batch["codes"]                       # (B, K, T)
+            offs = (jnp.arange(cfg.n_codebooks) * cfg.vocab)[None, :, None]
+            x = jnp.take(table, codes + offs, axis=0).sum(axis=1)
+            positions = None
+        elif cfg.family == "vlm" and "vision_embeds" in batch:
+            tokens = batch["tokens"]                     # (B, T_txt)
+            vis = batch["vision_embeds"].astype(self.dt)  # (B, T_vis, D)
+            vis = vis @ params["vis_proj"]
+            txt = jnp.take(table, tokens, axis=0)
+            x = jnp.concatenate([vis, txt], axis=1)
+            positions = batch.get("positions3")          # (3, B, T_total)
+        else:
+            x = jnp.take(table, batch["tokens"], axis=0)
+            positions = batch.get("positions3", batch.get("positions"))
+        return shard(x, ("batch", "seq", "act_embed")), positions
+
+    def _head(self, params, x) -> jnp.ndarray:
+        cfg = self.cfg
+        w = (params["embed"].T if cfg.tied_embeddings else params["head"])
+        w = shard(w, ("embed", "vocab"))
+        logits = x @ w
+        if cfg.family == "audio":
+            b, t, _ = logits.shape
+            return logits.reshape(b, t, cfg.n_codebooks, cfg.vocab)
+        return logits
+
+    # -- forward ----------------------------------------------------------------
+    def apply(self, params, state, batch, *, train=False, impl="ref", **kw):
+        cfg = self.cfg
+        x, positions = self._embed(params, batch)
+        b, t, _ = x.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+        if cfg.mrope_sections is not None and positions.ndim == 2:
+            positions = jnp.stack([positions] * 3)
+        aux: Dict[str, jnp.ndarray] = {}
+        if self.n_dense:
+            x, _, _ = _scan_blocks(self.dense_block, params["blocks_dense"],
+                                   x, positions, impl=impl, train=train,
+                                   remat=cfg.remat and train)
+        if self.n_moe:
+            x, _, aux = _scan_blocks(self.moe_block, params["blocks_moe"],
+                                     x, positions, impl=impl, train=train,
+                                     remat=cfg.remat and train)
+        x = rms_norm(x, params["final_norm"])
+        logits = self._head(params, x)
+
+        if cfg.mtp and train:
+            # multi-token prediction: one extra block over shifted stream
+            h = x
+            emb_next = jnp.roll(self._embed(params, batch)[0], -1, axis=1)
+            h = jnp.concatenate([h, emb_next], axis=-1) @ params["mtp_proj"]
+            h, _, _ = _scan_blocks(self.dense_block, params["mtp_block"], h,
+                                   positions, impl=impl, train=train)
+            aux["mtp_logits"] = self._head(params, rms_norm(
+                h, params["final_norm"]))
+        return logits, aux
+
+    # -- serving ------------------------------------------------------------------
+    def init_caches(self, batch_size: int, capacity: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        if cfg.window is not None:
+            capacity = min(capacity, cfg.window)
+        def one(_):
+            if cfg.use_mla:
+                return init_mla_cache(batch_size, capacity,
+                                      self.block.attn.cfg, dtype)
+            return init_cache(batch_size, cfg.n_kv, capacity,
+                              cfg.resolved_head_dim, dtype)
+        caches = {}
+        if self.n_dense:
+            caches["dense"] = jax.tree_util.tree_map(
+                lambda x: jnp.stack([x] * self.n_dense),
+                one(None))
+        if self.n_moe:
+            caches["moe"] = jax.tree_util.tree_map(
+                lambda x: jnp.stack([x] * self.n_moe), one(None))
+        return caches
+
+    def decode_step(self, params, caches, batch, *, impl="ref"):
+        """One-token decode. batch: tokens (B, 1) (+ positions (B,1))."""
+        cfg = self.cfg
+        x, positions = self._embed(params, batch)
+        b, t, _ = x.shape
+        if positions is None:
+            pos0 = (caches.get("dense") or caches["moe"])["pos"][0]
+            positions = (pos0[None, None] + jnp.arange(t)[None, :]
+                         ).astype(jnp.int32)
+            positions = jnp.broadcast_to(positions, (b, t))
+        if cfg.mrope_sections is not None and positions.ndim == 2:
+            positions = jnp.stack([positions] * 3)
+        new_caches = {}
+        if self.n_dense:
+            x, nc, _ = _scan_blocks(self.dense_block, params["blocks_dense"],
+                                    x, positions, caches=caches["dense"],
+                                    impl=impl)
+            new_caches["dense"] = nc
+        if self.n_moe:
+            x, nc, _ = _scan_blocks(self.moe_block, params["blocks_moe"], x,
+                                    positions, caches=caches["moe"], impl=impl)
+            new_caches["moe"] = nc
+        x = rms_norm(x, params["final_norm"])
+        return self._head(params, x), new_caches
+
+    # -- partitioner view ------------------------------------------------------------
+    def to_graph(self, seq: int) -> LayerGraph:
+        cfg = self.cfg
+        g = LayerGraph(name=cfg.arch_id)
+        prev = g.add(GL.embed_layer("Embed_0", cfg.vocab * max(cfg.n_codebooks, 1),
+                                    cfg.d_model, seq)).name
+        for i in range(cfg.n_layers):
+            kind = "moe" if (cfg.family == "moe" and i >= cfg.first_dense) else "dense"
+            attn = GL.attention_layer(
+                f"Attention_{i}", cfg.d_model, cfg.n_heads or 1,
+                cfg.n_kv or 1, seq, cfg.resolved_head_dim,
+                qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm, window=cfg.window)
+            prev = g.add(attn, after=[prev]).name
+            if kind == "moe":
+                ffn = GL.moe_layer(f"MoE_{i}", cfg.d_model, cfg.moe_d_ff, seq,
+                                   cfg.n_experts, cfg.top_k, cfg.n_shared)
+            else:
+                ffn = GL.mlp_layer(f"Mlp_{i}", cfg.d_model, cfg.d_ff, seq)
+            prev = g.add(ffn, after=[prev]).name
+        g.add(GL.lm_head_layer("Head_0", cfg.d_model,
+                               cfg.vocab * max(cfg.n_codebooks, 1), seq,
+                               tied=cfg.tied_embeddings), after=[prev])
+        return g

@@ -1,0 +1,54 @@
+"""Architecture registry: config lookup + model factory."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+
+_CONFIG_MODULES = {
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "qwen2-72b": "repro.configs.qwen2_72b",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "smollm-360m": "repro.configs.smollm_360m",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "zamba2-2.7b": "repro.configs.zamba2_2_7b",
+    "stablelm-12b": "repro.configs.stablelm_12b",
+}
+
+ARCH_IDS: List[str] = list(_CONFIG_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _CONFIG_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; have {ARCH_IDS}")
+    return importlib.import_module(_CONFIG_MODULES[arch_id]).CONFIG
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("ssm", "hybrid"):
+        from repro.models.ssm_lm import SSMLM
+        return SSMLM(cfg)
+    from repro.models.decoder import DecoderLM
+    return DecoderLM(cfg)
+
+
+def count_params_from_config(cfg: ModelConfig) -> int:
+    model = build_model(cfg)
+    return model.to_graph(seq=8).total_params
+
+
+def shape_config(name: str) -> ShapeConfig:
+    return INPUT_SHAPES[name]
+
+
+def supports_shape(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """long_500k needs sub-quadratic decode: SSM/hybrid state or a sliding
+    window (DESIGN.md §4)."""
+    if shape.name != "long_500k":
+        return True
+    return cfg.family in ("ssm", "hybrid") or cfg.window is not None

@@ -1,0 +1,238 @@
+"""SSM and hybrid decoder LMs: Mamba2 (SSD) and Zamba2-style hybrid.
+
+Mamba2LM: embed → scan(48 × [norm → Mamba2Mixer] ) → norm → tied head.
+
+HybridLM (Zamba2): Mamba2 backbone; after every ``attn_every`` mamba blocks
+one SHARED attention+MLP block runs (identical parameters at every
+application — the Zamba2 trick).  Executed as a scan over groups whose body
+is (scan over ``attn_every`` mamba blocks) + shared block; shared params are
+closed over, not scanned, so they appear once in the pytree.  The memory
+model sees them via ``shared_groups`` (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import layers as GL
+from repro.core.graph import LayerGraph
+from repro.nn.attention import GQAAttention, init_cache
+from repro.nn.layers import rms_norm
+from repro.nn.module import Module, normal_init
+from repro.nn.sharding import shard
+from repro.nn.ssm import Mamba2Mixer, init_ssm_cache
+from repro.models.decoder import _dtype, _stack_init, gated_mlp, gated_mlp_init
+
+
+class MambaBlock(Module):
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dt = _dtype(cfg)
+        self.mixer = Mamba2Mixer(cfg.d_model, cfg.ssm_state, cfg.ssm_expand,
+                                 cfg.ssm_headdim, chunk=cfg.ssm_chunk,
+                                 dtype=self.dt)
+
+    def init(self, key):
+        return {"ln": jnp.ones((self.cfg.d_model,), self.dt),
+                "mixer": self.mixer.init(key)[0]}, {}
+
+    def apply(self, params, state, x, *, cache=None, impl="ref", **kw):
+        h = rms_norm(x, params["ln"])
+        if cache is not None:
+            y, new_cache = self.mixer.apply(params["mixer"], {}, h,
+                                            cache=cache, impl=impl)
+        else:
+            y, _ = self.mixer.apply(params["mixer"], {}, h, impl=impl)
+            new_cache = None
+        x = x + y.astype(x.dtype)
+        return shard(x, ("batch", "seq", "act_embed")), new_cache
+
+
+class SharedAttnBlock(Module):
+    """Zamba2 shared transformer block (attention + MLP)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dt = _dtype(cfg)
+        self.attn = GQAAttention(cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                 cfg.resolved_head_dim, dtype=self.dt)
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        return {"ln1": jnp.ones((self.cfg.d_model,), self.dt),
+                "ln2": jnp.ones((self.cfg.d_model,), self.dt),
+                "attn": self.attn.init(k1)[0],
+                "mlp": gated_mlp_init(k2, self.cfg.d_model, self.cfg.d_ff,
+                                      self.dt)}, {}
+
+    def apply(self, params, state, x, *, positions=None, cache=None,
+              impl="ref", **kw):
+        h = rms_norm(x, params["ln1"])
+        if cache is not None:
+            a, new_cache = self.attn.apply(params["attn"], {}, h,
+                                           positions=positions, cache=cache,
+                                           impl=impl)
+        else:
+            a, _ = self.attn.apply(params["attn"], {}, h,
+                                   positions=positions, impl=impl)
+            new_cache = None
+        x = x + a
+        x = x + gated_mlp(params["mlp"], rms_norm(x, params["ln2"]))
+        return shard(x, ("batch", "seq", "act_embed")), new_cache
+
+
+class SSMLM(Module):
+    """Mamba2 (family='ssm') or Zamba2 hybrid (family='hybrid')."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dt = _dtype(cfg)
+        self.mblock = MambaBlock(cfg)
+        self.hybrid = cfg.family == "hybrid"
+        if self.hybrid:
+            assert cfg.n_layers % cfg.attn_every == 0
+            self.n_groups = cfg.n_layers // cfg.attn_every
+            self.shared = SharedAttnBlock(cfg)
+
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 4)
+        p: Dict[str, Any] = {
+            "embed": normal_init(ks[0], (cfg.vocab, cfg.d_model), 0.02, self.dt),
+            "final_norm": jnp.ones((cfg.d_model,), self.dt),
+        }
+        if self.hybrid:
+            stacked = _stack_init(self.mblock, ks[1], cfg.n_layers)
+            # reshape leading axis to (groups, attn_every)
+            p["blocks"] = jax.tree_util.tree_map(
+                lambda x: x.reshape(self.n_groups, cfg.attn_every,
+                                    *x.shape[1:]), stacked)
+            p["shared"] = self.shared.init(ks[2])[0]
+        else:
+            p["blocks"] = _stack_init(self.mblock, ks[1], cfg.n_layers)
+        if not cfg.tied_embeddings:
+            p["head"] = normal_init(ks[3], (cfg.d_model, cfg.vocab),
+                                    cfg.d_model ** -0.5, self.dt)
+        return p, {}
+
+    def _head(self, params, x):
+        w = params["embed"].T if self.cfg.tied_embeddings else params["head"]
+        return x @ shard(w, ("embed", "vocab"))
+
+    def _run(self, params, x, positions, caches=None, impl="ref",
+             train=False):
+        cfg = self.cfg
+        remat = cfg.remat and train
+
+        def mamba_body(carry, layer_in):
+            p, c = layer_in
+            h, new_c = self.mblock.apply(p, {}, carry, cache=c, impl=impl)
+            return h, new_c
+        if remat:
+            mamba_body = jax.checkpoint(mamba_body, prevent_cse=False)
+
+        if not self.hybrid:
+            x, new_caches = jax.lax.scan(
+                mamba_body, x, (params["blocks"],
+                                None if caches is None else caches["mamba"]))
+            return x, (None if caches is None else {"mamba": new_caches})
+
+        shared_p = params["shared"]
+
+        def group_body(carry, group_in):
+            gp, gc = group_in
+            h, new_mc = jax.lax.scan(
+                mamba_body, carry,
+                (gp, None if gc is None else gc["mamba"]))
+            h, new_ac = self.shared.apply(shared_p, {}, h,
+                                          positions=positions,
+                                          cache=None if gc is None
+                                          else gc["attn"], impl=impl)
+            if gc is None:
+                return h, None
+            return h, {"mamba": new_mc, "attn": new_ac}
+        if remat:
+            group_body = jax.checkpoint(group_body, prevent_cse=False)
+
+        x, new_caches = jax.lax.scan(group_body, x,
+                                     (params["blocks"], caches))
+        return x, new_caches
+
+    def apply(self, params, state, batch, *, train=False, impl="ref", **kw):
+        x = jnp.take(shard(params["embed"], ("vocab", "embed")),
+                     batch["tokens"], axis=0)
+        x = shard(x, ("batch", "seq", "act_embed"))
+        b, t, _ = x.shape
+        positions = batch.get(
+            "positions", jnp.broadcast_to(jnp.arange(t)[None], (b, t)))
+        x, _ = self._run(params, x, positions, impl=impl, train=train)
+        x = rms_norm(x, params["final_norm"])
+        return self._head(params, x), {}
+
+    # -- serving ---------------------------------------------------------------
+    def init_caches(self, batch_size: int, capacity: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        ssm_one = init_ssm_cache(batch_size, self.mblock.mixer, jnp.float32)
+        if not self.hybrid:
+            return {"mamba": jax.tree_util.tree_map(
+                lambda x: jnp.stack([x] * cfg.n_layers), ssm_one)}
+        attn_one = init_cache(batch_size, cfg.n_kv, capacity,
+                              cfg.resolved_head_dim, dtype)
+        group_ssm = jax.tree_util.tree_map(
+            lambda x: jnp.stack([x] * cfg.attn_every), ssm_one)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.stack([x] * self.n_groups),
+            {"mamba": group_ssm, "attn": attn_one})
+
+    def decode_step(self, params, caches, batch, *, impl="ref"):
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        b, t, _ = x.shape
+        if self.hybrid:
+            pos0 = caches["attn"]["pos"][0]
+        else:
+            pos0 = caches["mamba"]["pos"][0]
+        positions = batch.get("positions")
+        if positions is None:
+            positions = (pos0[None, None] + jnp.arange(t)[None, :]
+                         ).astype(jnp.int32)
+            positions = jnp.broadcast_to(positions, (b, t))
+        x, new_caches = self._run(params, x, positions, caches=caches,
+                                  impl=impl)
+        x = rms_norm(x, params["final_norm"])
+        return self._head(params, x), new_caches
+
+    # -- partitioner view --------------------------------------------------------
+    def to_graph(self, seq: int) -> LayerGraph:
+        cfg = self.cfg
+        g = LayerGraph(name=cfg.arch_id)
+        prev = g.add(GL.embed_layer("Embed_0", cfg.vocab, cfg.d_model,
+                                    seq)).name
+        for i in range(cfg.n_layers):
+            ssm = GL.ssm_layer(f"SSM_{i}", cfg.d_model, cfg.ssm_state, seq,
+                               cfg.ssm_expand, headdim=cfg.ssm_headdim)
+            prev = g.add(ssm, after=[prev]).name
+            if self.hybrid and (i + 1) % cfg.attn_every == 0:
+                a = GL.attention_layer(f"SharedAttn_{i}", cfg.d_model,
+                                       cfg.n_heads, cfg.n_kv, seq,
+                                       cfg.resolved_head_dim)
+                prev = g.add(a, after=[prev]).name
+                m = GL.mlp_layer(f"SharedMlp_{i}", cfg.d_model, cfg.d_ff, seq)
+                prev = g.add(m, after=[prev]).name
+        g.add(GL.lm_head_layer("Head_0", cfg.d_model, cfg.vocab, seq,
+                               tied=cfg.tied_embeddings), after=[prev])
+        return g
+
+    def shared_groups(self) -> Dict[str, str]:
+        """Map shared-block layer names to one weight group (memory model)."""
+        if not self.hybrid:
+            return {}
+        out = {}
+        for i in range(self.cfg.n_layers):
+            if (i + 1) % self.cfg.attn_every == 0:
+                out[f"SharedAttn_{i}"] = "shared_attn"
+                out[f"SharedMlp_{i}"] = "shared_mlp"
+        return out

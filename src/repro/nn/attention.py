@@ -1,0 +1,440 @@
+"""Attention machinery: RoPE / M-RoPE, GQA, qk-norm, sliding windows,
+KV caches (full + ring-buffer window), and DeepSeek-V3 MLA.
+
+Shapes: activations (B, T, D); caches (B, n_kv, S, hd) — S is the cache
+capacity (full seq or sliding window).  Decode is T=1 against a cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import rms_norm
+from repro.nn.module import Module, normal_init
+
+Cache = Dict[str, jnp.ndarray]
+
+
+# -- rotary embeddings --------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: (B, T, H, hd); positions: (B, T) integer positions."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, T, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray,
+                sections: Tuple[int, ...], theta: float = 10000.0) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.
+
+    positions3: (3, B, T) — temporal/height/width position ids.
+    sections: per-axis frequency-band sizes (in half-dims), sum = hd/2.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang_all = positions3[..., None].astype(jnp.float32) * freqs  # (3,B,T,hd/2)
+    parts = []
+    start = 0
+    for axis, sec in enumerate(sections):
+        parts.append(ang_all[axis, :, :, start:start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)               # (B, T, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# -- masking ------------------------------------------------------------------
+
+def causal_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                window: Optional[int] = None) -> jnp.ndarray:
+    """(..., Tq, Tk) boolean mask: True = attend."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        m &= k_pos[..., None, :] > q_pos[..., :, None] - window
+    return m
+
+
+def sdpa(q, k, v, mask, impl: str = "ref") -> jnp.ndarray:
+    """q: (B,T,H,hd), k: (B,S,Kv,hd), v: (B,S,Kv,vd), mask: (B,T,S)/(T,S)."""
+    b, t, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    vd = v.shape[-1]
+    group = h // kv
+    qg = q.reshape(b, t, kv, group, hd)
+    scores = jnp.einsum("btkgh,bskh->bkgts", qg, k) / jnp.sqrt(hd).astype(q.dtype)
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,bskh->btkgh", p, v)
+    return out.reshape(b, t, h, vd)
+
+
+def chunked_sdpa(q, k, v, window: Optional[int] = None,
+                 chunk_q: int = 512) -> jnp.ndarray:
+    """Memory-bounded causal attention: lax.scan over query chunks.
+
+    Never materializes the (T, T) score matrix — per step it is
+    (chunk_q, S), so 32k-token prefill lowers with O(T·chunk) intermediates
+    (flash-attention shape without a custom kernel; the Pallas kernel covers
+    the windowed case on TPU).  q: (B,T,H,hd); k/v: (B,S,Kv,hd-like).
+
+    §Perf opt "attn_kv": when the rules map 'attn_kv' to a mesh axis, the kv
+    head dimension is sharded (the caller duplicated kv heads if needed) and
+    k/v carry FULL sequence — the Megatron pattern (gather once per layer,
+    compute head-parallel) instead of per-chunk gathers of seq-sharded k/v.
+    """
+    from repro.nn.sharding import axis_size, shard
+    b, t, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    vd = v.shape[-1]
+    group = h // kv
+    if t % chunk_q:
+        chunk_q = t  # fallback: single chunk
+    nq = t // chunk_q
+    head_shard = axis_size("attn_kv") > 1 and kv % axis_size("attn_kv") == 0
+    if head_shard:
+        k = shard(k, ("batch", None, "attn_kv", None))
+        v = shard(v, ("batch", None, "attn_kv", None))
+    qc = q.reshape(b, nq, chunk_q, kv, group, hd)
+    qc = jnp.moveaxis(qc, 1, 0)                       # (nq,b,cq,kv,g,hd)
+    if head_shard:
+        qc = shard(qc, (None, "batch", None, "attn_kv", None, None))
+    k_pos = jnp.arange(s)
+    scale = 1.0 / jnp.sqrt(hd).astype(q.dtype)
+
+    def step(qi, outs):
+        # fori_loop + in-place DUS (aliased carry) instead of lax.scan:
+        # scan's stacked xs/ys loop-state copies dominated HBM traffic
+        # (§Perf hillclimb C2 — confirmed ~4 TB/step of copies on
+        # musicgen prefill before this change)
+        q_blk = jax.lax.dynamic_index_in_dim(qc, qi, 0, keepdims=False)
+        q_pos = qi * chunk_q + jnp.arange(chunk_q)
+        mask = k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        # single (b,kv,g,cq,s) layout end-to-end: einsum outputs, mask,
+        # softmax and the PV product all share it, so XLA emits no per-chunk
+        # f32 transpose copies (§Perf hillclimb C3 — they were ~4 TB/step)
+        sc = jnp.einsum("bckgh,bskh->bkgcs", q_blk, k) * scale
+        if head_shard:
+            sc = shard(sc, ("batch", "attn_kv", None, None, None))
+        sc = jnp.where(mask[None, None, None], sc, -1e30)
+        # §Perf "softmax_low": keep the softmax in the compute dtype — the
+        # f32 score materialization is the last big HBM term; the Pallas
+        # kernel path keeps scores in VMEM at f32 regardless.
+        from repro.nn.sharding import current_rules
+        if current_rules().get("softmax_dtype") == "compute":
+            p = jax.nn.softmax(sc, axis=-1)
+        else:
+            p = jax.nn.softmax(sc.astype(jnp.float32), axis=-1).astype(q.dtype)
+        o = jnp.einsum("bkgcs,bskh->bkgch", p, v)
+        if head_shard:
+            o = shard(o, ("batch", "attn_kv", None, None, None))
+        return jax.lax.dynamic_update_index_in_dim(outs, o, qi, 0)
+
+    outs0 = jnp.zeros((nq, b, kv, group, chunk_q, vd), q.dtype)
+    outs = jax.lax.fori_loop(0, nq, step, outs0)
+    outs = jnp.transpose(outs, (1, 0, 4, 2, 3, 5))    # (b,nq,cq,kv,g,vd)
+    return outs.reshape(b, t, h, vd)
+
+
+# -- KV caches ----------------------------------------------------------------
+
+def init_cache(batch: int, n_kv: int, capacity: int, head_dim: int,
+               dtype=jnp.bfloat16) -> Cache:
+    return {
+        "k": jnp.zeros((batch, capacity, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, capacity, n_kv, head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),   # tokens written so far
+    }
+
+
+def cache_update(cache: Cache, k_new: jnp.ndarray, v_new: jnp.ndarray,
+                 ring: bool) -> Cache:
+    """Append T_new tokens. ``ring``: wrap around (sliding-window cache)."""
+    cap = cache["k"].shape[1]
+    t_new = k_new.shape[1]
+    pos = cache["pos"]
+    if ring:
+        idx = (pos + jnp.arange(t_new)) % cap
+        k = cache["k"].at[:, idx].set(k_new)
+        v = cache["v"].at[:, idx].set(v_new)
+    else:
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, pos, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, pos, 0, 0))
+    return {"k": k, "v": v, "pos": pos + t_new}
+
+
+def cache_positions(cache: Cache, ring: bool) -> jnp.ndarray:
+    """Absolute position of each cache slot (-1 = empty)."""
+    cap = cache["k"].shape[1]
+    pos = cache["pos"]
+    slots = jnp.arange(cap)
+    if ring:
+        # slot s holds absolute position: the last `cap` tokens
+        n_wraps = jnp.maximum((pos - 1 - slots) // cap, 0)
+        abs_pos = slots + n_wraps * cap
+        return jnp.where(abs_pos < pos, abs_pos, -1)
+    return jnp.where(slots < pos, slots, -1)
+
+
+# -- GQA attention block -------------------------------------------------------
+
+class GQAAttention(Module):
+    """Grouped-query attention with RoPE/M-RoPE, qk-norm, optional window."""
+
+    def __init__(self, d_model: int, n_heads: int, n_kv: int,
+                 head_dim: Optional[int] = None, qkv_bias: bool = False,
+                 qk_norm: bool = False, window: Optional[int] = None,
+                 rope_theta: float = 10000.0,
+                 mrope_sections: Optional[Tuple[int, ...]] = None,
+                 dtype=jnp.float32):
+        self.d = d_model
+        self.h, self.kv = n_heads, n_kv
+        self.hd = head_dim or d_model // n_heads
+        self.qkv_bias, self.qk_norm = qkv_bias, qk_norm
+        self.window = window
+        self.theta = rope_theta
+        self.mrope_sections = mrope_sections
+        self.dtype = dtype
+
+    def init(self, key):
+        ks = jax.random.split(key, 4)
+        d, h, kv, hd = self.d, self.h, self.kv, self.hd
+        p = {
+            "wq": normal_init(ks[0], (d, h * hd), std=d ** -0.5, dtype=self.dtype),
+            "wk": normal_init(ks[1], (d, kv * hd), std=d ** -0.5, dtype=self.dtype),
+            "wv": normal_init(ks[2], (d, kv * hd), std=d ** -0.5, dtype=self.dtype),
+            "wo": normal_init(ks[3], (h * hd, d), std=(h * hd) ** -0.5, dtype=self.dtype),
+        }
+        if self.qkv_bias:
+            p["bq"] = jnp.zeros((h * hd,), self.dtype)
+            p["bk"] = jnp.zeros((kv * hd,), self.dtype)
+            p["bv"] = jnp.zeros((kv * hd,), self.dtype)
+        if self.qk_norm:
+            p["q_norm"] = jnp.ones((hd,), self.dtype)
+            p["k_norm"] = jnp.ones((hd,), self.dtype)
+        return p, {}
+
+    def _qkv(self, params, x, positions):
+        b, t, _ = x.shape
+        q = x @ params["wq"]
+        k = x @ params["wk"]
+        v = x @ params["wv"]
+        if self.qkv_bias:
+            q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+        q = q.reshape(b, t, self.h, self.hd)
+        k = k.reshape(b, t, self.kv, self.hd)
+        v = v.reshape(b, t, self.kv, self.hd)
+        if self.qk_norm:
+            q = rms_norm(q, params["q_norm"])
+            k = rms_norm(k, params["k_norm"])
+        if self.mrope_sections is not None:
+            assert positions.ndim == 3, "M-RoPE needs (3, B, T) positions"
+            q = apply_mrope(q, positions, self.mrope_sections, self.theta)
+            k = apply_mrope(k, positions, self.mrope_sections, self.theta)
+        else:
+            q = apply_rope(q, positions, self.theta)
+            k = apply_rope(k, positions, self.theta)
+        return q, k, v
+
+    def apply(self, params, state, x, *, positions=None,
+              cache: Optional[Cache] = None, impl: str = "ref", **kw):
+        """Train/prefill when cache is None or being filled; decode when
+        x has T=1 and cache holds history.  Returns (y, state) and the new
+        cache is written into kw-out via return tuple when cache given."""
+        b, t, _ = x.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+        q, k, v = self._qkv(params, x, positions)
+
+        if cache is None:
+            # §Perf "attn_kv": duplicate kv heads so they divide the mesh
+            # axis (Megatron GQA trick: TP degree > kv heads) — only in the
+            # chunked (long-seq) path where head sharding matters.
+            from repro.nn.sharding import axis_size
+            m = axis_size("attn_kv")
+            if m > 1 and t >= 2048 and self.kv % m != 0:
+                import math as _math
+                dup = m // _math.gcd(self.kv, m)
+                if (self.h // self.kv) % dup == 0:
+                    k = jnp.repeat(k, dup, axis=2)
+                    v = jnp.repeat(v, dup, axis=2)
+            if self.window is not None and impl == "pallas":
+                from repro.kernels import ops as kops
+                y = kops.window_attn(q, k, v, self.window, impl=impl)
+            elif t >= 2048:
+                y = chunked_sdpa(q, k, v, self.window)
+            else:
+                q_pos = positions if positions.ndim == 2 else positions[0]
+                mask = causal_mask(q_pos, q_pos, self.window)
+                y = sdpa(q, k, v, mask, impl)
+            new_cache = None
+        else:
+            ring = self.window is not None and cache["k"].shape[1] <= self.window
+            new_cache = cache_update(cache, k, v, ring=ring)
+            k_all, v_all = new_cache["k"], new_cache["v"]
+            kpos = cache_positions(new_cache, ring)                  # (S,)
+            q_pos = positions if positions.ndim == 2 else positions[0]
+            mask = (kpos[None, None, :] >= 0) & (kpos[None, None, :]
+                                                 <= q_pos[:, :, None])
+            if self.window is not None:
+                mask &= kpos[None, None, :] > q_pos[:, :, None] - self.window
+            y = sdpa(q, k_all, v_all, mask, impl)
+        y = y.reshape(b, t, self.h * self.hd) @ params["wo"]
+        if new_cache is not None:
+            return y, new_cache
+        return y, state
+
+
+# -- DeepSeek-V3 Multi-head Latent Attention ----------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    rope_theta: float = 10000.0
+
+
+class MLAAttention(Module):
+    """Multi-head latent attention (DeepSeek-V2/V3).
+
+    Cache stores the compressed latent c_kv (kv_lora_rank) + shared rope key
+    (qk_rope_dim) per token — the memory win that makes V3 decode cheap.
+    Prefill/train uses the decompressed form; decode uses the absorbed form
+    (q projected into latent space, attention in kv_lora_rank dims).
+    """
+
+    def __init__(self, cfg: MLAConfig, dtype=jnp.float32):
+        self.cfg = cfg
+        self.dtype = dtype
+
+    def init(self, key):
+        c = self.cfg
+        ks = jax.random.split(key, 8)
+        d, h = c.d_model, c.n_heads
+        qk = c.qk_nope_dim + c.qk_rope_dim
+        std = d ** -0.5
+        p = {
+            "w_dq": normal_init(ks[0], (d, c.q_lora_rank), std, self.dtype),
+            "q_norm": jnp.ones((c.q_lora_rank,), self.dtype),
+            "w_uq": normal_init(ks[1], (c.q_lora_rank, h * qk),
+                                c.q_lora_rank ** -0.5, self.dtype),
+            "w_dkv": normal_init(ks[2], (d, c.kv_lora_rank), std, self.dtype),
+            "kv_norm": jnp.ones((c.kv_lora_rank,), self.dtype),
+            "w_kr": normal_init(ks[3], (d, c.qk_rope_dim), std, self.dtype),
+            "w_uk": normal_init(ks[4], (c.kv_lora_rank, h * c.qk_nope_dim),
+                                c.kv_lora_rank ** -0.5, self.dtype),
+            "w_uv": normal_init(ks[5], (c.kv_lora_rank, h * c.v_head_dim),
+                                c.kv_lora_rank ** -0.5, self.dtype),
+            "wo": normal_init(ks[6], (h * c.v_head_dim, d),
+                              (h * c.v_head_dim) ** -0.5, self.dtype),
+        }
+        return p, {}
+
+    def _latents(self, params, x, positions):
+        c = self.cfg
+        b, t, _ = x.shape
+        cq = rms_norm(x @ params["w_dq"], params["q_norm"])
+        q = (cq @ params["w_uq"]).reshape(b, t, c.n_heads,
+                                          c.qk_nope_dim + c.qk_rope_dim)
+        q_nope, q_rope = q[..., :c.qk_nope_dim], q[..., c.qk_nope_dim:]
+        q_rope = apply_rope(q_rope, positions, c.rope_theta)
+        ckv = rms_norm(x @ params["w_dkv"], params["kv_norm"])     # (B,T,r)
+        k_rope = apply_rope((x @ params["w_kr"])[:, :, None, :],
+                            positions, c.rope_theta)[:, :, 0]      # (B,T,rd)
+        return q_nope, q_rope, ckv, k_rope
+
+    def apply(self, params, state, x, *, positions=None,
+              cache: Optional[Cache] = None, impl: str = "ref", **kw):
+        c = self.cfg
+        b, t, _ = x.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+        q_nope, q_rope, ckv, k_rope = self._latents(params, x, positions)
+
+        if cache is None:
+            # decompressed prefill/train path
+            k_nope = (ckv @ params["w_uk"]).reshape(b, t, c.n_heads, c.qk_nope_dim)
+            v = (ckv @ params["w_uv"]).reshape(b, t, c.n_heads, c.v_head_dim)
+            k = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(k_rope[:, :, None],
+                                          (b, t, c.n_heads, c.qk_rope_dim))],
+                axis=-1)
+            q = jnp.concatenate([q_nope, q_rope], axis=-1)
+            if t >= 2048:
+                y = chunked_sdpa(q, k, v)
+            else:
+                mask = causal_mask(positions, positions)
+                y = sdpa(q, k, v, mask, impl)
+            new_cache = None
+        else:
+            # absorbed decode path: attention in latent space.
+            # §Perf "mla_latent": the latent dim r is sharded over the model
+            # axis — the contraction becomes a partial-sum all-reduce of the
+            # (small) scores instead of gathers of the (huge) cache.
+            from repro.nn.sharding import axis_size, shard
+            lat = axis_size("mla_latent") > 1
+            new_cache = {
+                "ckv": jax.lax.dynamic_update_slice(
+                    cache["ckv"], ckv, (0, cache["pos"], 0)),
+                "kr": jax.lax.dynamic_update_slice(
+                    cache["kr"], k_rope, (0, cache["pos"], 0)),
+                "pos": cache["pos"] + t,
+            }
+            if lat:
+                new_cache["ckv"] = shard(new_cache["ckv"],
+                                         ("batch", None, "mla_latent"))
+                new_cache["kr"] = shard(new_cache["kr"],
+                                        ("batch", None, "mla_latent"))
+            w_uk = params["w_uk"].reshape(c.kv_lora_rank, c.n_heads,
+                                          c.qk_nope_dim)
+            q_lat = jnp.einsum("bthn,rhn->bthr", q_nope, w_uk)
+            if lat:
+                q_lat = shard(q_lat, ("batch", None, None, "mla_latent"))
+            scale = 1.0 / jnp.sqrt(c.qk_nope_dim + c.qk_rope_dim)
+            scores = (jnp.einsum("bthr,bsr->bhts", q_lat, new_cache["ckv"])
+                      + jnp.einsum("bthn,bsn->bhts", q_rope, new_cache["kr"]))
+            kpos = jnp.arange(new_cache["ckv"].shape[1])
+            mask = (kpos[None, None, None, :] < new_cache["pos"]) & \
+                   (kpos[None, None, None, :] <= positions[:, None, :, None])
+            scores = jnp.where(mask, scores * scale, -1e30)
+            p_att = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(x.dtype)
+            o_lat = jnp.einsum("bhts,bsr->bthr", p_att, new_cache["ckv"])
+            w_uv = params["w_uv"].reshape(c.kv_lora_rank, c.n_heads,
+                                          c.v_head_dim)
+            y = jnp.einsum("bthr,rhv->bthv", o_lat, w_uv)
+        y = y.reshape(b, t, -1) @ params["wo"]
+        if new_cache is not None:
+            return y, new_cache
+        return y, state
+
+
+def init_mla_cache(batch: int, capacity: int, cfg: MLAConfig,
+                   dtype=jnp.bfloat16) -> Cache:
+    return {"ckv": jnp.zeros((batch, capacity, cfg.kv_lora_rank), dtype),
+            "kr": jnp.zeros((batch, capacity, cfg.qk_rope_dim), dtype),
+            "pos": jnp.zeros((), jnp.int32)}

@@ -1,0 +1,186 @@
+"""Basic layers: Dense, Conv2d (NCHW), norms, pools, embeddings, SE block."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Module, kaiming, normal_init
+
+
+class Dense(Module):
+    def __init__(self, d_in: int, d_out: int, bias: bool = True,
+                 init_std: Optional[float] = None, dtype=jnp.float32):
+        self.d_in, self.d_out, self.bias = d_in, d_out, bias
+        self.init_std = init_std
+        self.dtype = dtype
+
+    def init(self, key):
+        if self.init_std is None:
+            w = kaiming(key, (self.d_in, self.d_out), fan_in=self.d_in,
+                        dtype=self.dtype)
+        else:
+            w = normal_init(key, (self.d_in, self.d_out), self.init_std,
+                            dtype=self.dtype)
+        p = {"w": w}
+        if self.bias:
+            p["b"] = jnp.zeros((self.d_out,), self.dtype)
+        return p, {}
+
+    def apply(self, params, state, x, **kw):
+        y = x @ params["w"]
+        if self.bias:
+            y = y + params["b"]
+        return y, state
+
+
+class Conv2d(Module):
+    """NCHW conv; weights (cout, cin/groups, kh, kw)."""
+
+    def __init__(self, cin: int, cout: int, kernel: int, stride: int = 1,
+                 padding: Optional[int] = None, groups: int = 1,
+                 bias: bool = True):
+        self.cin, self.cout, self.k = cin, cout, kernel
+        self.stride, self.groups, self.bias = stride, groups, bias
+        self.padding = kernel // 2 if padding is None else padding
+
+    def init(self, key):
+        shape = (self.cout, self.cin // self.groups, self.k, self.k)
+        p = {"w": kaiming(key, shape,
+                          fan_in=(self.cin // self.groups) * self.k * self.k)}
+        if self.bias:
+            p["b"] = jnp.zeros((self.cout,))
+        return p, {}
+
+    def apply(self, params, state, x, **kw):
+        y = jax.lax.conv_general_dilated(
+            x, params["w"], window_strides=(self.stride, self.stride),
+            padding=[(self.padding, self.padding)] * 2,
+            feature_group_count=self.groups,
+            dimension_numbers=("NCHW", "OIHW", "NCHW"))
+        if self.bias:
+            y = y + params["b"][None, :, None, None]
+        return y, state
+
+
+class BatchNorm2d(Module):
+    """NCHW batch norm with running stats in ``state``."""
+
+    def __init__(self, c: int, momentum: float = 0.9, eps: float = 1e-5):
+        self.c, self.momentum, self.eps = c, momentum, eps
+
+    def init(self, key):
+        p = {"scale": jnp.ones((self.c,)), "bias": jnp.zeros((self.c,))}
+        s = {"mean": jnp.zeros((self.c,)), "var": jnp.ones((self.c,))}
+        return p, s
+
+    def apply(self, params, state, x, train: bool = False, **kw):
+        if train:
+            mean = x.mean(axis=(0, 2, 3))
+            var = x.var(axis=(0, 2, 3))
+            m = self.momentum
+            new_state = {"mean": m * state["mean"] + (1 - m) * mean,
+                         "var": m * state["var"] + (1 - m) * var}
+        else:
+            mean, var = state["mean"], state["var"]
+            new_state = state
+        inv = jax.lax.rsqrt(var + self.eps)
+        y = (x - mean[None, :, None, None]) * inv[None, :, None, None]
+        y = y * params["scale"][None, :, None, None] + params["bias"][None, :, None, None]
+        return y, new_state
+
+
+class LayerNorm(Module):
+    def __init__(self, d: int, eps: float = 1e-5, bias: bool = True):
+        self.d, self.eps, self.bias = d, eps, bias
+
+    def init(self, key):
+        p = {"scale": jnp.ones((self.d,))}
+        if self.bias:
+            p["bias"] = jnp.zeros((self.d,))
+        return p, {}
+
+    def apply(self, params, state, x, **kw):
+        mu = x.mean(-1, keepdims=True)
+        var = ((x - mu) ** 2).mean(-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + self.eps) * params["scale"]
+        if self.bias:
+            y = y + params["bias"]
+        return y, state
+
+
+class RMSNorm(Module):
+    def __init__(self, d: int, eps: float = 1e-6):
+        self.d, self.eps = d, eps
+
+    def init(self, key):
+        return {"scale": jnp.ones((self.d,))}, {}
+
+    def apply(self, params, state, x, **kw):
+        return rms_norm(x, params["scale"], self.eps), state
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+class Embedding(Module):
+    def __init__(self, vocab: int, d: int, std: float = 0.02):
+        self.vocab, self.d, self.std = vocab, d, std
+
+    def init(self, key):
+        return {"table": normal_init(key, (self.vocab, self.d), self.std)}, {}
+
+    def apply(self, params, state, ids, **kw):
+        return jnp.take(params["table"], ids, axis=0), state
+
+
+def max_pool(x, kernel: int, stride: Optional[int] = None, padding: int = 0):
+    stride = stride or kernel
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, kernel, kernel),
+        (1, 1, stride, stride), [(0, 0), (0, 0)] + [(padding, padding)] * 2)
+
+
+def avg_pool(x, kernel: int, stride: Optional[int] = None, padding: int = 0):
+    stride = stride or kernel
+    s = jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 1, kernel, kernel),
+        (1, 1, stride, stride), [(0, 0), (0, 0)] + [(padding, padding)] * 2)
+    return s / (kernel * kernel)
+
+
+def global_avg_pool(x):
+    return x.mean(axis=(2, 3))
+
+
+class SqueezeExcite(Module):
+    def __init__(self, c: int, reduced: int):
+        self.c, self.reduced = c, reduced
+        self.fc1 = Dense(c, reduced)
+        self.fc2 = Dense(reduced, c)
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        return {"fc1": self.fc1.init(k1)[0], "fc2": self.fc2.init(k2)[0]}, {}
+
+    def apply(self, params, state, x, **kw):
+        s = global_avg_pool(x)
+        s, _ = self.fc1.apply(params["fc1"], {}, s)
+        s = jax.nn.silu(s)
+        s, _ = self.fc2.apply(params["fc2"], {}, s)
+        s = jax.nn.sigmoid(s)
+        return x * s[:, :, None, None], state
+
+
+# activation modules ---------------------------------------------------------
+
+def act_module(name: str):
+    from repro.nn.module import Lambda
+    fns = {"relu": jax.nn.relu, "silu": jax.nn.silu, "gelu": jax.nn.gelu,
+           "sigmoid": jax.nn.sigmoid, "swish": jax.nn.silu,
+           "identity": lambda x: x}
+    return Lambda(fns[name], name)

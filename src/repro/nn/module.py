@@ -1,0 +1,110 @@
+"""Minimal pytree module system (flax is unavailable offline).
+
+A :class:`Module` is a plain Python object holding *static* configuration.
+Parameters and mutable state (BatchNorm running stats) live in separate
+pytrees:
+
+    params, state = module.init(key)
+    y, new_state = module.apply(params, state, x, train=True)
+
+Stateless modules return ``{}`` for state and pass it through.  Everything
+is jit-friendly: ``apply`` is pure.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+State = Dict[str, Any]
+
+
+class Module:
+    """Base class; subclasses define ``init`` and ``apply``."""
+
+    def init(self, key: jax.Array) -> Tuple[Params, State]:
+        raise NotImplementedError
+
+    def apply(self, params: Params, state: State, *args, **kwargs):
+        raise NotImplementedError
+
+    # convenience for stateless use
+    def init_params(self, key: jax.Array) -> Params:
+        return self.init(key)[0]
+
+    def __call__(self, params: Params, state: State, *args, **kwargs):
+        return self.apply(params, state, *args, **kwargs)
+
+
+class Lambda(Module):
+    """Wrap a pure function as a (parameterless) module."""
+
+    def __init__(self, fn: Callable, name: str = "lambda"):
+        self.fn = fn
+        self.name = name
+
+    def init(self, key):
+        return {}, {}
+
+    def apply(self, params, state, x, **kwargs):
+        return self.fn(x), state
+
+
+class Sequential(Module):
+    """Compose modules; params/state are dicts keyed by layer name."""
+
+    def __init__(self, layers: Sequence[Tuple[str, Module]]):
+        names = [n for n, _ in layers]
+        assert len(set(names)) == len(names), f"duplicate layer names: {names}"
+        self.layers = list(layers)
+
+    def init(self, key):
+        params: Params = {}
+        state: State = {}
+        keys = jax.random.split(key, max(len(self.layers), 1))
+        for (name, layer), k in zip(self.layers, keys):
+            p, s = layer.init(k)
+            if p:
+                params[name] = p
+            if s:
+                state[name] = s
+        return params, state
+
+    def apply(self, params, state, x, **kwargs):
+        new_state: State = {}
+        for name, layer in self.layers:
+            p = params.get(name, {})
+            s = state.get(name, {})
+            x, s2 = layer.apply(p, s, x, **kwargs)
+            if s2:
+                new_state[name] = s2
+        return x, new_state
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params)
+               if hasattr(x, "size"))
+
+
+def cast_floats(tree, dtype):
+    def c(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(c, tree)
+
+
+# -- initializers -------------------------------------------------------------
+
+def kaiming(key, shape, fan_in: Optional[int] = None, dtype=jnp.float32):
+    fan = fan_in if fan_in is not None else shape[0] if len(shape) <= 2 else int(
+        jnp.prod(jnp.asarray(shape[1:])))
+    std = (2.0 / max(fan, 1)) ** 0.5
+    return jax.random.normal(key, shape, dtype) * std
+
+
+def normal_init(key, shape, std=0.02, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * std

@@ -1,0 +1,225 @@
+"""Mamba2 mixer (SSD — state-space duality, arXiv:2405.21060).
+
+Chunked SSD for train/prefill: sequence split into chunks of ``chunk``;
+intra-chunk terms are matmuls (MXU-friendly — this is the paper's "duality"),
+inter-chunk recurrence is a scan over chunk states.  Decode is the O(1)
+recurrent update against a carried state.
+
+Shapes follow the Mamba2 head convention:
+  x: (B, T, H, P)   heads x headdim,  d_inner = H*P
+  A: (H,)  dt: (B, T, H)  B/C: (B, T, N)  (single "group")
+State: (B, H, P, N).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import rms_norm
+from repro.nn.module import Module, normal_init
+
+
+def segsum(log_a: jnp.ndarray) -> jnp.ndarray:
+    """Stable 'segment sum': L[..., i, j] = sum_{j<k<=i} log_a[..., k].
+
+    Returns -inf for j > i (strictly causal decay matrix).
+    log_a: (..., T) -> (..., T, T).
+    """
+    t = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]          # sum over (j, i]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, D: Optional[jnp.ndarray] = None,
+                init_state: Optional[jnp.ndarray] = None):
+    """SSD forward. Returns (y, final_state).
+
+    x: (b, T, h, p), dt: (b, T, h) (already softplus'ed), A: (h,) (negative),
+    B, C: (b, T, n).
+    """
+    b, T, h, p = x.shape
+    n = B.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    dA = dtc * A                                           # (b,nc,c,h) log-decay
+    dA_cs = jnp.cumsum(dA, axis=2)                         # within-chunk cumsum
+
+    # 1) intra-chunk (diagonal block): Y_intra = (C B^T * L) (dt x)
+    L = jnp.exp(segsum(jnp.swapaxes(dA, 2, 3)))            # (b,nc,h,c,c)
+    CB = jnp.einsum("bzin,bzjn->bzij", Cc, Bc)             # (b,nc,c,c)
+    att = CB[:, :, None] * L                               # (b,nc,h,c,c)
+    xdt = xc * dtc[..., None]                              # (b,nc,c,h,p)
+    y_intra = jnp.einsum("bzhij,bzjhp->bzihp", att, xdt)
+
+    # 2) chunk states: S_z = sum_i exp(dA_cs[end]-dA_cs[i]) B_i (dt x)_i
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)    # (b,nc,c,h)
+    S = jnp.einsum("bzin,bzihp,bzih->bzhpn", Bc, xdt, decay_to_end)
+
+    # 3) inter-chunk recurrence over z: H_z = exp(sum dA_z) H_{z-1} + S_z
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])              # (b,nc,h)
+
+    def step(carry, inp):
+        s_z, g_z = inp                                     # (b,h,p,n), (b,h)
+        new = carry * g_z[..., None, None] + s_z
+        return new, carry                                  # emit state *before* chunk
+
+    h0 = init_state if init_state is not None else jnp.zeros((b, h, p, n), x.dtype)
+    S_t = jnp.moveaxis(S, 1, 0)                            # (nc,b,h,p,n)
+    g_t = jnp.moveaxis(chunk_decay, 1, 0)                  # (nc,b,h)
+    final, prev_states = jax.lax.scan(step, h0, (S_t, g_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)          # (b,nc,h,p,n)
+
+    # 4) contribution of the carried state to each position
+    state_decay = jnp.exp(dA_cs)                           # (b,nc,c,h)
+    y_inter = jnp.einsum("bzin,bzhpn,bzih->bzihp", Cc, prev_states, state_decay)
+
+    y = (y_intra + y_inter).reshape(b, T, h, p)
+    if D is not None:
+        y = y + x * D[None, None, :, None]
+    return y, final
+
+
+def ssd_step(state, x_t, dt_t, A, B_t, C_t, D: Optional[jnp.ndarray] = None):
+    """Single-token recurrence. state: (b,h,p,n); x_t: (b,h,p);
+    dt_t: (b,h); B_t, C_t: (b,n).  Returns (y_t, new_state)."""
+    dA = jnp.exp(dt_t * A)                                 # (b,h)
+    dBx = jnp.einsum("bn,bhp,bh->bhpn", B_t, x_t, dt_t)
+    new_state = state * dA[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C_t)
+    if D is not None:
+        y = y + x_t * D[None, :, None]
+    return y, new_state
+
+
+class Mamba2Mixer(Module):
+    """Full Mamba2 block mixer: in_proj -> causal conv -> SSD -> gated out."""
+
+    def __init__(self, d_model: int, d_state: int = 128, expand: int = 2,
+                 headdim: int = 64, conv_kernel: int = 4, chunk: int = 128,
+                 dtype=jnp.float32):
+        self.d = d_model
+        self.n = d_state
+        self.d_inner = expand * d_model
+        self.p = headdim
+        self.h = self.d_inner // headdim
+        self.ck = conv_kernel
+        self.chunk = chunk
+        self.dtype = dtype
+        # in_proj emits [z (gate), x, B, C, dt]
+        self.d_proj = 2 * self.d_inner + 2 * d_state + self.h
+
+    def init(self, key):
+        ks = jax.random.split(key, 4)
+        d = self.d
+        conv_ch = self.d_inner + 2 * self.n
+        p = {
+            "w_in": normal_init(ks[0], (d, self.d_proj), d ** -0.5, self.dtype),
+            "conv_w": normal_init(ks[1], (self.ck, conv_ch), 0.2, self.dtype),
+            "conv_b": jnp.zeros((conv_ch,), self.dtype),
+            "A_log": jnp.log(jnp.linspace(1.0, 16.0, self.h, dtype=self.dtype)),
+            "dt_bias": jnp.log(jnp.expm1(
+                jnp.linspace(1e-3, 1e-1, self.h, dtype=self.dtype))),
+            "D": jnp.ones((self.h,), self.dtype),
+            "norm": jnp.ones((self.d_inner,), self.dtype),
+            "w_out": normal_init(ks[2], (self.d_inner, d),
+                                 self.d_inner ** -0.5, self.dtype),
+        }
+        return p, {}
+
+    def _split(self, proj):
+        di, n, h = self.d_inner, self.n, self.h
+        z = proj[..., :di]
+        xBC = proj[..., di:di + di + 2 * n]
+        dt = proj[..., di + di + 2 * n:]
+        return z, xBC, dt
+
+    def apply(self, params, state, u, *, cache: Optional[Dict] = None,
+              impl: str = "ref", **kw):
+        """u: (B,T,d). cache: {'conv': (B,ck-1,ch), 'ssm': (B,h,p,n), 'pos'}.
+        Returns (y, cache') when cache is given else (y, state)."""
+        b, t, _ = u.shape
+        proj = u @ params["w_in"]
+        z, xBC, dt = self._split(proj)
+        dt = jax.nn.softplus(dt + params["dt_bias"])
+        A = -jnp.exp(params["A_log"])
+
+        if cache is None:
+            # causal depthwise conv over time
+            pad = jnp.zeros((b, self.ck - 1, xBC.shape[-1]), xBC.dtype)
+            xpad = jnp.concatenate([pad, xBC], axis=1)
+            xconv = sum(params["conv_w"][i] * xpad[:, i:i + t]
+                        for i in range(self.ck))
+            xBC = jax.nn.silu(xconv + params["conv_b"])
+            x = xBC[..., :self.d_inner].reshape(b, t, self.h, self.p)
+            B = xBC[..., self.d_inner:self.d_inner + self.n]
+            C = xBC[..., self.d_inner + self.n:]
+            pad_t = (-t) % self.chunk
+            if pad_t:
+                x = jnp.pad(x, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+                dt = jnp.pad(dt, ((0, 0), (0, pad_t), (0, 0)))
+                B = jnp.pad(B, ((0, 0), (0, pad_t), (0, 0)))
+                C = jnp.pad(C, ((0, 0), (0, pad_t), (0, 0)))
+            if impl == "pallas":
+                from repro.kernels import ops as kops
+                y, final = kops.ssd_scan(x, dt, A, B, C, chunk=self.chunk)
+            else:
+                y, final = ssd_chunked(x, dt, A, B, C, self.chunk,
+                                       D=params["D"])
+            if impl == "pallas":
+                y = y + x * params["D"][None, None, :, None]
+            y = y[:, :t].reshape(b, t, self.d_inner)
+            new_cache = None
+        elif t > 1:
+            # multi-token prefill into an existing cache
+            xpad = jnp.concatenate([cache["conv"], xBC], axis=1)
+            xconv = sum(params["conv_w"][i] * xpad[:, i:i + t]
+                        for i in range(self.ck))
+            new_conv = xpad[:, -(self.ck - 1):]
+            xBC2 = jax.nn.silu(xconv + params["conv_b"])
+            x = xBC2[..., :self.d_inner].reshape(b, t, self.h, self.p)
+            B = xBC2[..., self.d_inner:self.d_inner + self.n]
+            C = xBC2[..., self.d_inner + self.n:]
+            pad_t = (-t) % self.chunk
+            if pad_t:
+                x = jnp.pad(x, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+                dt = jnp.pad(dt, ((0, 0), (0, pad_t), (0, 0)))
+                B = jnp.pad(B, ((0, 0), (0, pad_t), (0, 0)))
+                C = jnp.pad(C, ((0, 0), (0, pad_t), (0, 0)))
+            y, final = ssd_chunked(x, dt, A, B, C, self.chunk, D=params["D"],
+                                   init_state=cache["ssm"].astype(x.dtype))
+            y = y[:, :t].reshape(b, t, self.d_inner)
+            new_cache = {"conv": new_conv, "ssm": final,
+                         "pos": cache["pos"] + t}
+        else:
+            conv_hist = jnp.concatenate([cache["conv"], xBC], axis=1)
+            xconv = jnp.einsum("kc,bkc->bc", params["conv_w"], conv_hist)
+            xBC1 = jax.nn.silu(xconv + params["conv_b"])[:, None]
+            x = xBC1[..., :self.d_inner].reshape(b, self.h, self.p)
+            B = xBC1[:, 0, self.d_inner:self.d_inner + self.n]
+            C = xBC1[:, 0, self.d_inner + self.n:]
+            y, new_ssm = ssd_step(cache["ssm"], x, dt[:, 0], A, B, C,
+                                  D=params["D"])
+            y = y.reshape(b, 1, self.d_inner)
+            new_cache = {"conv": conv_hist[:, 1:], "ssm": new_ssm,
+                         "pos": cache["pos"] + 1}
+
+        y = rms_norm(y * jax.nn.silu(z), params["norm"])
+        y = y @ params["w_out"]
+        return (y, new_cache) if new_cache is not None else (y, state)
+
+
+def init_ssm_cache(batch: int, mixer: Mamba2Mixer, dtype=jnp.float32) -> Dict:
+    ch = mixer.d_inner + 2 * mixer.n
+    return {"conv": jnp.zeros((batch, mixer.ck - 1, ch), dtype),
+            "ssm": jnp.zeros((batch, mixer.h, mixer.p, mixer.n), dtype),
+            "pos": jnp.zeros((), jnp.int32)}

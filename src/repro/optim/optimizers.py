@@ -1,0 +1,171 @@
+"""Optimizers (optax is unavailable offline): AdamW, Adafactor, SGD.
+
+API mirrors optax: ``opt.init(params) -> opt_state``;
+``opt.update(grads, opt_state, params) -> (updates, opt_state)``;
+``apply_updates(params, updates)``.
+
+Adafactor (factored second moments, no first moment by default) exists for
+the ≥70B configs where full Adam states don't fit HBM (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+
+
+def _to_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype),
+                                  params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gn
+
+
+def sgd(lr, momentum: float = 0.9, nesterov: bool = False) -> Optimizer:
+    sched = _to_schedule(lr)
+
+    def init(params):
+        return {"mu": jax.tree_util.tree_map(jnp.zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        mu = jax.tree_util.tree_map(lambda m, g: momentum * m + g,
+                                    state["mu"], grads)
+        if nesterov:
+            upd = jax.tree_util.tree_map(lambda m, g: momentum * m + g, mu,
+                                         grads)
+        else:
+            upd = mu
+        lr_t = sched(step)
+        upd = jax.tree_util.tree_map(lambda u: -lr_t * u, upd)
+        return upd, {"mu": mu, "step": step}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    sched = _to_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = sched(step)
+
+        def u(m_, v_, p):
+            upd = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay and p.ndim >= 2:       # no decay on norms/bias
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * upd).astype(jnp.float32)
+
+        updates = jax.tree_util.tree_map(u, m, v, params)
+        return updates, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr, min_dim_size_to_factor: int = 128,
+              decay_rate: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern, 2018)."""
+    sched = _to_schedule(lr)
+
+    def _factored(p) -> bool:
+        return (p.ndim >= 2 and p.shape[-1] >= min_dim_size_to_factor
+                and p.shape[-2] >= min_dim_size_to_factor)
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+        return {"slots": jax.tree_util.tree_map(one, params,
+                                                is_leaf=lambda x: hasattr(x, "ndim")),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay_rate)
+        lr_t = sched(step)
+
+        def one(g, slot, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if "vr" in slot:
+                vr = beta * slot["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * slot["vc"] + (1 - beta) * g2.mean(-2)
+                denom = jnp.maximum(vr.mean(-1, keepdims=True), eps)
+                pre = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+                upd = g32 * jax.lax.rsqrt(pre + eps)
+                new_slot = {"vr": vr, "vc": vc}
+            else:
+                v = beta * slot["v"] + (1 - beta) * g2
+                upd = g32 * jax.lax.rsqrt(v + eps)
+                new_slot = {"v": v}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + eps)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay and p.ndim >= 2:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return -lr_t * upd, new_slot
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_s = tdef.flatten_up_to(state["slots"])
+        flat_p = tdef.flatten_up_to(params)
+        outs = [one(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        updates = tdef.unflatten([o[0] for o in outs])
+        slots = tdef.unflatten([o[1] for o in outs])
+        return updates, {"slots": slots, "step": step}
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, lr, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    if name == "sgd":
+        return sgd(lr, **kw)
+    raise KeyError(f"unknown optimizer {name!r}")

@@ -1,0 +1,2 @@
+from repro.quantize.evaluate import (cnn_measured_accuracy, qat_finetune,
+                                     quantized_eval)

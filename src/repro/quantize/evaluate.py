@@ -1,0 +1,99 @@
+"""Model-level quantization: measured accuracy + QAT (§IV-C).
+
+``cnn_measured_accuracy`` builds the explorer's ``accuracy_fn``: for a cut
+vector it executes the *partitioned, fake-quantized* CNN on a validation set
+(weights at each platform's bit width, link activations quantized to the
+producer's width) and returns top-1 accuracy.
+
+``qat_finetune`` runs quantization-aware training: every forward quantizes
+the parameters with straight-through gradients, so the float master weights
+adapt to the quantization grid — the paper's accuracy-restoration step.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import QuantSpec, quantize_pytree
+from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
+from repro.serving.pipeline import PartitionedCNNRunner
+from repro.training.train_lib import cross_entropy
+
+
+def quantized_eval(model, params, state, x, y, spec: QuantSpec) -> float:
+    """Monolithic fake-quant eval (whole model at one bit width)."""
+    qp = quantize_pytree(params, spec)
+    logits, _ = model.apply(qp, state, jnp.asarray(x), train=False)
+    return float((logits.argmax(-1) == jnp.asarray(y)).mean())
+
+
+def cnn_measured_accuracy(model, params, state, schedule,
+                          val_x: np.ndarray, val_y: np.ndarray,
+                          quant_specs: Sequence[QuantSpec],
+                          ) -> Callable[[Sequence[int]], float]:
+    """accuracy_fn(cuts) for the explorer (2+-platform CNN systems)."""
+    model.to_graph()   # populate graph_boundaries
+    cache: Dict[Tuple[int, ...], float] = {}
+    xj, yj = jnp.asarray(val_x), jnp.asarray(val_y)
+
+    def measure(cuts) -> float:
+        key = tuple(int(c) for c in cuts)
+        if key in cache:
+            return cache[key]
+        block_cuts = []
+        for c in key:
+            if c < 0:
+                block_cuts.append(-1)
+            else:
+                block_cuts.append(model.cut_to_block(schedule, c))
+        # drop sentinel/duplicate cuts for the runner, remember platforms
+        n_blocks = len(model.blocks)
+        seg_specs = []
+        bounds = [-1] + block_cuts + [n_blocks - 1]
+        for k in range(len(quant_specs)):
+            a, b = bounds[k] + 1, bounds[k + 1]
+            if b >= a:
+                seg_specs.append((a, b, quant_specs[k]))
+        runner_cuts = [b for (a, b, _) in seg_specs[:-1]]
+        specs = [s for (_, _, s) in seg_specs]
+        runner = PartitionedCNNRunner(model, params, state, runner_cuts,
+                                      specs, link_quant=True)
+        logits, _ = runner.run(xj)
+        acc = float((logits.argmax(-1) == yj).mean())
+        cache[key] = acc
+        return acc
+
+    return measure
+
+
+def qat_finetune(model, params, state, spec: QuantSpec, optimizer: Optimizer,
+                 data_iter, steps: int = 50,
+                 classifier: bool = True):
+    """QAT loop: fake-quant in the forward, STE gradients to float masters."""
+
+    def loss_fn(p, s, x, y):
+        qp = quantize_pytree(p, spec)
+        logits, new_s = model.apply(qp, s, x, train=True)
+        if classifier:
+            loss = cross_entropy(logits, y)
+        else:
+            loss = cross_entropy(logits, y)
+        return loss, new_s
+
+    @jax.jit
+    def step_fn(p, opt_s, s, x, y):
+        grads, new_s = jax.grad(loss_fn, has_aux=True)(p, s, x, y)
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        updates, opt_s = optimizer.update(grads, opt_s, p)
+        return apply_updates(p, updates), opt_s, new_s
+
+    opt_state = optimizer.init(params)
+    for i in range(steps):
+        x, y = next(data_iter)
+        params, opt_state, state = step_fn(params, opt_state, state,
+                                           jnp.asarray(x), jnp.asarray(y))
+    return params, state

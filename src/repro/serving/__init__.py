@@ -1,0 +1,3 @@
+from repro.serving.engine import GenerationEngine
+from repro.serving.pipeline import (PartitionedCNNRunner, PartitionedLMRunner,
+                                    pipeline_report)

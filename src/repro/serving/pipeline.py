@@ -1,0 +1,157 @@
+"""Partitioned (multi-platform) inference execution — the paper's Definition 1
+acted out: stage k runs its layer segment at its platform's precision, the
+activation crossing each link is quantized to the producer's bit width.
+
+Used for (a) the measured-accuracy oracle of the explorer, (b) integration
+tests (partitioned ≡ monolithic when quantization is off), and (c) the
+end-to-end serving example.  On one CPU device stages run sequentially; the
+throughput model (Def. 4) comes from per-stage timings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import QuantSpec, quantize_pytree, quantize_tensor
+
+
+@dataclasses.dataclass
+class StageReport:
+    latency_s: List[float]
+    link_bytes: List[int]
+
+    def throughput(self, link_latency_s: Optional[List[float]] = None) -> float:
+        """Def. 4 with measured stage latencies."""
+        mods = [t for t in self.latency_s if t > 0]
+        if link_latency_s:
+            mods += [t for t in link_latency_s if t > 0]
+        return 1.0 / max(mods) if mods else 0.0
+
+
+def pipeline_report(stage_latencies: Sequence[float],
+                    link_latencies: Sequence[float]) -> Dict[str, float]:
+    lat = sum(stage_latencies) + sum(link_latencies)
+    th = 1.0 / max(list(stage_latencies) + list(link_latencies))
+    return {"latency_s": lat, "throughput": th}
+
+
+class PartitionedCNNRunner:
+    """Split a CNNModel at block boundaries across platforms."""
+
+    def __init__(self, model, params, state,
+                 cuts: Sequence[int],                 # block indices: stage k
+                 quant_specs: Optional[Sequence[Optional[QuantSpec]]] = None,
+                 link_quant: bool = True):
+        from repro.models.cnn.zoo import CNNModel
+        self.model = model
+        self.cuts = list(cuts)
+        n_stages = len(self.cuts) + 1
+        self.quant_specs = list(quant_specs) if quant_specs else [None] * n_stages
+        assert len(self.quant_specs) == n_stages
+        self.link_quant = link_quant
+        bounds = [0] + [c + 1 for c in self.cuts] + [len(model.blocks)]
+        self.stage_blocks = [model.blocks[a:b]
+                             for a, b in zip(bounds, bounds[1:])]
+        # per-stage (possibly weight-quantized) params/state
+        self.stage_params = []
+        self.stage_state = []
+        for blocks, spec in zip(self.stage_blocks, self.quant_specs):
+            p = {n: params[n] for n, _ in blocks if n in params}
+            s = {n: state[n] for n, _ in blocks if n in state}
+            if spec is not None:
+                p = quantize_pytree(p, spec)
+            self.stage_params.append(p)
+            self.stage_state.append(s)
+        self._stage_fns = [self._make_stage_fn(i)
+                           for i in range(len(self.stage_blocks))]
+
+    def _make_stage_fn(self, i):
+        blocks = self.stage_blocks[i]
+
+        def fn(params, state, x):
+            for n, b in blocks:
+                x, _ = b.apply(params.get(n, {}), state.get(n, {}), x,
+                               train=False)
+            return x
+        return jax.jit(fn)
+
+    def run(self, x, time_stages: bool = False) -> Tuple[jnp.ndarray, StageReport]:
+        lat, link_bytes = [], []
+        for i, fn in enumerate(self._stage_fns):
+            t0 = time.perf_counter()
+            x = fn(self.stage_params[i], self.stage_state[i], x)
+            if time_stages:
+                jax.block_until_ready(x)
+            lat.append(time.perf_counter() - t0)
+            if i < len(self._stage_fns) - 1:
+                spec = self.quant_specs[i]
+                nbytes = int(x.size * ((spec.bits // 8) if spec else 4))
+                link_bytes.append(nbytes)
+                if self.link_quant and spec is not None:
+                    x = quantize_tensor(x, spec)    # fake-quant over the link
+        return x, StageReport(lat, link_bytes)
+
+
+class PartitionedLMRunner:
+    """Split a scan-stacked DecoderLM at layer boundaries (pipeline stages).
+
+    Stage 0 owns the embedding, the last stage owns final norm + head.
+    This is the single-host reference for the multi-pod pipeline mode in
+    ``repro.launch.pipeline`` — outputs must match the monolithic model.
+    """
+
+    def __init__(self, model, params, cuts: Sequence[int],
+                 quant_specs: Optional[Sequence[Optional[QuantSpec]]] = None,
+                 link_quant: bool = False):
+        self.model = model
+        cfg = model.cfg
+        assert cfg.family in ("dense", "vlm", "audio"), \
+            "LM pipeline runner supports homogeneous scan stacks"
+        self.cuts = list(cuts)
+        n_stages = len(self.cuts) + 1
+        self.quant_specs = (list(quant_specs) if quant_specs
+                            else [None] * n_stages)
+        self.link_quant = link_quant
+        bounds = [0] + [c + 1 for c in self.cuts] + [cfg.n_layers]
+        self.ranges = list(zip(bounds, bounds[1:]))
+        self.params = params
+
+    def _stage_blocks(self, a, b):
+        return jax.tree_util.tree_map(lambda x: x[a:b],
+                                      self.params["blocks_dense"])
+
+    def forward(self, batch) -> Tuple[jnp.ndarray, StageReport]:
+        from repro.models.decoder import _scan_blocks
+        m, p = self.model, self.params
+        lat, link_bytes = [], []
+        t0 = time.perf_counter()
+        x, positions = m._embed(p, batch)
+        b, t, _ = x.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+        if m.cfg.mrope_sections is not None and positions.ndim == 2:
+            positions = jnp.stack([positions] * 3)
+        for si, (a, bnd) in enumerate(self.ranges):
+            blocks = self._stage_blocks(a, bnd)
+            spec = self.quant_specs[si]
+            if spec is not None:
+                blocks = quantize_pytree(blocks, spec)
+            x, _, _ = _scan_blocks(m.dense_block, blocks, x, positions)
+            jax.block_until_ready(x)
+            lat.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            if si < len(self.ranges) - 1:
+                nbytes = int(x.size * ((spec.bits // 8) if spec else 4))
+                link_bytes.append(nbytes)
+                if self.link_quant and spec is not None:
+                    x = quantize_tensor(x, spec)
+        from repro.nn.layers import rms_norm
+        x = rms_norm(x, p["final_norm"])
+        logits = m._head(p, x)
+        return logits, StageReport(lat, link_bytes)

@@ -1,0 +1,2 @@
+from repro.training.train_lib import (TrainState, cross_entropy,
+                                      make_train_step, lm_loss)

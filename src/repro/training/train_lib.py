@@ -1,0 +1,150 @@
+"""Training loop machinery: losses, train step factory, state container."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.optim.optimizers import (Optimizer, apply_updates,
+                                    clip_by_global_norm)
+
+IGNORE = -100
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  ignore: int = IGNORE) -> jnp.ndarray:
+    """Mean token CE; labels == ignore are masked out."""
+    mask = labels != ignore
+    safe = jnp.where(mask, labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+
+
+def lm_loss(cfg: ModelConfig, logits: jnp.ndarray, batch: Dict,
+            aux: Dict) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Next-token loss + aux terms (MoE balance, z-loss, MTP)."""
+    labels = batch["labels"]
+    if cfg.family == "audio":
+        # logits (B,T,K,V), labels (B,K,T)
+        loss = cross_entropy(logits, jnp.swapaxes(labels, 1, 2))
+    else:
+        loss = cross_entropy(logits, labels)
+    metrics = {"ce": loss}
+    total = loss
+    if "lb_loss" in aux:
+        total = total + 0.01 * aux["lb_loss"] + 1e-3 * aux["z_loss"]
+        metrics["lb_loss"] = aux["lb_loss"]
+        metrics["dropped"] = aux["dropped"]
+    if "mtp_logits" in aux:
+        mtp_labels = jnp.roll(labels, -1, axis=-1).at[..., -1].set(IGNORE)
+        mtp = cross_entropy(aux["mtp_logits"], mtp_labels)
+        total = total + 0.3 * mtp
+        metrics["mtp"] = mtp
+    metrics["loss"] = total
+    return total, metrics
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    model_state: Any
+    step: int = 0
+
+
+def make_train_step(model, cfg: ModelConfig, optimizer: Optimizer,
+                    clip_norm: Optional[float] = 1.0,
+                    impl: str = "ref", grad_accum: int = 1) -> Callable:
+    """Returns train_step(params, opt_state, model_state, batch) ->
+    (params, opt_state, model_state, metrics).  jit/pjit-ready.
+
+    grad_accum > 1 splits the global batch into that many microbatches and
+    accumulates gradients with a lax.scan — live activation memory scales
+    with the microbatch, letting the ≥70B train_4k configs fit HBM
+    (EXPERIMENTS.md §Perf / DESIGN.md §8)."""
+
+    def loss_fn(params, model_state, batch):
+        logits, aux = model.apply(params, model_state, batch, train=True,
+                                  impl=impl)
+        # stateful models (BN) return state through aux["state"] convention:
+        new_state = aux.pop("state", model_state) if isinstance(aux, dict) else model_state
+        total, metrics = lm_loss(cfg, logits, batch, aux)
+        return total, (metrics, new_state)
+
+    def compute_grads(params, model_state, batch):
+        if grad_accum <= 1:
+            return jax.grad(loss_fn, has_aux=True)(params, model_state,
+                                                   batch)
+        # reshape every batch-leading leaf to (A, B/A, ...)
+        def split(x):
+            b = x.shape[0]
+            assert b % grad_accum == 0, (b, grad_accum)
+            return x.reshape(grad_accum, b // grad_accum, *x.shape[1:])
+        micro = {}
+        for k, v in batch.items():
+            if k == "positions3":  # (3, B, T): batch is axis 1
+                b = v.shape[1]
+                micro[k] = jnp.moveaxis(
+                    v.reshape(3, grad_accum, b // grad_accum, *v.shape[2:]),
+                    1, 0)
+            else:
+                micro[k] = split(v)
+
+        def body(carry, mb):
+            grads_acc, loss_acc = carry
+            g, (m, _) = jax.grad(loss_fn, has_aux=True)(params, model_state,
+                                                        mb)
+            grads_acc = jax.tree_util.tree_map(
+                lambda a, b2: a + b2.astype(a.dtype), grads_acc, g)
+            return (grads_acc, loss_acc + m["loss"]), m
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, _), ms = jax.lax.scan(body, (zeros, jnp.zeros(())), micro)
+        grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+        metrics = jax.tree_util.tree_map(lambda x: x.mean(), ms)
+        return grads, (metrics, model_state)
+
+    def train_step(params, opt_state, model_state, batch):
+        grads, (metrics, new_state) = compute_grads(params, model_state,
+                                                    batch)
+        if clip_norm is not None:
+            grads, gn = clip_by_global_norm(grads, clip_norm)
+            metrics["grad_norm"] = gn
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, new_state, metrics
+
+    return train_step
+
+
+def make_classifier_train_step(model, optimizer: Optimizer,
+                               clip_norm: Optional[float] = 1.0) -> Callable:
+    """Train step for the CNN zoo (images, labels)."""
+
+    def loss_fn(params, state, x, y):
+        logits, new_state = model.apply(params, state, x, train=True)
+        loss = cross_entropy(logits, y)
+        acc = (logits.argmax(-1) == y).mean()
+        return loss, ({"loss": loss, "acc": acc}, new_state)
+
+    def step(params, opt_state, state, x, y):
+        grads, (metrics, new_state) = jax.grad(
+            loss_fn, has_aux=True)(params, state, x, y)
+        if clip_norm is not None:
+            grads, gn = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, new_state, metrics
+
+    return step
+
+
+def evaluate_classifier(model, params, state, x, y) -> float:
+    logits, _ = model.apply(params, state, x, train=False)
+    return float((logits.argmax(-1) == y).mean())

@@ -1,0 +1,12 @@
+import os
+import sys
+
+# tests run on the single real CPU device; the dry-run subprocess tests set
+# their own XLA_FLAGS (do NOT set host_platform_device_count globally here)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,85 @@
+"""End-to-end explorer: Fig. 1 pipeline on toy + real CNN graphs."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Constraints, Explorer, Platform, QuantSpec,
+                        SystemConfig, get_link)
+from repro.core.hwmodel import EYERISS_LIKE, SIMBA_LIKE
+from repro.core.nsga2 import dominates
+from repro.models.cnn.zoo import build_cnn
+
+
+def small_system(**kw):
+    return SystemConfig(
+        [Platform("A", EYERISS_LIKE, QuantSpec(bits=16)),
+         Platform("B", SIMBA_LIKE, QuantSpec(bits=8))],
+        [get_link("gige")])
+
+
+@pytest.fixture(scope="module")
+def squeezenet_result():
+    g = build_cnn("squeezenet11", in_hw=64).to_graph()
+    ex = Explorer(g, small_system(),
+                  objectives=("latency", "energy", "throughput", "accuracy"))
+    return ex.run(seed=0)
+
+
+def test_explorer_finds_candidates(squeezenet_result):
+    assert len(squeezenet_result.candidates) > 5
+    assert len(squeezenet_result.pareto) >= 1
+
+
+def test_pareto_mutually_nondominating(squeezenet_result):
+    res = squeezenet_result
+    F = np.array([ev.as_objectives(res.objectives) for ev in res.pareto])
+    for i in range(len(F)):
+        for j in range(len(F)):
+            assert not dominates(F[i], F[j])
+
+
+def test_selected_is_feasible_and_on_front(squeezenet_result):
+    res = squeezenet_result
+    assert res.selected.violation <= 0
+    assert any(res.selected.cuts == ev.cuts for ev in res.pareto)
+
+
+def test_memory_filter_respected():
+    g = build_cnn("squeezenet11", in_hw=64).to_graph()
+    # platform A with absurdly small memory -> few or no feasible prefixes
+    sys_small = SystemConfig(
+        [Platform("A", EYERISS_LIKE, QuantSpec(16), mem_capacity=40_000),
+         Platform("B", SIMBA_LIKE, QuantSpec(8))],
+        [get_link("gige")])
+    ex = Explorer(g, sys_small)
+    cands_small = ex.candidate_cuts()
+    ex_big = Explorer(g, small_system())
+    assert len(cands_small) < len(ex_big.candidate_cuts())
+    # every surviving candidate's prefix memory actually fits
+    for p in cands_small:
+        ev = ex.evaluator.evaluate([p])
+        assert ev.memory_bytes[0] <= 40_000
+
+
+def test_link_filter():
+    g = build_cnn("squeezenet11", in_hw=64).to_graph()
+    ex = Explorer(g, small_system(),
+                  constraints=Constraints(max_link_bytes=20_000))
+    for p in ex.candidate_cuts():
+        ev = ex.evaluator.evaluate([p])
+        assert ev.link_bytes <= 20_000
+
+
+def test_multi_cut_explorer_runs():
+    g = build_cnn("squeezenet11", in_hw=64).to_graph()
+    sys4 = SystemConfig(
+        [Platform("A0", EYERISS_LIKE, QuantSpec(16)),
+         Platform("A1", EYERISS_LIKE, QuantSpec(16)),
+         Platform("B0", SIMBA_LIKE, QuantSpec(8)),
+         Platform("B1", SIMBA_LIKE, QuantSpec(8))],
+        [get_link("gige")] * 3)
+    ex = Explorer(g, sys4, objectives=("latency", "energy", "bandwidth"))
+    res = ex.run(seed=0, pop_size=16, n_gen=8)
+    assert res.nsga is not None
+    assert len(res.pareto) >= 1
+    assert res.selected.violation <= 0

@@ -1,0 +1,119 @@
+"""Graph IR: topo sort, clean cuts, live sets, branch regions."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import layers as L
+from repro.core.graph import GraphError, LayerGraph, linearize
+
+
+def chain_graph(n=5):
+    g = LayerGraph(name="chain")
+    layers = [L.elementwise_layer(f"l{i}", L.RELU, (4, 8, 8)) for i in range(n)]
+    g.chain(layers)
+    return g
+
+
+def diamond_graph():
+    g = LayerGraph(name="diamond")
+    g.add(L.conv_layer("a", 3, 8, (8, 8), 3))
+    g.add(L.conv_layer("b1", 8, 8, (8, 8), 3), after=["a"])
+    g.add(L.conv_layer("b2", 8, 16, (8, 8), 3), after=["a"])
+    g.add(L.concat_layer("c", [(8, 8, 8), (16, 8, 8)]), after=["b1", "b2"])
+    g.add(L.elementwise_layer("d", L.RELU, (24, 8, 8)), after=["c"])
+    return g
+
+
+def test_topo_sort_chain():
+    g = chain_graph()
+    order = [l.name for l in g.topo_sort()]
+    assert order == [f"l{i}" for i in range(5)]
+
+
+def test_topo_sort_detects_cycle():
+    g = chain_graph(3)
+    g.edges.append(("l2", "l0"))
+    with pytest.raises(GraphError):
+        g.topo_sort()
+
+
+def test_clean_cuts_chain():
+    g = chain_graph(5)
+    sched = g.topo_sort()
+    assert g.clean_cuts(sched) == [0, 1, 2, 3]
+
+
+def test_clean_cuts_diamond():
+    g = diamond_graph()
+    sched = g.topo_sort()
+    cuts = g.clean_cuts(sched)
+    names = {sched[p].name for p in cuts}
+    # inside the parallel branches there is no single-tensor cut
+    assert names == {"a", "c"}
+    # multi-tensor cuts exist inside the diamond
+    all_cuts = dict(g.all_cuts(sched))
+    assert any(len(v) == 2 for v in all_cuts.values())
+
+
+def test_live_set_and_cut_bytes():
+    g = diamond_graph()
+    sched = g.topo_sort()
+    pos_a = [i for i, l in enumerate(sched) if l.name == "a"][0]
+    assert g.live_set(sched, pos_a) == ["a"]
+    nbytes = g.cut_bytes(sched, pos_a, bytes_per_elem=2)
+    assert nbytes == 8 * 8 * 8 * 2
+
+
+def test_min_memory_policy_valid():
+    g = diamond_graph()
+    sched = linearize(g, "min_memory")
+    assert g.validate_schedule(sched)
+
+
+def test_random_policy_valid_and_seeded():
+    g = diamond_graph()
+    s1 = linearize(g, "random", seed=3)
+    s2 = linearize(g, "random", seed=3)
+    assert [l.name for l in s1] == [l.name for l in s2]
+    assert g.validate_schedule(s1)
+
+
+# -- property tests ------------------------------------------------------------
+
+@st.composite
+def random_dag(draw):
+    n = draw(st.integers(3, 12))
+    g = LayerGraph(name="rand")
+    for i in range(n):
+        preds = []
+        if i > 0:
+            k = draw(st.integers(1, min(3, i)))
+            preds = sorted({draw(st.integers(0, i - 1)) for _ in range(k)})
+        g.add(L.elementwise_layer(f"n{i}", L.RELU, (2, 4, 4)),
+              after=[f"n{p}" for p in preds] or None)
+    return g
+
+
+@given(random_dag(), st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_topo_sort_respects_edges(g, seed):
+    sched = g.topo_sort(seed=seed)
+    assert g.validate_schedule(sched)
+
+
+@given(random_dag())
+@settings(max_examples=40, deadline=None)
+def test_clean_cut_live_sets_are_singletons(g):
+    sched = g.topo_sort()
+    for p in g.clean_cuts(sched):
+        live = g.live_set(sched, p)
+        assert live == [sched[p].name]
+
+
+@given(random_dag())
+@settings(max_examples=30, deadline=None)
+def test_cut_bytes_nonnegative_and_zero_only_at_sinks(g):
+    sched = g.topo_sort()
+    for p in range(len(sched) - 1):
+        assert g.cut_bytes(sched, p, 1.0) >= 0

@@ -1,0 +1,88 @@
+"""HLO loop-aware analysis + sharding-rule unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.launch.hlo_analysis import analyze_text, parse_computations
+from repro.launch.rules import param_spec, _divides
+from repro.nn.sharding import logical_to_spec, DEFAULT_RULES
+
+
+def test_scan_trip_count_multiplies_flops():
+    def f_scan(x, w):
+        y, _ = jax.lax.scan(lambda c, _: (c @ w, None), x, None, length=7)
+        return y
+
+    def f_single(x, w):
+        return x @ w
+
+    x = jnp.ones((64, 64))
+    w = jnp.ones((64, 64))
+    t_scan = jax.jit(f_scan).lower(x, w).compile().as_text()
+    t_one = jax.jit(f_single).lower(x, w).compile().as_text()
+    f1 = analyze_text(t_one).flops
+    f7 = analyze_text(t_scan).flops
+    assert f1 == pytest.approx(2 * 64 ** 3, rel=0.01)
+    assert f7 == pytest.approx(7 * f1, rel=0.05)
+
+
+def test_nested_scan_multiplies():
+    def f(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+
+    x = jnp.ones((32, 32))
+    w = jnp.ones((32, 32))
+    text = jax.jit(f).lower(x, w).compile().as_text()
+    flops = analyze_text(text).flops
+    assert flops == pytest.approx(15 * 2 * 32 ** 3, rel=0.05)
+
+
+def test_dot_flops_batched():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+    a = jnp.ones((4, 16, 32))
+    b = jnp.ones((4, 32, 8))
+    text = jax.jit(f).lower(a, b).compile().as_text()
+    assert analyze_text(text).flops == pytest.approx(2 * 4 * 16 * 32 * 8,
+                                                     rel=0.01)
+
+
+def test_param_spec_paths():
+    assert param_spec("blocks_dense/attn/wq", 3) == P(None, "data", "model")
+    assert param_spec("blocks_dense/moe/w_gate", 4) == P(None, "model",
+                                                         "data", None)
+    assert param_spec("embed", 2) == P("model", "data")
+    assert param_spec("blocks_dense/ln1", 2) == P(None, None)
+    # hybrid double-stacked (group, layer, d, proj)
+    assert param_spec("blocks/mixer/w_in", 4, hybrid=True) == \
+        P(None, None, "data", "model")
+    # shared (unstacked) block params have no layer axis
+    assert param_spec("shared/attn/wq", 2) == P("data", "model")
+    # dense mlp stacked (L, d, ff) vs moe experts stacked (L, E, d, ff)
+    assert param_spec("blocks_dense/mlp/w_gate", 3) == P(None, "data", "model")
+    assert param_spec("blocks_moe/moe/w_down", 4) == P(None, "model", None,
+                                                       "data")
+
+
+def test_divides_clears_nondivisible():
+    devs = np.array(jax.devices()[:1] * 1).reshape(1, 1)  # fake 1x1 mesh
+    mesh = Mesh(devs, ("data", "model"))
+    spec = _divides((10, 10), P("data", "model"), mesh)
+    assert spec == P("data", "model")   # 1 divides everything
+
+
+def test_logical_to_spec_dedup():
+    rules = dict(DEFAULT_RULES, batch=("pod", "data"), embed="data")
+    spec = logical_to_spec(("batch", "seq", "embed"), rules)
+    # 'data' already used by batch -> cleared from embed
+    assert spec[0] == ("pod", "data")
+    assert spec[2] is None

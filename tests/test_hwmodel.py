@@ -1,0 +1,73 @@
+"""Timeloop-lite mapper sanity: roofline lower bounds, arch ordering,
+segment additivity, energy positivity."""
+
+import pytest
+
+from repro.core import layers as L
+from repro.core.hwmodel import (EYERISS_LIKE, SIMBA_LIKE, TPU_V5E,
+                                evaluate_layer, evaluate_segment)
+from repro.core.hwmodel.mapper import decompose
+
+
+def big_conv():
+    return L.conv_layer("c", 64, 128, (56, 56), 3)
+
+
+def test_latency_at_least_roofline():
+    for arch in (EYERISS_LIKE, SIMBA_LIKE):
+        layer = big_conv()
+        cost = evaluate_layer(layer, arch)
+        lb = layer.macs / arch.peak_macs_per_s
+        assert cost.latency_s >= lb * 0.99
+
+
+def test_eyr_faster_smb_more_efficient():
+    """The §V-A platform trade-off: EYR (384 16-bit MACs) is faster, SMB
+    (128 int8 MACs) burns less energy per inference."""
+    layer = big_conv()
+    c_eyr = evaluate_layer(layer, EYERISS_LIKE)
+    c_smb = evaluate_layer(layer, SIMBA_LIKE)
+    assert c_eyr.latency_s < c_smb.latency_s
+    assert c_smb.energy_j < c_eyr.energy_j
+
+
+def test_tpu_much_faster():
+    layer = big_conv()
+    t = evaluate_layer(layer, TPU_V5E).latency_s
+    assert t < evaluate_layer(layer, SIMBA_LIKE).latency_s / 50
+
+
+def test_segment_additive():
+    layers = [big_conv(),
+              L.elementwise_layer("r", L.RELU, (128, 56, 56)),
+              L.gemm_layer("g", 128, 10)]
+    seg = evaluate_segment(layers, EYERISS_LIKE)
+    parts = [evaluate_layer(l, EYERISS_LIKE) for l in layers]
+    assert seg.latency_s == pytest.approx(sum(p.latency_s for p in parts))
+    assert seg.energy_j == pytest.approx(sum(p.energy_j for p in parts))
+
+
+def test_energy_positive_and_scales_with_work():
+    small = L.conv_layer("s", 8, 8, (8, 8), 3)
+    big = big_conv()
+    e_s = evaluate_layer(small, SIMBA_LIKE).energy_j
+    e_b = evaluate_layer(big, SIMBA_LIKE).energy_j
+    assert 0 < e_s < e_b
+
+
+def test_decompose_macs_match():
+    for layer in [big_conv(), L.gemm_layer("g", 256, 512),
+                  L.mlp_layer("m", 128, 512, 64),
+                  L.attention_layer("a", 128, 4, 2, 64),
+                  L.moe_layer("moe", 128, 64, 32, 8, 2, 1),
+                  L.ssm_layer("s", 128, 16, 64)]:
+        atoms, _ = decompose(layer)
+        atom_macs = sum(a.macs for a in atoms)
+        assert atom_macs == pytest.approx(layer.macs, rel=0.35), layer.name
+
+
+def test_batch_scales_latency():
+    layer = big_conv()
+    t1 = evaluate_layer(layer, SIMBA_LIKE, batch=1).latency_s
+    t4 = evaluate_layer(layer, SIMBA_LIKE, batch=4).latency_s
+    assert 3.0 * t1 < t4 < 5.0 * t1

@@ -1,0 +1,43 @@
+"""Link models: latency/energy monotonicity and GigE sanity."""
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.link import LINKS, get_link, gigabit_ethernet
+
+
+def test_gige_sanity():
+    link = gigabit_ethernet()
+    # 1 MB at ~1 Gbit/s with framing: between 8 and 12 ms
+    d = link.latency_s(1_000_000)
+    assert 0.008 < d < 0.012
+    assert link.energy_j(1_000_000) > 0
+    assert link.latency_s(0) == 0.0
+
+
+def test_effective_bw_below_line_rate():
+    link = gigabit_ethernet()
+    assert link.effective_bw(10_000_000) < link.rate_bps / 8
+
+
+def test_link_ordering():
+    # faster links first: ici (50 GB/s) < pcie4x4 (8 GB/s) < dci (6.25) < gige
+    n = 50_000_000
+    lat = {name: get_link(name).latency_s(n) for name in LINKS}
+    assert lat["ici"] < lat["pcie4x4"] < lat["dci"] < lat["gige"]
+
+
+@given(st.integers(1, 10 ** 9), st.integers(1, 10 ** 9))
+@settings(max_examples=50, deadline=None)
+def test_latency_monotone(a, b):
+    link = gigabit_ethernet()
+    lo, hi = min(a, b), max(a, b)
+    assert link.latency_s(lo) <= link.latency_s(hi)
+
+
+@given(st.sampled_from(sorted(LINKS)), st.integers(1, 10 ** 8))
+@settings(max_examples=40, deadline=None)
+def test_energy_nonnegative(name, nbytes):
+    link = get_link(name)
+    assert link.energy_j(nbytes) >= 0.0

@@ -1,0 +1,70 @@
+"""Definition 3 memory model + filters."""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import layers as L
+from repro.core.memory import (MemoryModel, prefix_feasible_limit,
+                               segment_memory, split_memory)
+
+
+def mk_layers(params, acts):
+    return [L.LayerInfo(f"l{i}", L.GEMM, (a,), (a,), params=p, macs=p)
+            for i, (p, a) in enumerate(zip(params, acts))]
+
+
+def test_definition3_exact():
+    # m = (sum params + max(a_j)) * b ; a_j = f_in + f_out = 2a
+    layers = mk_layers([10, 20, 30], [4, 8, 2])
+    m = segment_memory(layers, MemoryModel(bytes_per_param=2.0))
+    assert m == (60 + 16) * 2
+
+
+def test_shared_groups_counted_once():
+    layers = mk_layers([10, 10, 10], [1, 1, 1])
+    groups = {"l0": "g", "l2": "g"}
+    m = segment_memory(layers, MemoryModel(1.0), shared_groups=groups)
+    assert m == (10 + 10) + 2     # l0/l2 share; l1 own; act 2
+
+
+def test_split_memory_partitions():
+    layers = mk_layers([10, 20, 30, 40], [1, 2, 3, 4])
+    mm = [MemoryModel(1.0), MemoryModel(2.0)]
+    a, b = split_memory(layers, [1], mm)
+    assert a == (30 + 4) * 1
+    assert b == (70 + 8) * 2
+
+
+def test_prefix_feasible_limit_monotone():
+    layers = mk_layers([10] * 6, [1] * 6)
+    mm = MemoryModel(1.0)
+    lim = prefix_feasible_limit(layers, mm, capacity_bytes=35)
+    assert lim == 2            # 10+2, 20+2, 30+2 fit; 40+2 > 35
+    assert prefix_feasible_limit(layers, mm, 5) == -1
+
+
+@given(st.lists(st.tuples(st.integers(0, 1000), st.integers(1, 1000)),
+                min_size=1, max_size=20))
+@settings(max_examples=50, deadline=None)
+def test_memory_monotone_in_prefix(spec):
+    layers = mk_layers([p for p, _ in spec], [a for _, a in spec])
+    mm = MemoryModel(2.0)
+    prev = 0
+    for i in range(1, len(layers) + 1):
+        cur = segment_memory(layers[:i], mm)
+        assert cur >= prev
+        prev = cur
+
+
+@given(st.lists(st.tuples(st.integers(0, 100), st.integers(1, 50)),
+                min_size=2, max_size=12),
+       st.integers(0, 10))
+@settings(max_examples=50, deadline=None)
+def test_split_sums_to_at_least_segments(spec, cut_raw):
+    layers = mk_layers([p for p, _ in spec], [a for _, a in spec])
+    cut = min(cut_raw, len(layers) - 2)
+    mm = [MemoryModel(1.0), MemoryModel(1.0)]
+    mems = split_memory(layers, [cut], mm)
+    total_params = sum(p for p, _ in spec)
+    # params split exactly; activations peak per segment
+    assert sum(mems) >= total_params

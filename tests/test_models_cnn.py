@@ -1,0 +1,76 @@
+"""CNN zoo: forward shapes, graph fidelity (param/MAC counts vs published),
+partitioned execution equivalence."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.cnn.zoo import CNN_ZOO, build_cnn, reduced_cnn
+from repro.serving.pipeline import PartitionedCNNRunner
+
+KNOWN_PARAMS_M = {   # torchvision reference numbers (±5%)
+    "vgg16": 138.4, "resnet50": 25.6, "squeezenet11": 1.24,
+    "googlenet": 6.6, "regnetx_400mf": 5.2, "efficientnet_b0": 5.3,
+}
+
+
+@pytest.mark.parametrize("name", list(CNN_ZOO))
+def test_reduced_forward(name):
+    m = reduced_cnn(name)
+    p, s = m.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 32, 32))
+    y, _ = m.apply(p, s, x, train=True)
+    assert y.shape == (2, 10)
+    assert bool(jnp.isfinite(y).all())
+
+
+@pytest.mark.parametrize("name", list(CNN_ZOO))
+def test_full_graph_param_count(name):
+    g = build_cnn(name).to_graph()
+    params_m = g.total_params / 1e6
+    ref = KNOWN_PARAMS_M[name]
+    assert abs(params_m - ref) / ref < 0.06, (name, params_m, ref)
+
+
+@pytest.mark.parametrize("name", list(CNN_ZOO))
+def test_graph_has_usable_cuts(name):
+    g = build_cnn(name).to_graph()
+    sched = g.topo_sort()
+    cuts = g.clean_cuts(sched)
+    assert len(cuts) >= 10, f"{name}: only {len(cuts)} clean cuts"
+
+
+@pytest.mark.parametrize("cuts", [[2], [1, 4]])
+def test_partitioned_equals_monolithic(cuts):
+    m = reduced_cnn("squeezenet11")
+    p, s = m.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 3, 32, 32))
+    y_mono, _ = m.apply(p, s, x, train=False)
+    runner = PartitionedCNNRunner(m, p, s, cuts,
+                                  quant_specs=[None] * (len(cuts) + 1))
+    y_part, report = runner.run(x)
+    assert float(jnp.abs(y_part - y_mono).max()) == 0.0
+    assert len(report.latency_s) == len(cuts) + 1
+
+
+def test_quantized_partition_changes_output_slightly():
+    from repro.core.quant import QuantSpec
+    m = reduced_cnn("squeezenet11")
+    p, s = m.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 3, 32, 32))
+    y_mono, _ = m.apply(p, s, x, train=False)
+    runner = PartitionedCNNRunner(m, p, s, [4],
+                                  [QuantSpec(bits=16), QuantSpec(bits=8)])
+    y_q, _ = runner.run(x)
+    diff = float(jnp.abs(y_q - y_mono).max())
+    assert 0 < diff < 2.0      # perturbed but not destroyed
+
+
+def test_cut_to_block_mapping():
+    m = build_cnn("squeezenet11", in_hw=64)
+    g = m.to_graph()
+    sched = g.topo_sort()
+    # cutting at the last node of block i must map to block i
+    for bi, node in m.graph_boundaries[:5]:
+        pos = [i for i, l in enumerate(sched) if l.name == node][0]
+        assert m.cut_to_block(sched, pos) == bi

@@ -1,0 +1,82 @@
+"""NSGA-II invariants + convergence on a known discrete front."""
+
+import numpy as np
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.nsga2 import (crowding_distance, dominates,
+                              fast_non_dominated_sort, nsga2)
+
+
+def test_dominates():
+    assert dominates(np.array([1, 1]), np.array([2, 2]))
+    assert dominates(np.array([1, 2]), np.array([2, 2]))
+    assert not dominates(np.array([1, 3]), np.array([2, 2]))
+    assert not dominates(np.array([2, 2]), np.array([2, 2]))
+
+
+@given(st.lists(st.tuples(st.floats(0, 10), st.floats(0, 10)),
+                min_size=2, max_size=40))
+@settings(max_examples=50, deadline=None)
+def test_front0_mutually_nondominating(pts):
+    F = np.array(pts)
+    fronts = fast_non_dominated_sort(F)
+    f0 = fronts[0]
+    for i in f0:
+        for j in f0:
+            assert not dominates(F[i], F[j])
+
+
+@given(st.lists(st.tuples(st.floats(0, 10), st.floats(0, 10)),
+                min_size=3, max_size=30))
+@settings(max_examples=40, deadline=None)
+def test_domination_implies_earlier_front(pts):
+    F = np.array(pts)
+    fronts = fast_non_dominated_sort(F)
+    rank = {}
+    for r, fr in enumerate(fronts):
+        for i in fr:
+            rank[int(i)] = r
+    n = len(F)
+    for i in range(n):
+        for j in range(n):
+            if dominates(F[i], F[j]):
+                assert rank[i] < rank[j]
+
+
+def test_crowding_boundary_infinite():
+    F = np.array([[0.0, 3.0], [1.0, 2.0], [2.0, 1.0], [3.0, 0.0]])
+    d = crowding_distance(F)
+    assert np.isinf(d[0]) and np.isinf(d[3])
+    assert np.isfinite(d[1]) and np.isfinite(d[2])
+
+
+def test_nsga2_converges_discrete_front():
+    """min (x/50, (50-x)/50) over integers: whole range is the true front;
+    NSGA-II must find a spread of non-dominated points + respect constraint
+    x >= 10."""
+    def evaluate(X):
+        x = X[:, 0].astype(float)
+        F = np.stack([x / 50.0, (50.0 - x) / 50.0], axis=1)
+        CV = np.maximum(0.0, 10.0 - x) / 10.0
+        return F, CV
+
+    res = nsga2(evaluate, n_var=1, lower=0, upper=50, pop_size=24,
+                n_gen=30, seed=1)
+    xs = res.pareto_X[:, 0]
+    assert (xs >= 10).all()
+    assert len(np.unique(xs)) >= 5       # decent spread
+    # all returned points feasible & mutually non-dominating
+    F, CV = evaluate(res.pareto_X)
+    assert (CV <= 0).all()
+
+
+def test_nsga2_multi_cut_sorted():
+    def evaluate(X):
+        F = np.stack([X.sum(1).astype(float), (X.max(1) - X.min(1)).astype(float)],
+                     axis=1)
+        return F, np.zeros(len(X))
+    res = nsga2(evaluate, n_var=3, lower=0, upper=20, pop_size=16, n_gen=10,
+                seed=0)
+    for x in res.X:
+        assert list(x) == sorted(x)

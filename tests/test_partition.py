@@ -1,0 +1,96 @@
+"""Partition evaluation: Definitions 1-4 + constraint violations."""
+
+import pytest
+
+from repro.core import layers as L
+from repro.core.graph import LayerGraph
+from repro.core.hwmodel import EYERISS_LIKE, SIMBA_LIKE
+from repro.core.link import gigabit_ethernet, get_link
+from repro.core.partition import (Constraints, PartitionEvaluator, Platform,
+                                  SystemConfig, single_platform_eval)
+from repro.core.quant import QuantSpec
+
+
+def toy_system(n_platforms=2):
+    plats = []
+    for i in range(n_platforms):
+        arch = EYERISS_LIKE if i % 2 == 0 else SIMBA_LIKE
+        plats.append(Platform(f"p{i}", arch,
+                              QuantSpec(bits=arch.bits)))
+    return SystemConfig(plats, [gigabit_ethernet()] * (n_platforms - 1))
+
+
+def toy_eval(n_layers=6, n_platforms=2, c=64, hw=56):
+    g = LayerGraph(name="toy")
+    layers = []
+    for i in range(n_layers):
+        layers.append(L.conv_layer(f"conv{i}", c, c, (hw, hw), 3))
+    g.chain(layers)
+    sched = g.topo_sort()
+    return PartitionEvaluator(g, sched, toy_system(n_platforms))
+
+
+def test_throughput_definition4():
+    ev = toy_eval().evaluate([2])
+    # throughput = 1 / max(stage, link latencies)
+    mods = [t for t in ev.stage_latency_s if t > 0] + \
+           [t for t in ev.link_latency_s if t > 0]
+    assert ev.throughput == pytest.approx(1.0 / max(mods))
+
+
+def test_latency_is_sum():
+    ev = toy_eval().evaluate([2])
+    assert ev.latency_s == pytest.approx(
+        sum(ev.stage_latency_s) + sum(ev.link_latency_s))
+
+
+def test_single_platform_has_no_link():
+    evaluator = toy_eval()
+    for i in range(2):
+        ev = single_platform_eval(evaluator, i)
+        assert ev.link_bytes == 0
+        assert ev.n_partitions == 1
+        assert ev.stage_latency_s[i] > 0
+
+
+def test_cut_at_end_means_platform_a_only():
+    evaluator = toy_eval(n_layers=5)
+    ev = evaluator.evaluate([4])
+    assert ev.stage_latency_s[1] == 0.0
+    assert ev.link_bytes == 0
+
+
+def test_pipelining_beats_single_platform_throughput():
+    """A balanced cut on two platforms must beat the slower platform alone
+    (the paper's headline effect)."""
+    evaluator = toy_eval(n_layers=8)
+    best_single = max(single_platform_eval(evaluator, i).throughput
+                      for i in range(2))
+    best_cut = max(evaluator.evaluate([p]).throughput for p in range(7))
+    assert best_cut > best_single
+
+
+def test_memory_violation_flagged():
+    g = LayerGraph(name="big")
+    g.chain([L.gemm_layer("fc", 4096, 100_000)])   # ~0.4B params
+    sched = g.topo_sort()
+    sys2 = toy_system()
+    ev = PartitionEvaluator(g, sched, sys2).evaluate([0])
+    assert ev.violation > 0     # 16-bit 0.4B params >> 64 MiB
+
+
+def test_constraint_bandwidth():
+    evaluator = toy_eval()
+    cons = Constraints(max_link_bytes=10)
+    ev = evaluator.evaluate([2], cons)
+    assert ev.violation > 0
+
+
+def test_four_platform_chain():
+    evaluator = toy_eval(n_layers=8, n_platforms=4)
+    ev = evaluator.evaluate([1, 3, 5])
+    assert ev.n_partitions == 4
+    assert len(ev.memory_bytes) == 4
+    # skipping middle platforms via repeated cuts
+    ev2 = evaluator.evaluate([1, 1, 1])
+    assert ev2.n_partitions == 2

@@ -1,0 +1,71 @@
+"""Quantization: error bounds, STE gradients, calibration, observers."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.quant import (ActObserver, QuantSpec, calibrate,
+                              compute_scale_zp, fake_quant, quantization_error,
+                              quantize_pytree, quantize_tensor)
+
+
+def test_roundtrip_error_bound():
+    spec = QuantSpec(bits=8)
+    x = jnp.linspace(-1.0, 1.0, 1001)
+    xq = quantize_tensor(x, spec)
+    step = 2.0 / 254  # symmetric range/qmax steps
+    assert float(jnp.abs(xq - x).max()) <= step / 2 + 1e-6
+
+
+def test_more_bits_less_error():
+    x = jax.random.normal(jax.random.PRNGKey(0), (512,))
+    errs = [quantization_error(x, QuantSpec(bits=b)) for b in (4, 8, 16)]
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_ste_gradient_identity_in_range():
+    spec = QuantSpec(bits=8)
+    scale, zp = jnp.asarray(0.01), jnp.asarray(0.0)
+    g = jax.grad(lambda x: fake_quant(x, scale, zp, spec).sum())(jnp.asarray(0.5))
+    assert float(g) == 1.0
+
+
+def test_per_channel_beats_per_tensor():
+    key = jax.random.PRNGKey(1)
+    # channels with very different ranges
+    w = jax.random.normal(key, (8, 64)) * jnp.logspace(-2, 1, 8)[:, None]
+    e_pt = quantization_error(w, QuantSpec(bits=8))
+    e_pc = quantization_error(w, QuantSpec(bits=8, per_channel=True,
+                                           channel_axis=0))
+    assert e_pc < e_pt
+
+
+def test_observer_accumulates():
+    spec = QuantSpec(bits=8)
+    obs = ActObserver(spec)
+    obs.update(jnp.asarray([-1.0, 1.0]))
+    obs.update(jnp.asarray([-3.0, 0.5]))
+    assert float(obs.lo) == -3.0 and float(obs.hi) == 1.0
+    q = obs.quantizer()
+    y = q(jnp.asarray([2.9]))
+    assert abs(float(y[0]) - 2.9) < 0.05
+
+
+def test_quantize_pytree_skips_1d():
+    params = {"w": jnp.linspace(-1, 1, 16).reshape(4, 4) * 0.77,
+              "b": jnp.linspace(-1, 1, 4) * 0.77}
+    out = quantize_pytree(params, QuantSpec(bits=4))
+    assert float(jnp.abs(out["b"] - params["b"]).max()) == 0.0
+    assert float(jnp.abs(out["w"] - params["w"]).max()) > 0.0
+
+
+@given(st.integers(4, 16), st.floats(0.1, 100.0))
+@settings(max_examples=30, deadline=None)
+def test_error_bounded_by_step(bits, scale_mag):
+    spec = QuantSpec(bits=bits)
+    x = jnp.linspace(-scale_mag, scale_mag, 257)
+    xq = quantize_tensor(x, spec)
+    step = 2 * scale_mag / (2 ** (bits - 1) - 1)
+    assert float(jnp.abs(xq - x).max()) <= step / 2 + 1e-5 * scale_mag

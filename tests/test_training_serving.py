@@ -1,0 +1,133 @@
+"""Training loop, QAT, serving engine, LM pipeline runner, checkpointing."""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore, save
+from repro.core.quant import QuantSpec
+from repro.data.synthetic import (SyntheticImages, SyntheticTokens,
+                                  batch_iterator, make_batch_for)
+from repro.models.cnn.zoo import reduced_cnn
+from repro.models.registry import build_model, get_config
+from repro.optim.optimizers import adamw, adafactor, get_optimizer
+from repro.quantize.evaluate import qat_finetune, quantized_eval
+from repro.serving.engine import GenerationEngine
+from repro.serving.pipeline import PartitionedLMRunner
+from repro.training.train_lib import (make_classifier_train_step,
+                                      make_train_step, evaluate_classifier)
+
+
+def test_lm_loss_decreases():
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    params, state = model.init(jax.random.PRNGKey(0))
+    opt = adamw(1e-3)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(model, cfg, opt))
+    batch = {k: jnp.asarray(v) for k, v in make_batch_for(cfg, 4, 32).items()}
+    losses = []
+    for _ in range(8):
+        params, opt_state, state, m = step(params, opt_state, state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.7
+
+
+def test_adafactor_trains():
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    params, state = model.init(jax.random.PRNGKey(0))
+    opt = adafactor(1e-2)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(model, cfg, opt))
+    batch = {k: jnp.asarray(v) for k, v in make_batch_for(cfg, 4, 32).items()}
+    l0 = None
+    for _ in range(8):
+        params, opt_state, state, m = step(params, opt_state, state, batch)
+        l0 = l0 or float(m["loss"])
+    assert float(m["loss"]) < l0
+
+
+def _train_small_cnn(steps=300):
+    from repro.optim.schedules import warmup_cosine
+    m = reduced_cnn("squeezenet11")
+    p, s = m.init(jax.random.PRNGKey(0))
+    ds = SyntheticImages(noise=0.15)
+    opt = adamw(warmup_cosine(2e-3, 30, steps))
+    os_ = opt.init(p)
+    step = jax.jit(make_classifier_train_step(m, opt))
+    for i in range(steps):
+        x, y = ds.batch(64, i)
+        p, os_, s, _ = step(p, os_, s, jnp.asarray(x), jnp.asarray(y))
+    return m, p, s, ds
+
+
+@pytest.fixture(scope="module")
+def trained_cnn():
+    return _train_small_cnn()
+
+
+def test_cnn_learns(trained_cnn):
+    m, p, s, ds = trained_cnn
+    vx, vy = ds.eval_set(256)
+    acc = evaluate_classifier(m, p, s, jnp.asarray(vx), jnp.asarray(vy))
+    assert acc > 0.30    # chance = 0.10
+
+
+def test_quantization_hurts_and_qat_recovers(trained_cnn):
+    m, p, s, ds = trained_cnn
+    vx, vy = ds.eval_set(256)
+    acc_fp = evaluate_classifier(m, p, s, jnp.asarray(vx), jnp.asarray(vy))
+    spec = QuantSpec(bits=4)    # aggressive quantization
+    acc_q = quantized_eval(m, p, s, vx, vy, spec)
+    assert acc_q <= acc_fp + 0.02
+    # QAT restores some accuracy (paper §IV-C)
+    it = batch_iterator(ds, 64, start_seed=500)
+    p2, s2 = qat_finetune(m, p, s, spec, adamw(5e-4), it, steps=40)
+    acc_qat = quantized_eval(m, p2, s2, vx, vy, spec)
+    assert acc_qat >= acc_q - 0.02
+    assert acc_qat >= acc_q * 0.9
+
+
+def test_generation_engine():
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    prompts = SyntheticTokens(cfg.vocab).batch(3, 8, seed=0)[:, :-1]
+    eng = GenerationEngine(model, params, max_seq=40, cache_dtype=jnp.float32)
+    res = eng.generate(prompts, max_new=5)
+    assert res.tokens.shape == (3, 5)
+    assert (res.tokens >= 0).all() and (res.tokens < cfg.vocab).all()
+
+
+def test_lm_pipeline_runner_equivalence():
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    params, state = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.asarray(
+        SyntheticTokens(cfg.vocab).batch(2, 16, seed=1)[:, :-1])}
+    mono, _ = model.apply(params, state, batch, train=False)
+    runner = PartitionedLMRunner(model, params, cuts=[0])
+    piped, report = runner.forward(batch)
+    np.testing.assert_allclose(np.asarray(piped), np.asarray(mono),
+                               rtol=1e-5, atol=1e-5)
+    assert len(report.latency_s) == 2
+
+
+def test_checkpoint_roundtrip_with_opt_state():
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    opt = adamw(1e-3)
+    opt_state = opt.init(params)
+    with tempfile.TemporaryDirectory() as d:
+        save(d, {"params": params, "opt": opt_state}, step=7)
+        assert latest_step(d) == 7
+        back = restore(d, {"params": params, "opt": opt_state})
+        for a, b in zip(jax.tree_util.tree_leaves(back),
+                        jax.tree_util.tree_leaves(
+                            {"params": params, "opt": opt_state})):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

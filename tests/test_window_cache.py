@@ -1,0 +1,51 @@
+"""Sliding-window ring cache: decode past the wrap-around must match a
+full-cache reference — the corner that long_500k dense decode lives on."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import build_model, get_config
+
+
+def test_ring_cache_matches_full_cache_after_wrap():
+    cfg = get_config("smollm-360m").reduced()          # window=64 reduced
+    window = cfg.window
+    assert window is not None
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    n_tokens = window + 24                              # force wrap-around
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, n_tokens), 0,
+                              cfg.vocab)
+
+    # windowed model with a ring cache of exactly `window` slots
+    ring = model.init_caches(1, capacity=n_tokens + 8, dtype=jnp.float32)
+    # init_caches clamps capacity to window for windowed configs
+    cap = jax.tree_util.tree_leaves(ring)[0].shape  # sanity handle
+    ring_logits = []
+    for i in range(n_tokens):
+        lg, ring = model.decode_step(params, ring, {"tokens": toks[:, i:i+1]})
+        ring_logits.append(lg[:, 0])
+
+    # reference: full-capacity cache on a window-masked model — the mask
+    # logic (not the ring storage) defines the semantics
+    cfg_full = dataclasses.replace(cfg)
+    model_full = build_model(cfg_full)
+    # force a big cache by pretending there's no window, then apply the
+    # window via the full forward (teacher forcing) which masks correctly
+    full_logits, _ = model_full.apply(params, {}, {"tokens": toks},
+                                      train=False)
+    ring_stack = jnp.stack(ring_logits, axis=1)
+    np.testing.assert_allclose(np.asarray(ring_stack),
+                               np.asarray(full_logits),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_window_cache_capacity_clamped():
+    cfg = get_config("qwen3-14b").reduced()
+    model = build_model(cfg)
+    caches = model.init_caches(2, capacity=10_000, dtype=jnp.float32)
+    k = caches["dense"]["k"]
+    assert k.shape[2] == cfg.window     # (L, B, S=window, kv, hd)
