@@ -1,0 +1,108 @@
+"""Search-path throughput benchmark: candidate evaluations/second through
+the scalar ``PartitionEvaluator.evaluate`` loop vs the vectorized
+``evaluate_batch`` path, plus a wall-clock NSGA-II-scale explorer run.
+
+This is the hot path of the whole framework (§IV, Table I): search quality
+scales with how many placements we can afford to score, so regressions here
+silently shrink the reachable population/generation budget.
+
+  PYTHONPATH=src python benchmarks/explorer_bench.py            # full
+  PYTHONPATH=src python benchmarks/explorer_bench.py --quick    # CI mode
+  ... --min-speedup 5    # exit non-zero below this batch/scalar ratio
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import chain_system, csv_row
+from repro.core import Explorer
+from repro.core.partition import Constraints, PartitionEvaluator
+from repro.models.cnn.zoo import build_cnn
+
+
+def random_cut_matrix(rng, n: int, n_cuts: int, length: int) -> np.ndarray:
+    return np.sort(rng.integers(-1, length, size=(n, n_cuts)), axis=1)
+
+
+def bench_eval_paths(model: str = "squeezenet11", n_candidates: int = 2048,
+                     scalar_cap: int = 256):
+    """Score the same random candidate matrix through both paths."""
+    graph = build_cnn(model, in_hw=64).to_graph()
+    system = chain_system()                       # 4 platforms -> n_cuts = 3
+    ex = Explorer(graph, system)
+    evaluator: PartitionEvaluator = ex.evaluator
+    cons = Constraints(max_link_bytes=10_000_000)
+    rng = np.random.default_rng(0)
+    cuts = random_cut_matrix(rng, n_candidates, system.n_cuts,
+                             len(ex.schedule))
+
+    n_scalar = min(scalar_cap, n_candidates)
+    t0 = time.perf_counter()
+    for row in cuts[:n_scalar]:
+        evaluator.evaluate(row, cons)
+    scalar_dt = time.perf_counter() - t0
+    scalar_rate = n_scalar / scalar_dt
+
+    evaluator.evaluate_batch(cuts[:8], cons)      # warm lazy tables
+    t0 = time.perf_counter()
+    evaluator.evaluate_batch(cuts, cons)
+    batch_dt = time.perf_counter() - t0
+    batch_rate = n_candidates / batch_dt
+
+    speedup = batch_rate / scalar_rate
+    print(csv_row("explorer_scalar_evals_per_s", 1e6 / scalar_rate,
+                  f"rate={scalar_rate:.0f}/s"))
+    print(csv_row("explorer_batch_evals_per_s", 1e6 / batch_rate,
+                  f"rate={batch_rate:.0f}/s"))
+    print(csv_row("explorer_batch_speedup", 0.0, f"x{speedup:.1f}"))
+    return speedup
+
+
+def bench_nsga_run(model: str = "squeezenet11", pop_size: int = 128,
+                   n_gen: int = 20):
+    """End-to-end explorer run at NSGA-II scale (pop >= 128, n_cuts = 3)."""
+    graph = build_cnn(model, in_hw=64).to_graph()
+    ex = Explorer(graph, chain_system())
+    t0 = time.perf_counter()
+    res = ex.run(seed=0, use_nsga=True, pop_size=pop_size, n_gen=n_gen)
+    dt = time.perf_counter() - t0
+    evals = pop_size * (n_gen + 1)
+    print(csv_row("explorer_nsga_run", dt * 1e6,
+                  f"pop={pop_size};gens={n_gen};"
+                  f"evals_per_s={evals / dt:.0f};"
+                  f"pareto={len(res.pareto)}"))
+    return dt
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workload for CI")
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="fail when batch/scalar speedup drops below this")
+    args = ap.parse_args()
+
+    if args.quick:
+        speedup = bench_eval_paths(n_candidates=1024, scalar_cap=128)
+        bench_nsga_run(pop_size=128, n_gen=8)
+    else:
+        speedup = bench_eval_paths(n_candidates=8192, scalar_cap=512)
+        bench_nsga_run(pop_size=256, n_gen=30)
+
+    if args.min_speedup is not None and speedup < args.min_speedup:
+        print(f"FAIL: batch speedup x{speedup:.1f} < "
+              f"required x{args.min_speedup:.1f}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

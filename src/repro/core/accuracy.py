@@ -19,6 +19,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.layers import LayerInfo
 from repro.core.partition import SystemConfig
 
@@ -33,6 +35,7 @@ class ProxyAccuracy:
     def __post_init__(self):
         total = sum(max(l.params, 1) for l in self.schedule) or 1
         self._weight = [max(l.params, 1) / total for l in self.schedule]
+        self._weight_prefix = np.concatenate([[0.0], np.cumsum(self._weight)])
 
     @staticmethod
     def _noise(bits: int) -> float:
@@ -46,6 +49,25 @@ class ProxyAccuracy:
             for i in range(bounds[k] + 1, bounds[k + 1] + 1):
                 loss += self._weight[i] * n
         return max(0.0, self.base_accuracy - self.noise_scale * loss)
+
+    def evaluate_batch(self, cuts: np.ndarray) -> np.ndarray:
+        """Vectorized proxy accuracy for a whole (N, n_cuts) matrix.
+
+        Same model as ``__call__`` but with the per-segment weight sums read
+        off a prefix-sum table — one gather per platform instead of a Python
+        loop over layers per candidate.
+        """
+        C = np.maximum(np.asarray(cuts, dtype=np.int64), -1)
+        n = C.shape[0]
+        tail = np.full((n, 1), len(self.schedule) - 1, dtype=np.int64)
+        bounds = np.concatenate(
+            [np.full((n, 1), -1, dtype=np.int64), C, tail], axis=1)
+        wpre = self._weight_prefix
+        loss = np.zeros(n)
+        for k, plat in enumerate(self.system.platforms):
+            loss += self._noise(plat.quant.bits) * (
+                wpre[bounds[:, k + 1] + 1] - wpre[bounds[:, k] + 1])
+        return np.maximum(0.0, self.base_accuracy - self.noise_scale * loss)
 
 
 @dataclasses.dataclass
@@ -64,3 +86,8 @@ class MeasuredAccuracy:
         if key not in self._cache:
             self._cache[key] = float(self.measure(key))
         return self._cache[key]
+
+    def evaluate_batch(self, cuts: np.ndarray) -> np.ndarray:
+        """Batch protocol shared with :class:`ProxyAccuracy`; measurements
+        are inherently per-assignment, so this is a cached scalar loop."""
+        return np.array([self(row) for row in np.asarray(cuts)])

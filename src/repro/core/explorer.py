@@ -108,9 +108,14 @@ class Explorer:
 
     def _link_filter(self, cands: List[int]) -> List[int]:
         cap = self.constraints.max_link_bytes
-        if not cap:
+        if not cap or len(self.system.platforms) < 2:
             return cands
-        bpe = max(p.quant.bits for p in self.system.platforms) / 8.0
+        # a candidate position may end up on any link, and the bytes it
+        # ships are priced at its *producer* platform's bit width — so only
+        # prune positions that violate the budget even under the cheapest
+        # producer (the last platform never produces).  Pricing every cut at
+        # the global max bit width over-prunes heterogeneous systems.
+        bpe = min(p.quant.bits for p in self.system.platforms[:-1]) / 8.0
         return [p for p in cands
                 if self.graph.cut_bytes(self.schedule, p, bpe)
                 * self.evaluator.batch <= cap]
@@ -130,9 +135,10 @@ class Explorer:
         # exhaustive scan of single-cut systems: cheap and exact, and the
         # figure benchmarks want every point anyway
         all_evals: List[PartitionEval] = []
-        if n_cuts == 1:
-            for p in cands:
-                all_evals.append(evaluator.evaluate([p], self.constraints))
+        if n_cuts == 1 and cands:
+            all_evals = evaluator.evaluate_batch(
+                np.asarray(cands, dtype=int)[:, None],
+                self.constraints).to_evals()
 
         nsga_res = None
         pool: List[PartitionEval] = list(all_evals) + [
@@ -147,13 +153,10 @@ class Explorer:
                 return np.sort(table[G], axis=1)
 
             def _eval(G: np.ndarray):
-                F, CV = [], []
-                for g in G:
-                    ev = evaluator.evaluate(_decode(g[None])[0],
-                                            self.constraints)
-                    F.append(ev.as_objectives(self.objectives))
-                    CV.append(ev.violation)
-                return np.asarray(F), np.asarray(CV)
+                # one vectorized call per generation instead of pop_size
+                # Python evaluations — the NSGA-II hot path
+                be = evaluator.evaluate_batch(_decode(G), self.constraints)
+                return be.as_objectives(self.objectives), be.violation
 
             seeds = []
             for p in cands[:: max(1, len(cands) // 16)]:
@@ -163,9 +166,9 @@ class Explorer:
                              upper=len(table) - 1, seed=seed,
                              candidates=seeds, pop_size=pop_size,
                              n_gen=n_gen)
-            for g in nsga_res.pareto_X:
-                ev = evaluator.evaluate(np.sort(table[g]), self.constraints)
-                pool.append(ev)
+            if len(nsga_res.pareto_X):
+                pool.extend(evaluator.evaluate_batch(
+                    _decode(nsga_res.pareto_X), self.constraints).to_evals())
 
         if not pool:
             pool = baselines[:]

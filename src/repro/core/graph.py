@@ -16,6 +16,7 @@ The partitioner needs:
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 from repro.core.layers import LayerInfo
@@ -155,10 +156,13 @@ class LayerGraph:
 
     def cut_bytes(self, schedule: Sequence[LayerInfo], p: int,
                   bytes_per_elem: float) -> int:
-        """Bytes transmitted over the link for a cut after position p."""
+        """Bytes transmitted over the link for a cut after position p.
+
+        Sub-byte widths round up (a 4-bit link shipping one element still
+        moves a byte), matching the serving-side accounting."""
         live = self.live_set(schedule, p)
         total = sum(self.nodes[n].fmap_out for n in live)
-        return int(total * bytes_per_elem)
+        return int(math.ceil(total * bytes_per_elem))
 
     # -- parallel-branch discovery (for the min-memory scheduler) ------------
     def branch_regions(self, schedule: Sequence[LayerInfo]) -> List[Tuple[int, int]]:

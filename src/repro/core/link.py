@@ -14,6 +14,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
+import numpy as np
+
 
 @dataclasses.dataclass(frozen=True)
 class LinkModel:
@@ -38,6 +40,22 @@ class LinkModel:
             return 0.0
         d = self.latency_s(nbytes)
         return (self.p_tx_w + self.p_rx_w) * d + self.e_per_byte_j * nbytes
+
+    def latency_s_vec(self, nbytes: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`latency_s` over an array of transfer sizes."""
+        nb = np.asarray(nbytes, dtype=np.float64)
+        packets = np.ceil(nb / self.payload_bytes)
+        wire_bits = (nb + packets * self.header_bytes) * 8
+        return np.where(nb > 0, self.t_setup_s + wire_bits / self.rate_bps,
+                        0.0)
+
+    def energy_j_vec(self, nbytes: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`energy_j` over an array of transfer sizes."""
+        nb = np.asarray(nbytes, dtype=np.float64)
+        d = self.latency_s_vec(nb)
+        return np.where(nb > 0,
+                        (self.p_tx_w + self.p_rx_w) * d
+                        + self.e_per_byte_j * nb, 0.0)
 
     def effective_bw(self, nbytes: int) -> float:
         """bytes/s actually achieved for a transfer of this size."""

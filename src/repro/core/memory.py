@@ -13,6 +13,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.layers import LayerInfo
 
 
@@ -49,6 +51,73 @@ def segment_memory(layers: Sequence[LayerInfo], model: MemoryModel,
             seen_groups.add(g)
     peak_act = max(l.activation_footprint for l in layers) * batch
     return int(params * model.bytes_per_param + peak_act * model.act_bytes)
+
+
+class SegmentMemoryTable:
+    """Precomputed Definition-3 structures for batched segment queries.
+
+    Built once per (schedule, shared_groups); ``batched(a, b, model, batch)``
+    then returns the memory of ``schedule[a..b]`` for whole index arrays in
+    O(1) per segment:
+
+    * ungrouped parameters via a prefix sum,
+    * shared-group parameters via per-group sorted member positions
+      (``searchsorted`` finds the first member inside each segment, matching
+      the scalar first-seen accounting of :func:`segment_memory`),
+    * peak activation via a sparse table (range-max in two overlapping
+      power-of-two windows).
+    """
+
+    def __init__(self, schedule: Sequence[LayerInfo],
+                 shared_groups: Optional[Dict[str, str]] = None):
+        groups = shared_groups or {}
+        self.L = len(schedule)
+        params = np.array([l.params for l in schedule], dtype=np.int64)
+        acts = np.array([l.activation_footprint for l in schedule],
+                        dtype=np.int64)
+        grouped = np.array([groups.get(l.name) is not None for l in schedule],
+                           dtype=bool) if self.L else np.zeros(0, dtype=bool)
+        base = np.where(grouped, 0, params) if self.L else params
+        self.base_prefix = np.concatenate([[0], np.cumsum(base)])
+        by_group: Dict[str, List[int]] = {}
+        for i, l in enumerate(schedule):
+            g = groups.get(l.name)
+            if g is not None:
+                by_group.setdefault(g, []).append(i)
+        # (sorted member positions, member params) per group
+        self.groups = [(np.asarray(pos, dtype=np.int64), params[pos])
+                       for pos in by_group.values()]
+        if self.L:
+            levels = int(self.L).bit_length()
+            st = np.zeros((levels, self.L), dtype=np.int64)
+            st[0] = acts
+            for j in range(1, levels):
+                w, half = 1 << j, 1 << (j - 1)
+                st[j, : self.L - w + 1] = np.maximum(
+                    st[j - 1, : self.L - w + 1],
+                    st[j - 1, half: self.L - half + 1])
+            self.act_sparse = st
+
+    def batched(self, a: np.ndarray, b: np.ndarray, model: MemoryModel,
+                batch: int = 1) -> np.ndarray:
+        """Memory bytes of ``schedule[a..b]`` inclusive; 0 where ``a > b``."""
+        a = np.asarray(a, dtype=np.int64)
+        b = np.asarray(b, dtype=np.int64)
+        valid = a <= b
+        aa = np.where(valid, a, 0)
+        bb = np.where(valid, b, 0)
+        par = self.base_prefix[bb + 1] - self.base_prefix[aa]
+        for pos, gpar in self.groups:
+            idx = np.minimum(np.searchsorted(pos, aa), len(pos) - 1)
+            hit = pos[idx] >= aa
+            hit &= pos[idx] <= bb
+            par = par + np.where(hit, gpar[idx], 0)
+        length = bb - aa + 1
+        k = np.frexp(length.astype(np.float64))[1] - 1
+        peak = np.maximum(self.act_sparse[k, aa],
+                          self.act_sparse[k, bb - (1 << k) + 1]) * batch
+        mem = par * model.bytes_per_param + peak * model.act_bytes
+        return np.where(valid, mem.astype(np.int64), 0)
 
 
 def split_memory(schedule: Sequence[LayerInfo], cut_positions: Sequence[int],

@@ -35,36 +35,47 @@ def constrained_dominates(f: np.ndarray, cv_f: float,
     return dominates(f, g)
 
 
+def _constrained_dominates_vec(Fa: np.ndarray, cva: np.ndarray,
+                               Fb: np.ndarray, cvb: np.ndarray) -> np.ndarray:
+    """Row-wise Deb constraint-domination: does a[i] dominate b[i]?"""
+    feas_a, feas_b = cva <= 0, cvb <= 0
+    dom = np.all(Fa <= Fb, axis=-1) & np.any(Fa < Fb, axis=-1)
+    return np.where(feas_a & ~feas_b, True,
+                    np.where(feas_b & ~feas_a, False,
+                             np.where(~feas_a & ~feas_b, cva < cvb, dom)))
+
+
+def _domination_matrix(F: np.ndarray, CV: np.ndarray) -> np.ndarray:
+    """D[p, q] = p constraint-dominates q, for the whole population."""
+    D = _constrained_dominates_vec(F[:, None, :], CV[:, None],
+                                   F[None, :, :], CV[None, :])
+    np.fill_diagonal(D, False)
+    return D
+
+
 def fast_non_dominated_sort(F: np.ndarray,
                             CV: Optional[np.ndarray] = None) -> List[np.ndarray]:
-    """Return fronts (lists of indices), best front first."""
+    """Return fronts (lists of indices), best front first.
+
+    Builds the full pairwise domination matrix with one broadcast compare
+    and peels fronts by domination count — no Python-level pair loop.
+    """
+    F = np.asarray(F, dtype=float)
     n = len(F)
     if CV is None:
         CV = np.zeros(n)
-    S: List[List[int]] = [[] for _ in range(n)]
-    n_dom = np.zeros(n, dtype=int)
-    fronts: List[List[int]] = [[]]
-    for p in range(n):
-        for q in range(n):
-            if p == q:
-                continue
-            if constrained_dominates(F[p], CV[p], F[q], CV[q]):
-                S[p].append(q)
-            elif constrained_dominates(F[q], CV[q], F[p], CV[p]):
-                n_dom[p] += 1
-        if n_dom[p] == 0:
-            fronts[0].append(p)
-    i = 0
-    while fronts[i]:
-        nxt: List[int] = []
-        for p in fronts[i]:
-            for q in S[p]:
-                n_dom[q] -= 1
-                if n_dom[q] == 0:
-                    nxt.append(q)
-        i += 1
-        fronts.append(nxt)
-    return [np.asarray(f, dtype=int) for f in fronts if len(f)]
+    D = _domination_matrix(F, np.asarray(CV, dtype=float))
+    n_dom = D.sum(axis=0)          # how many dominate each q
+    assigned = np.zeros(n, dtype=bool)
+    fronts: List[np.ndarray] = []
+    while not assigned.all():
+        front = np.flatnonzero((n_dom == 0) & ~assigned)
+        if not len(front):         # numerical safety: cannot happen for a DAG
+            front = np.flatnonzero(~assigned)
+        assigned[front] = True
+        n_dom = n_dom - D[front].sum(axis=0)
+        fronts.append(front)
+    return fronts
 
 
 def crowding_distance(F: np.ndarray) -> np.ndarray:
@@ -102,26 +113,34 @@ class NSGA2Result:
         return self.F[self.pareto_idx]
 
 
-def _tournament(rng, F, CV, crowd) -> int:
-    a, b = rng.integers(0, len(F), size=2)
-    if constrained_dominates(F[a], CV[a], F[b], CV[b]):
-        return int(a)
-    if constrained_dominates(F[b], CV[b], F[a], CV[a]):
-        return int(b)
-    return int(a if crowd[a] >= crowd[b] else b)
+def _tournament_batch(rng, F, CV, crowd, n: int) -> np.ndarray:
+    """n independent binary tournaments, returned as winner indices."""
+    a = rng.integers(0, len(F), size=n)
+    b = rng.integers(0, len(F), size=n)
+    a_dom = _constrained_dominates_vec(F[a], CV[a], F[b], CV[b])
+    b_dom = _constrained_dominates_vec(F[b], CV[b], F[a], CV[a])
+    pick_a = a_dom | (~b_dom & (crowd[a] >= crowd[b]))
+    return np.where(pick_a, a, b)
+
+
+def _repair_batch(X: np.ndarray, lo: int, hi: int) -> np.ndarray:
+    """Clip to bounds, sort, and de-duplicate cut vectors (strictly
+    increasing positions) for a whole (N, n_var) population — the scans run
+    over the short n_var axis, the work per step is vectorized over N."""
+    X = np.clip(np.sort(X, axis=1), lo, hi)
+    n_var = X.shape[1]
+    for i in range(1, n_var):
+        X[:, i] = np.where(X[:, i] <= X[:, i - 1],
+                           np.minimum(hi, X[:, i - 1] + 1), X[:, i])
+    for i in range(n_var - 2, -1, -1):   # if saturated at hi, push left
+        X[:, i] = np.where(X[:, i] >= X[:, i + 1],
+                           np.maximum(lo, X[:, i + 1] - 1), X[:, i])
+    return X
 
 
 def _repair(x: np.ndarray, lo: int, hi: int) -> np.ndarray:
-    """Clip to bounds, sort, and de-duplicate cut vectors (strictly
-    increasing positions)."""
-    x = np.clip(np.sort(x), lo, hi)
-    for i in range(1, len(x)):
-        if x[i] <= x[i - 1]:
-            x[i] = min(hi, x[i - 1] + 1)
-    for i in range(len(x) - 2, -1, -1):  # if saturated at hi, push left
-        if x[i] >= x[i + 1]:
-            x[i] = max(lo, x[i + 1] - 1)
-    return x
+    """Single-vector convenience wrapper around :func:`_repair_batch`."""
+    return _repair_batch(np.asarray(x)[None, :], lo, hi)[0]
 
 
 def nsga2(evaluate: Callable[[np.ndarray], Tuple[np.ndarray, np.ndarray]],
@@ -131,9 +150,13 @@ def nsga2(evaluate: Callable[[np.ndarray], Tuple[np.ndarray, np.ndarray]],
           ) -> NSGA2Result:
     """Run NSGA-II over integer cut vectors in [lower, upper]^n_var.
 
-    evaluate(X) -> (F, CV): objectives matrix (pop, n_obj) and violation
-    vector (pop,). ``candidates`` optionally seeds the population (e.g. the
-    feasible-filtered cut list from the explorer).
+    ``evaluate`` is *batch-eval-aware*: it always receives the whole
+    population as one (pop, n_var) matrix and must return (F, CV) — an
+    objectives matrix (pop, n_obj) and a violation vector (pop,).  Pair it
+    with ``PartitionEvaluator.evaluate_batch`` so a generation costs one
+    vectorized evaluation instead of pop_size Python calls.  ``candidates``
+    optionally seeds the population (e.g. the feasible-filtered cut list
+    from the explorer).
 
     The paper sizes population/generations by layer count; we mirror that:
     pop = clip(4·L_range^0.5, 16, 96) rounded to 4, gens = clip(L/2, 10, 60).
@@ -151,37 +174,41 @@ def nsga2(evaluate: Callable[[np.ndarray], Tuple[np.ndarray, np.ndarray]],
         cand = np.asarray(list(candidates), dtype=int)
         k = min(len(cand), pop_size // 2)
         X[:k] = cand[rng.permutation(len(cand))[:k]]
-    X = np.stack([_repair(x, lower, upper) for x in X])
+    X = _repair_batch(X, lower, upper)
     F, CV = evaluate(X)
     history: List[dict] = []
+    nv = max(n_var, 1)
 
     for gen in range(n_gen):
         fronts = fast_non_dominated_sort(F, CV)
         crowd = np.zeros(len(F))
         for fr in fronts:
             crowd[fr] = crowding_distance(F[fr])
-        # offspring
-        children = []
-        while len(children) < pop_size:
-            p1 = X[_tournament(rng, F, CV, crowd)]
-            p2 = X[_tournament(rng, F, CV, crowd)]
-            mask = rng.random(n_var) < 0.5
-            c1 = np.where(mask, p1, p2).copy()
-            c2 = np.where(mask, p2, p1).copy()
-            for c in (c1, c2):
-                # blend step: move a coordinate toward the midpoint sometimes
-                if rng.random() < 0.3 and n_var > 0:
-                    j = rng.integers(n_var)
-                    c[j] = (int(p1[j]) + int(p2[j])) // 2
-                # mutation: random reset or +-local step
-                for j in range(n_var):
-                    r = rng.random()
-                    if r < 0.5 / max(n_var, 1):
-                        c[j] = rng.integers(lower, upper + 1)
-                    elif r < 2.0 / max(n_var, 1):
-                        c[j] += rng.integers(-3, 4)
-                children.append(_repair(c, lower, upper))
-        Xc = np.stack(children[:pop_size])
+        # offspring: vectorized tournaments, uniform crossover, blend step
+        # and reset/local-step mutation for the whole brood at once
+        half = (pop_size + 1) // 2
+        P1 = X[_tournament_batch(rng, F, CV, crowd, half)]
+        P2 = X[_tournament_batch(rng, F, CV, crowd, half)]
+        mask = rng.random((half, n_var)) < 0.5
+        Xc = np.concatenate([np.where(mask, P1, P2),
+                             np.where(mask, P2, P1)])[:pop_size]
+        par1 = np.concatenate([P1, P1])[:pop_size]
+        par2 = np.concatenate([P2, P2])[:pop_size]
+        if n_var > 0:
+            # blend step: move a coordinate toward the midpoint sometimes
+            blend = rng.random(pop_size) < 0.3
+            j = rng.integers(n_var, size=pop_size)
+            rows = np.arange(pop_size)
+            mid = (par1[rows, j] + par2[rows, j]) // 2
+            Xc[rows[blend], j[blend]] = mid[blend]
+        # mutation: random reset or +-local step
+        r = rng.random((pop_size, n_var))
+        reset = r < 0.5 / nv
+        step = ~reset & (r < 2.0 / nv)
+        Xc = np.where(reset,
+                      rng.integers(lower, upper + 1, size=Xc.shape), Xc)
+        Xc = np.where(step, Xc + rng.integers(-3, 4, size=Xc.shape), Xc)
+        Xc = _repair_batch(Xc, lower, upper)
         Fc, CVc = evaluate(Xc)
         # elitist environmental selection
         Xall = np.concatenate([X, Xc]); Fall = np.concatenate([F, Fc])

@@ -20,8 +20,9 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.nn.sharding import shard_map
 
 from repro.configs.base import ModelConfig
 from repro.models.decoder import DecoderLM, _scan_blocks

@@ -79,9 +79,8 @@ def _maybe_batch_local(fn, args, n_out: int, axes_override=None):
 
     axes_override: explicit (axis-name-or-tuple, total-size) for the group
     axis — used by the fine-grained (batch × seq-shard) grouping."""
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
-    from repro.nn.sharding import current_mesh
+    from repro.nn.sharding import current_mesh, shard_map
     mesh = current_mesh()
     if axes_override is not None:
         bax, n = axes_override

@@ -11,6 +11,7 @@ throughput model (Def. 4) comes from per-stage timings.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -37,8 +38,19 @@ class StageReport:
 def pipeline_report(stage_latencies: Sequence[float],
                     link_latencies: Sequence[float]) -> Dict[str, float]:
     lat = sum(stage_latencies) + sum(link_latencies)
-    th = 1.0 / max(list(stage_latencies) + list(link_latencies))
+    mods = [t for t in list(stage_latencies) + list(link_latencies) if t > 0]
+    th = 1.0 / max(mods) if mods else 0.0
     return {"latency_s": lat, "throughput": th}
+
+
+def link_transfer_bytes(n_elems: int, spec: Optional[QuantSpec]) -> int:
+    """Bytes shipped over a link for ``n_elems`` activations quantized to the
+    producer's bit width (float32 when unquantized).  Sub-byte widths use
+    fractional bytes-per-element — ``bits // 8`` would report 0 bytes for
+    4-bit links."""
+    if spec is None:
+        return int(n_elems * 4)
+    return int(math.ceil(n_elems * spec.bits / 8))
 
 
 class PartitionedCNNRunner:
@@ -91,8 +103,7 @@ class PartitionedCNNRunner:
             lat.append(time.perf_counter() - t0)
             if i < len(self._stage_fns) - 1:
                 spec = self.quant_specs[i]
-                nbytes = int(x.size * ((spec.bits // 8) if spec else 4))
-                link_bytes.append(nbytes)
+                link_bytes.append(link_transfer_bytes(int(x.size), spec))
                 if self.link_quant and spec is not None:
                     x = quantize_tensor(x, spec)    # fake-quant over the link
         return x, StageReport(lat, link_bytes)
@@ -147,8 +158,7 @@ class PartitionedLMRunner:
             lat.append(time.perf_counter() - t0)
             t0 = time.perf_counter()
             if si < len(self.ranges) - 1:
-                nbytes = int(x.size * ((spec.bits // 8) if spec else 4))
-                link_bytes.append(nbytes)
+                link_bytes.append(link_transfer_bytes(int(x.size), spec))
                 if self.link_quant and spec is not None:
                     x = quantize_tensor(x, spec)
         from repro.nn.layers import rms_norm

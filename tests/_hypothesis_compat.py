@@ -1,0 +1,52 @@
+"""Optional-``hypothesis`` shim for the property-test modules.
+
+``hypothesis`` is a dev-only dependency (declared in pyproject.toml /
+requirements-dev.txt).  When it is missing, importing it at module scope
+used to abort collection of six whole test modules; importing *this* module
+instead degrades gracefully: property tests decorated with ``@given`` turn
+into individual skips while plain tests in the same files keep running.
+
+Usage (replaces the direct hypothesis imports)::
+
+    from _hypothesis_compat import given, settings, st
+"""
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for ``hypothesis.strategies``: any attribute access or
+        call returns the stub itself, enough to evaluate ``@given(...)`` and
+        ``@st.composite`` expressions at collection time."""
+
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+    st = _AnyStrategy()
+
+    def given(*args, **kwargs):
+        def decorate(fn):
+            # zero-arg replacement (no functools.wraps: pytest must not see
+            # the strategy parameters of the wrapped property test and try
+            # to resolve them as fixtures)
+            def skipper():
+                pytest.skip("hypothesis not installed")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return decorate
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn

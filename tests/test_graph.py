@@ -1,8 +1,7 @@
 """Graph IR: topo sort, clean cuts, live sets, branch regions."""
 
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core import layers as L
 from repro.core.graph import GraphError, LayerGraph, linearize

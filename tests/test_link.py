@@ -1,8 +1,7 @@
 """Link models: latency/energy monotonicity and GigE sanity."""
 
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core.link import LINKS, get_link, gigabit_ethernet
 

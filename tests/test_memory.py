@@ -1,7 +1,6 @@
 """Definition 3 memory model + filters."""
 
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core import layers as L
 from repro.core.memory import (MemoryModel, prefix_feasible_limit,

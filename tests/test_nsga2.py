@@ -1,8 +1,7 @@
 """NSGA-II invariants + convergence on a known discrete front."""
 
 import numpy as np
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core.nsga2 import (crowding_distance, dominates,
                               fast_non_dominated_sort, nsga2)

@@ -1,0 +1,211 @@
+"""Vectorized search path: ``evaluate_batch`` ≡ scalar ``evaluate`` on
+randomized cut matrices, batched memory/accuracy/link building blocks, the
+heterogeneous link-filter fix, sub-byte link traffic, and the
+``pipeline_report`` zero-latency guard."""
+
+import numpy as np
+import pytest
+
+from repro.core import layers as L
+from repro.core.accuracy import ProxyAccuracy
+from repro.core.graph import LayerGraph
+from repro.core.hwmodel import EYERISS_LIKE, SIMBA_LIKE
+from repro.core.link import LINKS, get_link, gigabit_ethernet
+from repro.core.memory import MemoryModel, SegmentMemoryTable, segment_memory
+from repro.core.partition import (Constraints, PartitionEvaluator, Platform,
+                                  SystemConfig)
+from repro.core.quant import QuantSpec
+from repro.serving.pipeline import link_transfer_bytes, pipeline_report
+
+TIGHT_CONSTRAINTS = Constraints(max_link_bytes=300_000, min_accuracy=0.9,
+                                max_latency_s=0.05, max_energy_j=0.05,
+                                min_throughput=20.0)
+
+
+def chain_graph(n_layers=10, c=32, hw=28):
+    g = LayerGraph(name="chain")
+    g.chain([L.conv_layer(f"conv{i}", c, c, (hw, hw), 3)
+             for i in range(n_layers)])
+    return g
+
+
+def make_evaluator(n_layers=10, n_platforms=2, batch=1, shared_groups=None,
+                   bits=(16, 8, 16, 8)):
+    g = chain_graph(n_layers)
+    sched = g.topo_sort()
+    plats = [Platform(f"p{i}", EYERISS_LIKE if i % 2 == 0 else SIMBA_LIKE,
+                      QuantSpec(bits=bits[i % len(bits)]))
+             for i in range(n_platforms)]
+    system = SystemConfig(plats, [gigabit_ethernet()] * (n_platforms - 1))
+    acc = ProxyAccuracy(sched, system)
+    return PartitionEvaluator(g, sched, system, accuracy_fn=acc, batch=batch,
+                              shared_groups=shared_groups)
+
+
+def random_cuts(evaluator, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return np.sort(rng.integers(-1, len(evaluator.schedule),
+                                size=(n, evaluator.system.n_cuts)), axis=1)
+
+
+def assert_rows_match(evaluator, cuts, constraints):
+    be = evaluator.evaluate_batch(cuts, constraints)
+    assert len(be) == len(cuts)
+    for i, row in enumerate(cuts):
+        ref = evaluator.evaluate(row, constraints)
+        got = be.row(i)
+        assert got.cuts == ref.cuts
+        assert got.latency_s == pytest.approx(ref.latency_s, rel=1e-9)
+        assert got.energy_j == pytest.approx(ref.energy_j, rel=1e-9)
+        assert got.throughput == pytest.approx(ref.throughput, rel=1e-9)
+        assert got.accuracy == pytest.approx(ref.accuracy, rel=1e-9,
+                                             abs=1e-12)
+        assert got.violation == pytest.approx(ref.violation, rel=1e-9,
+                                              abs=1e-12)
+        assert got.link_bytes == ref.link_bytes
+        assert got.memory_bytes == ref.memory_bytes
+        assert got.stage_latency_s == pytest.approx(ref.stage_latency_s)
+        assert got.link_latency_s == pytest.approx(ref.link_latency_s)
+
+
+@pytest.mark.parametrize("n_platforms", [2, 4])
+@pytest.mark.parametrize("constraints", [None, TIGHT_CONSTRAINTS])
+def test_batch_matches_scalar(n_platforms, constraints):
+    evaluator = make_evaluator(n_platforms=n_platforms)
+    assert_rows_match(evaluator, random_cuts(evaluator, 100), constraints)
+
+
+def test_batch_matches_scalar_sub_byte_platforms():
+    # 4-bit producers: the cost model must ceil fractional link bytes, in
+    # agreement with the serving-side link_transfer_bytes accounting
+    evaluator = make_evaluator(n_platforms=3, bits=(4, 4, 8))
+    cuts = random_cuts(evaluator, 80, seed=4)
+    assert_rows_match(evaluator, cuts, TIGHT_CONSTRAINTS)
+    be = evaluator.evaluate_batch(cuts)
+    rows_active = be.link_latency_s.max(axis=1) > 0
+    assert np.all(be.link_bytes[rows_active] > 0)
+
+
+def test_batch_matches_scalar_shared_groups_and_batchsize():
+    groups = {"conv1": "gA", "conv5": "gA", "conv2": "gB", "conv7": "gB"}
+    evaluator = make_evaluator(n_platforms=4, batch=4, shared_groups=groups)
+    assert_rows_match(evaluator, random_cuts(evaluator, 100, seed=1),
+                      TIGHT_CONSTRAINTS)
+
+
+def test_batch_objectives_match_scalar():
+    evaluator = make_evaluator(n_platforms=4)
+    keys = ("latency", "energy", "throughput", "bandwidth", "memory",
+            "accuracy")
+    cuts = random_cuts(evaluator, 50, seed=2)
+    F = evaluator.evaluate_batch(cuts).as_objectives(keys)
+    assert F.shape == (50, len(keys))
+    for i, row in enumerate(cuts):
+        ref = evaluator.evaluate(row).as_objectives(keys)
+        assert F[i] == pytest.approx(ref, rel=1e-9)
+
+
+def test_batch_rejects_malformed_input():
+    evaluator = make_evaluator()
+    with pytest.raises(ValueError):
+        evaluator.evaluate_batch(np.array([3]))          # 1-D
+    with pytest.raises(AssertionError):
+        evaluator.evaluate_batch(np.array([[999]]))      # beyond schedule
+
+
+def test_segment_memory_table_matches_scalar():
+    layers = [L.LayerInfo(f"l{i}", L.GEMM, (8,), (8,), params=100 * (i + 1),
+                          macs=1) for i in range(12)]
+    groups = {"l2": "g", "l9": "g", "l5": "h", "l6": "h"}
+    model = MemoryModel(bytes_per_param=1.5, bytes_per_act=0.5)
+    table = SegmentMemoryTable(layers, groups)
+    a, b = np.meshgrid(np.arange(12), np.arange(12), indexing="ij")
+    a, b = a.ravel(), b.ravel()
+    got = table.batched(a, b, model, batch=3)
+    for ai, bi, gi in zip(a, b, got):
+        ref = segment_memory(layers[ai: bi + 1], model, groups, batch=3)
+        assert gi == ref, (ai, bi)
+
+
+def test_proxy_accuracy_batch_matches_scalar():
+    evaluator = make_evaluator(n_platforms=4)
+    acc = evaluator.accuracy_fn
+    cuts = random_cuts(evaluator, 64, seed=3)
+    batch = acc.evaluate_batch(cuts)
+    for i, row in enumerate(cuts):
+        assert batch[i] == pytest.approx(acc(tuple(row)), rel=1e-9)
+
+
+def test_link_vec_matches_scalar():
+    sizes = np.array([0, 1, 100, 1459, 1460, 1461, 10_000, 5_000_000])
+    for name in LINKS:
+        link = get_link(name)
+        lat = link.latency_s_vec(sizes)
+        en = link.energy_j_vec(sizes)
+        for i, n in enumerate(sizes):
+            assert lat[i] == pytest.approx(link.latency_s(int(n)), rel=1e-12)
+            assert en[i] == pytest.approx(link.energy_j(int(n)), rel=1e-12)
+
+
+# -- satellite regressions ----------------------------------------------------
+
+def test_link_filter_uses_producer_bits():
+    """A cut feasible at the 8-bit producer's width must survive the filter
+    even when another platform in the system runs at 16 bits."""
+    from repro.core.explorer import Explorer
+    g = chain_graph()
+    system = SystemConfig(
+        [Platform("A", SIMBA_LIKE, QuantSpec(bits=8)),
+         Platform("B", EYERISS_LIKE, QuantSpec(bits=16))],
+        [gigabit_ethernet()])
+    ex_free = Explorer(g, system)
+    all_cands = ex_free.candidate_cuts()
+    assert all_cands
+    # budget that fits every cut at 1 byte/elem (producer A) but none at 2
+    elems = [g.cut_bytes(ex_free.schedule, p, 1.0) for p in all_cands]
+    cap = max(elems)
+    ex = Explorer(g, system, constraints=Constraints(max_link_bytes=cap))
+    kept = ex.candidate_cuts()
+    assert kept == all_cands
+    # and the kept candidates really are feasible when evaluated
+    for p in kept:
+        assert ex.evaluator.evaluate([p]).link_bytes <= cap
+
+
+def test_link_filter_single_platform_system():
+    from repro.core.explorer import Explorer
+    g = chain_graph()
+    system = SystemConfig([Platform("A", SIMBA_LIKE, QuantSpec(bits=8))], [])
+    ex = Explorer(g, system, constraints=Constraints(max_link_bytes=1))
+    assert ex.candidate_cuts() == ex._memory_filter(
+        g.clean_cuts(ex.schedule))   # no links -> nothing to filter
+
+
+def test_pipeline_report_guards_zero_latencies():
+    assert pipeline_report([], [])["throughput"] == 0.0
+    assert pipeline_report([0.0, 0.0], [0.0])["throughput"] == 0.0
+    rep = pipeline_report([0.1, 0.0], [0.05])
+    assert rep["throughput"] == pytest.approx(1.0 / 0.1)
+    assert rep["latency_s"] == pytest.approx(0.15)
+
+
+def test_sub_byte_link_traffic_nonzero():
+    # 4-bit link: 1000 elements -> 500 bytes (was 0 with bits // 8)
+    assert link_transfer_bytes(1000, QuantSpec(bits=4)) == 500
+    assert link_transfer_bytes(1001, QuantSpec(bits=4)) == 501  # ceil
+    assert link_transfer_bytes(1000, QuantSpec(bits=8)) == 1000
+    assert link_transfer_bytes(1000, None) == 4000              # float32
+
+
+def test_cnn_runner_reports_sub_byte_link_bytes():
+    jax = pytest.importorskip("jax")
+    from repro.models.cnn.zoo import reduced_cnn
+    from repro.serving.pipeline import PartitionedCNNRunner
+    m = reduced_cnn("squeezenet11")
+    p, s = m.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 32, 32))
+    runner = PartitionedCNNRunner(m, p, s, [4],
+                                  [QuantSpec(bits=4), QuantSpec(bits=8)])
+    _, report = runner.run(x)
+    assert len(report.link_bytes) == 1
+    assert report.link_bytes[0] > 0

@@ -1,10 +1,9 @@
 """Quantization: error bounds, STE gradients, calibration, observers."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core.quant import (ActObserver, QuantSpec, calibrate,
                               compute_scale_zp, fake_quant, quantization_error,

@@ -1,12 +1,11 @@
 """Deeper validation: NSGA-II vs exhaustive ground truth, SSM prefill
 equivalence, MoE dispatch properties, multi-stage LM pipeline."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core import Explorer, Platform, QuantSpec, SystemConfig, get_link
 from repro.core.hwmodel import EYERISS_LIKE, SIMBA_LIKE
