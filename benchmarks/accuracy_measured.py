@@ -17,8 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row, timed
-from repro.core import Explorer, Platform, QuantSpec, SystemConfig, get_link
-from repro.core.hwmodel import EYERISS_LIKE, SIMBA_LIKE
+from repro.core import QuantSpec
 from repro.data.synthetic import SyntheticImages, batch_iterator
 from repro.models.cnn.zoo import reduced_cnn
 from repro.optim.optimizers import adamw

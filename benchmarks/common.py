@@ -1,19 +1,34 @@
-"""Shared benchmark plumbing: the paper's evaluation system (§V-A)."""
+"""Shared benchmark plumbing: the paper's evaluation system (§V-A), both as
+live ``SystemConfig`` objects and as declarative ``SystemSpec``s for the
+``repro.explore`` campaign API."""
 
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import List, Optional
 
-from repro.core import (Constraints, Explorer, Platform, QuantSpec,
-                        SystemConfig, get_link)
+from repro.core import SystemConfig
 from repro.core.hwmodel import EYERISS_LIKE, SIMBA_LIKE
+from repro.core.hwmodel.arch import register_arch
+from repro.explore import PlatformSpec, SystemSpec
 
 PAPER_CNNS = ["vgg16", "resnet50", "squeezenet11", "googlenet",
               "regnetx_400mf", "efficientnet_b0"]
 
+# leakage-dominated energy-table variants (Fig. 2 sensitivity ablation, see
+# paper_system_spec) registered under their own arch names so declarative
+# specs can reference them — distinct names keep cost-table caches separate
+EYR_LEAKY = dataclasses.replace(
+    EYERISS_LIKE, name="EYR-leaky",
+    energy=dataclasses.replace(EYERISS_LIKE.energy, leakage_w=0.05))
+SMB_LEAKY = dataclasses.replace(
+    SIMBA_LIKE, name="SMB-leaky",
+    energy=dataclasses.replace(SIMBA_LIKE.energy, leakage_w=0.08))
+register_arch(EYR_LEAKY, "eyr_leaky")
+register_arch(SMB_LEAKY, "smb_leaky")
 
-def paper_system(variant: str = "efficient") -> SystemConfig:
+
+def paper_system_spec(variant: str = "efficient") -> SystemSpec:
     """Platform A: 16-bit Eyeriss-like; B: Simba-like; GigE link (§V-A).
 
     Energy-table variants (Fig. 2 sensitivity ablation, EXPERIMENTS
@@ -22,26 +37,32 @@ def paper_system(variant: str = "efficient") -> SystemConfig:
     leakage-dominated (50/80 mW) — under which the paper's dual
     latency+energy win for VGG/SqueezeNet reproduces, because the slow SMB
     pays static energy for its longer runtime."""
-    import dataclasses
-    eyr, smb = EYERISS_LIKE, SIMBA_LIKE
-    if variant == "leaky":
-        eyr = dataclasses.replace(
-            eyr, energy=dataclasses.replace(eyr.energy, leakage_w=0.05))
-        smb = dataclasses.replace(
-            smb, energy=dataclasses.replace(smb.energy, leakage_w=0.08))
-    return SystemConfig(
-        [Platform("A", eyr, QuantSpec(bits=16)),
-         Platform("B", smb, QuantSpec(bits=8))],
-        [get_link("gige")])
+    suffix = "_leaky" if variant == "leaky" else ""
+    return SystemSpec(
+        platforms=(PlatformSpec("A", f"eyr{suffix}", bits=16),
+                   PlatformSpec("B", f"smb{suffix}", bits=8)),
+        links=("gige",),
+        name=f"EYR+SMB{suffix}")
+
+
+def chain_system_spec(n_eyr: int = 2, n_smb: int = 2) -> SystemSpec:
+    """§V-C: chain of 2×EYR then 2×SMB over GigE."""
+    plats = tuple([PlatformSpec(f"EYR{i}", "eyr", bits=16)
+                   for i in range(n_eyr)] +
+                  [PlatformSpec(f"SMB{i}", "smb", bits=8)
+                   for i in range(n_smb)])
+    return SystemSpec(platforms=plats, links=("gige",) * (len(plats) - 1),
+                      name=f"{n_eyr}xEYR+{n_smb}xSMB")
+
+
+def paper_system(variant: str = "efficient") -> SystemConfig:
+    """Live-object form of :func:`paper_system_spec`."""
+    return paper_system_spec(variant).build()
 
 
 def chain_system(n_eyr: int = 2, n_smb: int = 2) -> SystemConfig:
-    """§V-C: chain of 2×EYR then 2×SMB over GigE."""
-    plats = ([Platform(f"EYR{i}", EYERISS_LIKE, QuantSpec(bits=16))
-              for i in range(n_eyr)] +
-             [Platform(f"SMB{i}", SIMBA_LIKE, QuantSpec(bits=8))
-              for i in range(n_smb)])
-    return SystemConfig(plats, [get_link("gige")] * (len(plats) - 1))
+    """Live-object form of :func:`chain_system_spec`."""
+    return chain_system_spec(n_eyr, n_smb).build()
 
 
 def timed(fn, *args, repeat: int = 1, **kw):

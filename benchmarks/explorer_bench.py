@@ -1,10 +1,14 @@
 """Search-path throughput benchmark: candidate evaluations/second through
 the scalar ``PartitionEvaluator.evaluate`` loop vs the vectorized
-``evaluate_batch`` path, plus a wall-clock NSGA-II-scale explorer run.
+``evaluate_batch`` path, a wall-clock NSGA-II-scale run, and a multi-model
+``Campaign`` fan-out — the whole Fig.-1 hot path at fleet scale.
 
 This is the hot path of the whole framework (§IV, Table I): search quality
 scales with how many placements we can afford to score, so regressions here
 silently shrink the reachable population/generation budget.
+
+Emits a machine-readable ``BENCH_explorer.json`` (evals/s, campaign
+wall-clock) so CI can track the perf trajectory across PRs.
 
   PYTHONPATH=src python benchmarks/explorer_bench.py            # full
   PYTHONPATH=src python benchmarks/explorer_bench.py --quick    # CI mode
@@ -14,6 +18,7 @@ silently shrink the reachable population/generation budget.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -22,9 +27,12 @@ import numpy as np
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks.common import chain_system, csv_row
-from repro.core import Explorer
+from benchmarks.common import chain_system, chain_system_spec, csv_row
+from repro.core.accuracy import ProxyAccuracy
+from repro.core.graph import linearize
 from repro.core.partition import Constraints, PartitionEvaluator
+from repro.explore import (Campaign, ExplorationSpec, ModelRef,
+                           SearchSettings, explore_graph)
 from repro.models.cnn.zoo import build_cnn
 
 
@@ -32,17 +40,22 @@ def random_cut_matrix(rng, n: int, n_cuts: int, length: int) -> np.ndarray:
     return np.sort(rng.integers(-1, length, size=(n, n_cuts)), axis=1)
 
 
-def bench_eval_paths(model: str = "squeezenet11", n_candidates: int = 2048,
-                     scalar_cap: int = 256):
-    """Score the same random candidate matrix through both paths."""
+def make_evaluator(model: str = "squeezenet11"):
     graph = build_cnn(model, in_hw=64).to_graph()
     system = chain_system()                       # 4 platforms -> n_cuts = 3
-    ex = Explorer(graph, system)
-    evaluator: PartitionEvaluator = ex.evaluator
+    schedule = linearize(graph, "min_memory")
+    return PartitionEvaluator(graph, schedule, system,
+                              accuracy_fn=ProxyAccuracy(schedule, system))
+
+
+def bench_eval_paths(out: dict, model: str = "squeezenet11",
+                     n_candidates: int = 2048, scalar_cap: int = 256):
+    """Score the same random candidate matrix through both paths."""
+    evaluator = make_evaluator(model)
     cons = Constraints(max_link_bytes=10_000_000)
     rng = np.random.default_rng(0)
-    cuts = random_cut_matrix(rng, n_candidates, system.n_cuts,
-                             len(ex.schedule))
+    cuts = random_cut_matrix(rng, n_candidates, evaluator.system.n_cuts,
+                             len(evaluator.schedule))
 
     n_scalar = min(scalar_cap, n_candidates)
     t0 = time.perf_counter()
@@ -58,6 +71,9 @@ def bench_eval_paths(model: str = "squeezenet11", n_candidates: int = 2048,
     batch_rate = n_candidates / batch_dt
 
     speedup = batch_rate / scalar_rate
+    out["scalar_evals_per_s"] = round(scalar_rate, 1)
+    out["batch_evals_per_s"] = round(batch_rate, 1)
+    out["batch_speedup"] = round(speedup, 1)
     print(csv_row("explorer_scalar_evals_per_s", 1e6 / scalar_rate,
                   f"rate={scalar_rate:.0f}/s"))
     print(csv_row("explorer_batch_evals_per_s", 1e6 / batch_rate,
@@ -66,19 +82,46 @@ def bench_eval_paths(model: str = "squeezenet11", n_candidates: int = 2048,
     return speedup
 
 
-def bench_nsga_run(model: str = "squeezenet11", pop_size: int = 128,
-                   n_gen: int = 20):
-    """End-to-end explorer run at NSGA-II scale (pop >= 128, n_cuts = 3)."""
+def bench_nsga_run(out: dict, model: str = "squeezenet11",
+                   pop_size: int = 128, n_gen: int = 20):
+    """End-to-end exploration at NSGA-II scale (pop >= 128, n_cuts = 3)."""
     graph = build_cnn(model, in_hw=64).to_graph()
-    ex = Explorer(graph, chain_system())
     t0 = time.perf_counter()
-    res = ex.run(seed=0, use_nsga=True, pop_size=pop_size, n_gen=n_gen)
+    res = explore_graph(graph, chain_system(),
+                        search=SearchSettings(strategy="nsga2", seed=0,
+                                              pop_size=pop_size,
+                                              n_gen=n_gen))
     dt = time.perf_counter() - t0
     evals = pop_size * (n_gen + 1)
+    out["nsga_run_s"] = round(dt, 3)
+    out["nsga_evals_per_s"] = round(evals / dt, 1)
     print(csv_row("explorer_nsga_run", dt * 1e6,
                   f"pop={pop_size};gens={n_gen};"
                   f"evals_per_s={evals / dt:.0f};"
                   f"pareto={len(res.pareto)}"))
+    return dt
+
+
+def bench_campaign(out: dict, models=("squeezenet11", "regnetx_400mf",
+                                      "efficientnet_b0"),
+                   in_hw: int = 64):
+    """Multi-model fan-out through the Campaign runner (shared cost
+    tables), the ROADMAP's fleet-level-study shape."""
+    spec = ExplorationSpec(
+        model=ModelRef("cnn", models[0], {"in_hw": in_hw}),
+        system=chain_system_spec(),
+        objectives=("latency", "energy", "throughput"),
+        search=SearchSettings(strategy="nsga2"))
+    t0 = time.perf_counter()
+    camp = Campaign(spec, models=[ModelRef("cnn", n, {"in_hw": in_hw})
+                                  for n in models]).run()
+    dt = time.perf_counter() - t0
+    out["campaign_wall_s"] = round(dt, 3)
+    out["campaign_models"] = len(models)
+    out["campaign_pareto_sizes"] = [len(e.result.pareto)
+                                    for e in camp.entries]
+    print(csv_row("explorer_campaign", dt * 1e6,
+                  f"models={len(models)};wall={dt:.2f}s"))
     return dt
 
 
@@ -88,14 +131,23 @@ def main() -> int:
                     help="smaller workload for CI")
     ap.add_argument("--min-speedup", type=float, default=None,
                     help="fail when batch/scalar speedup drops below this")
+    ap.add_argument("--json", default="BENCH_explorer.json",
+                    help="machine-readable output path")
     args = ap.parse_args()
 
+    out = {"mode": "quick" if args.quick else "full"}
     if args.quick:
-        speedup = bench_eval_paths(n_candidates=1024, scalar_cap=128)
-        bench_nsga_run(pop_size=128, n_gen=8)
+        speedup = bench_eval_paths(out, n_candidates=1024, scalar_cap=128)
+        bench_nsga_run(out, pop_size=128, n_gen=8)
+        bench_campaign(out)
     else:
-        speedup = bench_eval_paths(n_candidates=8192, scalar_cap=512)
-        bench_nsga_run(pop_size=256, n_gen=30)
+        speedup = bench_eval_paths(out, n_candidates=8192, scalar_cap=512)
+        bench_nsga_run(out, pop_size=256, n_gen=30)
+        bench_campaign(out)
+
+    with open(args.json, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {args.json}")
 
     if args.min_speedup is not None and speedup < args.min_speedup:
         print(f"FAIL: batch speedup x{speedup:.1f} < "

@@ -2,7 +2,7 @@
 the six CNNs on the EYR+SMB+GigE system; validates the paper's headline
 claims (+47.5 % EfficientNet-B0 and +29 % ResNet-50 throughput; dual
 latency+energy wins for VGG-16 / SqueezeNet; accuracy rises with later
-cuts)."""
+cuts).  Runs as one ``Campaign`` over the CNN zoo."""
 
 from __future__ import annotations
 
@@ -10,32 +10,38 @@ import json
 import os
 from typing import Dict
 
-from benchmarks.common import PAPER_CNNS, csv_row, paper_system, timed
-from repro.core import Explorer, single_platform_eval
-from repro.models.cnn.zoo import build_cnn
+from benchmarks.common import PAPER_CNNS, csv_row, paper_system_spec
+from repro.explore import Campaign, ExplorationSpec, ModelRef
+
+OBJECTIVES = ("latency", "energy", "throughput", "accuracy")
 
 
-def explore_cnn(name: str, objectives=("latency", "energy", "throughput",
-                                       "accuracy"), variant: str = "efficient"):
-    graph = build_cnn(name).to_graph()
-    ex = Explorer(graph, paper_system(variant), objectives=objectives)
-    return ex, ex.run(seed=0)
+def cnn_campaign(models, variant: str = "efficient",
+                 objectives=OBJECTIVES):
+    spec = ExplorationSpec(
+        model=ModelRef("cnn", models[0]),
+        system=paper_system_spec(variant),
+        objectives=objectives)
+    return Campaign(spec, models=[ModelRef("cnn", n) for n in models]).run()
 
 
 def run(out_dir: str = "experiments") -> Dict[str, str]:
     os.makedirs(out_dir, exist_ok=True)
     rows = []
     results = {}
-    # energy-balance ablation on the dual-win claim (see paper_system)
-    for name in ("vgg16", "squeezenet11"):
-        (ex, res), dt = timed(explore_cnn, name, variant="leaky")
+    # energy-balance ablation on the dual-win claim (see paper_system_spec)
+    leaky = cnn_campaign(("vgg16", "squeezenet11"), "leaky")
+    for entry in leaky.entries:
+        res = entry.result
         smb = res.baselines[-1]
         dual = any(e.latency_s < smb.latency_s and e.energy_j < smb.energy_j
                    for e in res.all_evals)
-        rows.append(csv_row(f"fig2_{name}_leaky_variant", dt * 1e6,
-                            f"dual_win_vs_B={dual}"))
-    for name in PAPER_CNNS:
-        (ex, res), dt = timed(explore_cnn, name)
+        rows.append(csv_row(f"fig2_{entry.model}_leaky_variant",
+                            entry.wall_s * 1e6, f"dual_win_vs_B={dual}"))
+
+    camp = cnn_campaign(PAPER_CNNS)
+    for entry in camp.entries:
+        res, name, dt = entry.result, entry.model, entry.wall_s
         base_th = max(b.throughput for b in res.baselines)
         best_th = max((e.throughput for e in res.all_evals), default=0.0)
         th_gain = (best_th / base_th - 1.0) * 100 if base_th else 0.0
@@ -50,28 +56,28 @@ def run(out_dir: str = "experiments") -> Dict[str, str]:
         dual_strict = any(e.latency_s < base_lat and e.energy_j < base_en
                           for e in res.all_evals)
         # accuracy trend: later cut (more layers on 16-bit A) -> higher acc
-        accs = [(e.cuts[0], e.accuracy) for e in res.all_evals]
-        accs.sort()
+        accs = sorted((e.cuts[0], e.accuracy) for e in res.all_evals)
         monotone_frac = 0.0
         if len(accs) > 1:
             ups = sum(1 for (p1, a1), (p2, a2) in zip(accs, accs[1:])
                       if a2 >= a1 - 1e-9)
             monotone_frac = ups / (len(accs) - 1)
+        sel = res.selected
         results[name] = {
             "n_cuts_evaluated": len(res.all_evals),
             "best_throughput_gain_pct": round(th_gain, 1),
             "dual_latency_energy_win_vs_B": bool(dual),
             "dual_win_vs_best_single": bool(dual_strict),
             "accuracy_monotone_frac": round(monotone_frac, 3),
-            "selected_cut": res.selected.cuts,
-            "selected_layer": (res.schedule[res.selected.cuts[0]].name
-                               if 0 <= res.selected.cuts[0] < len(res.schedule)
+            "selected_cut": sel.cuts if sel else None,
+            "selected_layer": (res.layer_name(sel.cuts[0])
+                               if sel and 0 <= sel.cuts[0] < len(res.schedule)
                                else "single-platform"),
             "pareto_size": len(res.pareto),
             "explore_s": round(dt, 2),
             "points": [
                 {"cut": e.cuts[0],
-                 "layer": res.schedule[e.cuts[0]].name if e.cuts[0] >= 0 else "-",
+                 "layer": res.layer_name(e.cuts[0]),
                  "latency_ms": e.latency_s * 1e3,
                  "energy_mJ": e.energy_j * 1e3,
                  "throughput": e.throughput,
@@ -89,6 +95,8 @@ def run(out_dir: str = "experiments") -> Dict[str, str]:
             f"acc_monotone={monotone_frac:.2f}"))
     with open(os.path.join(out_dir, "fig2_pareto.json"), "w") as f:
         json.dump(results, f, indent=1)
+    # the serializable fleet report, straight from the campaign
+    camp.report.save(os.path.join(out_dir, "fig2_campaign_report.json"))
     return rows
 
 

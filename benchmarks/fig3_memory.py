@@ -10,29 +10,25 @@ import json
 import os
 
 from benchmarks.common import csv_row, timed
-from repro.core import (Explorer, Platform, QuantSpec, SystemConfig, get_link)
-from repro.core.hwmodel import EYERISS_LIKE
-from repro.models.cnn.zoo import build_cnn
+from repro.explore import (ExplorationSpec, ModelRef, PlatformSpec,
+                           SystemSpec, run_spec)
 
 
 def run(out_dir: str = "experiments"):
     os.makedirs(out_dir, exist_ok=True)
-    graph = build_cnn("efficientnet_b0").to_graph()
-    system = SystemConfig(
-        [Platform("A", EYERISS_LIKE, QuantSpec(bits=16)),
-         Platform("B", EYERISS_LIKE, QuantSpec(bits=16))],
-        [get_link("gige")])
+    spec = ExplorationSpec(
+        model=ModelRef("cnn", "efficientnet_b0"),
+        system=SystemSpec(
+            platforms=(PlatformSpec("A", "eyr", bits=16),
+                       PlatformSpec("B", "eyr", bits=16)),
+            links=("gige",)),
+        objectives=("latency", "memory"))
 
-    def explore():
-        ex = Explorer(graph, system, objectives=("latency", "memory"))
-        res = ex.run(seed=0)
-        return ex, res
-
-    (ex, res), dt = timed(explore)
+    res, dt = timed(run_spec, spec)
     points = []
     for e in res.all_evals:
         points.append({"cut": e.cuts[0],
-                       "layer": res.schedule[e.cuts[0]].name,
+                       "layer": res.layer_name(e.cuts[0]),
                        "mem_A_MiB": e.memory_bytes[0] / 2 ** 20,
                        "mem_B_MiB": e.memory_bytes[1] / 2 ** 20,
                        "sum_MiB": sum(e.memory_bytes) / 2 ** 20})

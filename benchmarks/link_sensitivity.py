@@ -2,67 +2,65 @@
 optimal cut and its value move as the inter-platform link changes.
 
 Sweeps the EYR+SMB system over 100 Mb Ethernet / GigE / PCIe-class links
-for EfficientNet-B0 and ResNet-50.  Expected physics: slower links push the
-optimum toward the endpoints (single-platform), faster links unlock more
-cuts and bigger pipelined-throughput wins — quantifying the paper's claim
-that the link model is essential for partitioning decisions."""
+for EfficientNet-B0 and ResNet-50, as one ``Campaign`` fanning each model
+across the four link variants (per-model cost tables are built once and
+reused for every link).  Expected physics: slower links push the optimum
+toward the endpoints (single-platform), faster links unlock more cuts and
+bigger pipelined-throughput wins — quantifying the paper's claim that the
+link model is essential for partitioning decisions."""
 
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 
-from benchmarks.common import csv_row, paper_system, timed
-from repro.core import Explorer
-from repro.core.link import LinkModel, gigabit_ethernet, pcie_gen4_x4
-from repro.models.cnn.zoo import build_cnn
+from benchmarks.common import csv_row
+from repro.explore import (Campaign, ExplorationSpec, LinkSpec, ModelRef,
+                           PlatformSpec, SystemSpec)
 
+LINK_VARIANTS = {
+    "eth_100m": LinkSpec(base="gige", name="eth100m", rate_bps=1e8),
+    "gige": LinkSpec(base="gige"),
+    "tengig": LinkSpec(base="gige", name="10gige", rate_bps=1e10,
+                       t_setup_s=20e-6),
+    "pcie": LinkSpec(base="pcie4x4"),
+}
 
-def links():
-    gige = gigabit_ethernet()
-    return {
-        "eth_100m": dataclasses.replace(gige, name="eth100m", rate_bps=1e8),
-        "gige": gige,
-        "tengig": dataclasses.replace(gige, name="10gige", rate_bps=1e10,
-                                      t_setup_s=20e-6),
-        "pcie": pcie_gen4_x4(),
-    }
+PLATFORMS = (PlatformSpec("A", "eyr", bits=16),
+             PlatformSpec("B", "smb", bits=8))
 
 
 def run(out_dir: str = "experiments"):
     os.makedirs(out_dir, exist_ok=True)
+    systems = [SystemSpec(platforms=PLATFORMS, links=(link,), name=lname)
+               for lname, link in LINK_VARIANTS.items()]
+    spec = ExplorationSpec(
+        model=ModelRef("cnn", "efficientnet_b0"),
+        system=systems[0],
+        objectives=("latency", "energy", "throughput"))
+    camp = Campaign(spec,
+                    models=[ModelRef("cnn", n)
+                            for n in ("efficientnet_b0", "resnet50")],
+                    systems=systems).run()
+
     rows, out = [], {}
-    for model_name in ("efficientnet_b0", "resnet50"):
-        graph = build_cnn(model_name).to_graph()
-        out[model_name] = {}
-        for link_name, link in links().items():
-            system = paper_system()
-            system = dataclasses.replace(system, links=[link])
-
-            def explore():
-                ex = Explorer(graph, system,
-                              objectives=("latency", "energy", "throughput"))
-                return ex.run(seed=0)
-
-            res, dt = timed(explore)
-            base_th = max(b.throughput for b in res.baselines)
-            best = max(res.all_evals, key=lambda e: e.throughput,
-                       default=None)
-            gain = (best.throughput / base_th - 1) * 100 if best else 0.0
-            n_useful = sum(1 for e in res.all_evals
-                           if e.throughput > base_th)
-            out[model_name][link_name] = {
-                "best_cut": best.cuts[0] if best else None,
-                "best_layer": (res.schedule[best.cuts[0]].name
-                               if best and best.cuts[0] >= 0 else "-"),
-                "throughput_gain_pct": round(gain, 1),
-                "cuts_beating_single": n_useful,
-                "pareto_size": len(res.pareto),
-            }
-            rows.append(csv_row(
-                f"link_{model_name}_{link_name}", dt * 1e6,
-                f"th_gain={gain:.1f}%;useful_cuts={n_useful}"))
+    for entry in camp.entries:
+        res, model_name, link_name = entry.result, entry.model, entry.system
+        base_th = max(b.throughput for b in res.baselines)
+        best = max(res.all_evals, key=lambda e: e.throughput, default=None)
+        gain = (best.throughput / base_th - 1) * 100 if best else 0.0
+        n_useful = sum(1 for e in res.all_evals if e.throughput > base_th)
+        out.setdefault(model_name, {})[link_name] = {
+            "best_cut": best.cuts[0] if best else None,
+            "best_layer": (res.layer_name(best.cuts[0])
+                           if best and best.cuts[0] >= 0 else "-"),
+            "throughput_gain_pct": round(gain, 1),
+            "cuts_beating_single": n_useful,
+            "pareto_size": len(res.pareto),
+        }
+        rows.append(csv_row(
+            f"link_{model_name}_{link_name}", entry.wall_s * 1e6,
+            f"th_gain={gain:.1f}%;useful_cuts={n_useful}"))
     with open(os.path.join(out_dir, "link_sensitivity.json"), "w") as f:
         json.dump(out, f, indent=1)
     return rows

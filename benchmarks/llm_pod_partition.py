@@ -1,63 +1,59 @@
 """The paper's technique applied to every assigned architecture: pipeline
-stage boundaries across 2 and 4 TPU pods over inter-pod DCI, chosen by the
-explorer from each model's layer graph (at train_4k's sequence length).
+stage boundaries across 2 and 4 TPU pods over inter-pod DCI, chosen from
+each model's layer graph (at train_4k's sequence length) by a single
+``Campaign`` fanning the whole registry across both pod counts.
 
 Outputs, per arch: the selected cuts, stage balance, pipelined-throughput
-gain over a single pod, and whether the explorer kept all stages (Table-II
+gain over a single pod, and whether the search kept all stages (Table-II
 effect on pods: transmission overhead can make fewer stages optimal)."""
 
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 
-from benchmarks.common import csv_row, timed
-from repro.core import (Explorer, Platform, QuantSpec, SystemConfig,
-                        get_link)
-from repro.core.hwmodel.arch import TPU_V5E
-from repro.models.registry import ARCH_IDS, build_model, get_config
+from benchmarks.common import csv_row
+from repro.explore import (Campaign, ExplorationSpec, ModelRef, PlatformSpec,
+                           SystemSpec)
+from repro.models.registry import ARCH_IDS
 
 SEQ = 4096
+
+POD = PlatformSpec("pod", "tpu_v5e", bits=16,
+                   mem_capacity=256 * 16 * 2 ** 30)
 
 
 def run(out_dir: str = "experiments"):
     os.makedirs(out_dir, exist_ok=True)
-    pod = Platform("pod", dataclasses.replace(TPU_V5E,
-                                              mem_bytes=256 * 16 * 2 ** 30),
-                   QuantSpec(bits=16))
+    systems = [SystemSpec(platforms=(POD,) * n, links=("dci",) * (n - 1),
+                          name=f"{n}pods") for n in (2, 4)]
+    spec = ExplorationSpec(
+        model=ModelRef("registry", ARCH_IDS[0], {"seq": SEQ}),
+        system=systems[0],
+        objectives=("latency", "throughput"))
+    camp = Campaign(spec,
+                    models=[ModelRef("registry", a, {"seq": SEQ})
+                            for a in ARCH_IDS],
+                    systems=systems).run()
+
     rows, out = [], {}
-    for arch in ARCH_IDS:
-        cfg = get_config(arch)
-        model = build_model(cfg)
-        graph = model.to_graph(SEQ)
-        shared = (model.shared_groups()
-                  if hasattr(model, "shared_groups") else None)
-        out[arch] = {}
-        for n_pods in (2, 4):
-            system = SystemConfig([pod] * n_pods,
-                                  [get_link("dci")] * (n_pods - 1))
-
-            def explore():
-                ex = Explorer(graph, system,
-                              objectives=("latency", "throughput"),
-                              shared_groups=shared)
-                return ex.run(seed=0)
-
-            res, dt = timed(explore)
-            s = res.selected
-            gain = (s.throughput / res.baselines[0].throughput
-                    if res.baselines[0].throughput else 0.0)
-            out[arch][f"{n_pods}pods"] = {
-                "cuts": list(s.cuts),
-                "stages_used": s.n_partitions,
-                "stage_latency_ms": [round(t * 1e3, 2)
-                                     for t in s.stage_latency_s],
-                "throughput_gain_x": round(gain, 2),
-            }
-            rows.append(csv_row(
-                f"pods_{arch}_{n_pods}", dt * 1e6,
-                f"stages={s.n_partitions}/{n_pods};th_gain={gain:.2f}x"))
+    for entry in camp.entries:
+        res, arch = entry.result, entry.model
+        s = res.selected
+        gain = (s.throughput / res.baselines[0].throughput
+                if s and res.baselines[0].throughput else 0.0)
+        out.setdefault(arch, {})[entry.system] = {
+            "cuts": list(s.cuts) if s else None,
+            "stages_used": s.n_partitions if s else 0,
+            "stage_latency_ms": ([round(t * 1e3, 2)
+                                  for t in s.stage_latency_s] if s else []),
+            "throughput_gain_x": round(gain, 2),
+        }
+        rows.append(csv_row(
+            f"pods_{arch}_{entry.system}", entry.wall_s * 1e6,
+            f"stages={s.n_partitions if s else 0}/{len(res.baselines)};"
+            f"th_gain={gain:.2f}x"))
+    camp.report.save(os.path.join(out_dir, "llm_pod_campaign_report.json"))
     with open(os.path.join(out_dir, "llm_pod_partition.json"), "w") as f:
         json.dump(out, f, indent=1)
     return rows

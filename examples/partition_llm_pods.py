@@ -1,44 +1,48 @@
 """Map the paper's technique onto TPU pods: choose the pipeline stage
-boundary for qwen3-14b across 2 pods connected by inter-pod DCI, using the
-same explorer that partitions CNNs across embedded accelerators.
+boundary for qwen3-14b across 2 and 4 pods connected by inter-pod DCI,
+using a single :class:`Campaign` that fans one spec template across both
+system sizes (per-model cost tables are built once and shared).
 
   PYTHONPATH=src python examples/partition_llm_pods.py
 """
 
-import dataclasses
+from repro.explore import (Campaign, ExplorationSpec, ModelRef, PlatformSpec,
+                           SystemSpec)
 
-from repro.core import (Explorer, Platform, QuantSpec, SystemConfig, get_link)
-from repro.core.hwmodel.arch import TPU_V5E
-from repro.models.registry import build_model, get_config
-
-cfg = get_config("qwen3-14b")
-model = build_model(cfg)
-seq = 4096
-graph = model.to_graph(seq)
-print(f"{cfg.arch_id}: {len(graph)} graph nodes "
-      f"({cfg.n_layers} blocks), {graph.total_params/1e9:.1f}B params")
+SEQ = 4096
 
 # a "platform" = one pod (256 chips-worth of HBM, one chip's roofline per
 # token-stream for the latency model — relative costs are what matter)
-pod = Platform("pod", dataclasses.replace(TPU_V5E,
-                                          mem_bytes=256 * 16 * 2 ** 30),
-               QuantSpec(bits=16))
+pod = PlatformSpec("pod", "tpu_v5e", bits=16,
+                   mem_capacity=256 * 16 * 2 ** 30)
+systems = [SystemSpec(platforms=(pod,) * n, links=("dci",) * (n - 1),
+                      name=f"{n}pods")
+           for n in (2, 4)]
 
-for n_pods, link_name in [(2, "dci"), (4, "dci")]:
-    system = SystemConfig([pod] * n_pods,
-                          [get_link(link_name)] * (n_pods - 1))
-    ex = Explorer(graph, system, objectives=("latency", "throughput"))
-    res = ex.run(seed=0)
-    cuts = res.selected.cuts
-    names = [graph.topo_sort()[c].name if c >= 0 else "-" for c in cuts]
-    print(f"\n{n_pods} pods over {link_name}:")
-    print(f"  selected cuts: {cuts} ({names})")
-    print(f"  stage latencies: "
-          f"{[f'{t*1e3:.2f}ms' for t in res.selected.stage_latency_s]}")
-    print(f"  link latencies:  "
-          f"{[f'{t*1e3:.2f}ms' for t in res.selected.link_latency_s]}")
-    print(f"  pipelined throughput: {res.selected.throughput:.1f} seq/s "
+spec = ExplorationSpec(
+    model=ModelRef("registry", "qwen3-14b", {"seq": SEQ}),
+    system=systems[0],
+    objectives=("latency", "throughput"))
+
+campaign = Campaign(spec, systems=systems)
+result = campaign.run()
+
+for entry in result.entries:
+    res = entry.result
+    if entry.system == systems[0].label:
+        print(f"{spec.model.name}: {len(res.schedule)} graph nodes, "
+              f"{len(res.candidates)} candidate cuts")
+    s = res.selected
+    names = [res.layer_name(c) for c in s.cuts]
+    print(f"\n{entry.system} over dci:")
+    print(f"  selected cuts: {s.cuts} ({names})")
+    print(f"  stage latencies: {[f'{t*1e3:.2f}ms' for t in s.stage_latency_s]}")
+    print(f"  link latencies:  {[f'{t*1e3:.2f}ms' for t in s.link_latency_s]}")
+    print(f"  pipelined throughput: {s.throughput:.1f} seq/s "
           f"(vs single pod {res.baselines[0].throughput:.1f})")
     # for a homogeneous stack the Def.-2 optimum is the balanced split —
     # which is exactly what the shard_map pipeline in repro.launch.pipeline
     # assumes (stage-stacked params over the 'pod' mesh axis)
+
+# the serializable fleet report (per-system Pareto fronts + selections)
+print("\n" + result.report.summary())

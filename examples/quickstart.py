@@ -1,37 +1,46 @@
-"""Quickstart: automatically find the best partitioning point for SqueezeNet
-on a two-platform embedded system (16-bit Eyeriss-like + 8-bit Simba-like,
-Gigabit Ethernet) — the paper's §V-A setup in ~20 lines.
+"""Quickstart: declarative exploration with ``repro.explore``.
+
+One :class:`ExplorationSpec` describes the whole run — model, system,
+objectives, constraints, search strategy — and is JSON-round-trippable, so
+the same spec that runs here can be stored in a config repo or shipped to a
+fleet runner.  The setup is the paper's §V-A: SqueezeNet on a 16-bit
+Eyeriss-like sensor node + 8-bit Simba-like central unit over GigE.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core import (Constraints, Explorer, Platform, QuantSpec,
-                        SystemConfig, get_link)
-from repro.core.hwmodel import EYERISS_LIKE, SIMBA_LIKE
-from repro.models.cnn.zoo import build_cnn
+from repro.explore import (Campaign, ExplorationSpec, ModelRef, PlatformSpec,
+                           SystemSpec, run_spec)
+from repro.core.partition import Constraints
 
-# 1. the DNN as a layer graph (ONNX-equivalent op granularity)
-graph = build_cnn("squeezenet11").to_graph()
-print(f"SqueezeNet v1.1: {len(graph)} nodes, "
-      f"{graph.total_params/1e6:.2f}M params, "
-      f"{graph.total_macs/1e9:.2f} GMACs")
+# 1. the whole exploration as one declarative, serializable spec
+spec = ExplorationSpec(
+    model=ModelRef("cnn", "squeezenet11"),
+    system=SystemSpec(
+        platforms=(PlatformSpec("sensor-node", "eyr", bits=16),
+                   PlatformSpec("central-unit", "smb", bits=8)),
+        links=("gige",)),
+    objectives=("latency", "energy", "throughput"),
+    constraints=Constraints(max_link_bytes=2_000_000))
+print("spec:", spec.to_json())
+assert ExplorationSpec.from_json(spec.to_json()) == spec  # JSON round-trip
 
-# 2. the distributed system
-system = SystemConfig(
-    platforms=[Platform("sensor-node", EYERISS_LIKE, QuantSpec(bits=16)),
-               Platform("central-unit", SIMBA_LIKE, QuantSpec(bits=8))],
-    links=[get_link("gige")])
-
-# 3. explore: filter by memory/link, evaluate HW costs, NSGA-II Pareto
-explorer = Explorer(graph, system,
-                    objectives=("latency", "energy", "throughput"),
-                    constraints=Constraints(max_link_bytes=2_000_000))
-result = explorer.run(seed=0)
-
+# 2. run it: schedule -> candidate filtering -> metric evaluation ->
+#    search strategy -> Pareto front -> Def.-2 selection (Fig. 1)
+result = run_spec(spec)
 print(result.summary())
+
 print("\nPareto front:")
 for ev in sorted(result.pareto, key=lambda e: e.latency_s):
-    name = (result.schedule[ev.cuts[0]].name if ev.cuts[0] >= 0
+    name = (result.layer_name(ev.cuts[0]) if ev.cuts[0] >= 0
             else "all-on-central-unit")
     print(f"  cut after {name:24s} lat={ev.latency_s*1e3:7.3f} ms  "
           f"E={ev.energy_j*1e3:7.3f} mJ  th={ev.throughput:8.1f}/s")
+
+# 3. fleet mode: fan the same spec template across the CNN zoo in one
+#    Campaign (shared per-arch cost tables) and get a serializable report
+fleet = Campaign(spec, models=[ModelRef("cnn", n)
+                               for n in ("squeezenet11", "resnet50",
+                                         "efficientnet_b0")])
+report = fleet.run().report
+print("\n" + report.summary())

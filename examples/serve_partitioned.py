@@ -1,7 +1,7 @@
 """End-to-end serving example (the paper-kind driver): warm-train a reduced
-smollm-360m, let the explorer pick the partition, serve batched requests
-both monolithically and partitioned, verify identical outputs, and report
-Def.-4 pipelined throughput.
+smollm-360m, let the exploration engine (``repro.explore``) pick the
+partition, serve batched requests both monolithically and partitioned,
+verify identical outputs, and report Def.-4 pipelined throughput.
 
 This is a thin wrapper over ``repro.launch.serve`` (the real driver):
 

@@ -1,61 +1,41 @@
-"""The end-to-end exploration framework of Fig. 1.
+"""DEPRECATED — thin shim over :mod:`repro.explore`.
 
-Pipeline: graph → linear schedule → candidate cut discovery → memory/link
-filtering → accuracy evaluation → HW evaluation → NSGA-II → Pareto front →
-Def.-2 weighted-sum selection.
+The monolithic :class:`Explorer` (the original Fig.-1 driver with an
+inlined search loop) has been replaced by the declarative exploration API:
+
+* :class:`repro.explore.ExplorationSpec` — JSON-round-trippable run spec,
+* :class:`repro.explore.SearchStrategy` implementations
+  (``ExhaustiveSearch`` / ``MultiCutScan`` / ``NSGA2Search``),
+* :class:`repro.explore.Campaign` — multi-model/system fan-out with shared
+  cost tables.
+
+This module keeps the old constructor/``run`` surface working (it emits a
+:class:`DeprecationWarning` and delegates to ``ExhaustiveSearch`` /
+``NSGA2Search`` through :func:`repro.explore.run_search`) so existing
+callers keep functioning while they migrate.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
-
-import numpy as np
+import warnings
+from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.accuracy import ProxyAccuracy
 from repro.core.graph import LayerGraph, linearize
-from repro.core.layers import LayerInfo
-from repro.core.memory import prefix_feasible_limit
-from repro.core.nsga2 import NSGA2Result, fast_non_dominated_sort, nsga2
 from repro.core.partition import (Constraints, PartitionEval,
-                                  PartitionEvaluator, SystemConfig,
-                                  single_platform_eval)
+                                  PartitionEvaluator, SystemConfig)
+from repro.explore.filters import (candidate_positions, link_filter,
+                                   memory_filter)
+from repro.explore.result import ExplorationResult  # re-export (compat)
+from repro.explore.runner import (DEFAULT_OBJECTIVES, run_search,
+                                  select_weighted)
+from repro.explore.spec import SearchSettings
 
-DEFAULT_OBJECTIVES = ("latency", "energy")
-
-
-@dataclasses.dataclass
-class ExplorationResult:
-    schedule: List[LayerInfo]
-    candidates: List[int]                     # feasible clean-cut positions
-    all_evals: List[PartitionEval]            # every candidate (n_cuts==1)
-    pareto: List[PartitionEval]
-    selected: PartitionEval
-    baselines: List[PartitionEval]            # single-platform runs
-    objectives: Tuple[str, ...]
-    nsga: Optional[NSGA2Result] = None
-
-    def summary(self) -> str:
-        lines = [f"schedule: {len(self.schedule)} layers, "
-                 f"{len(self.candidates)} feasible cut points"]
-        for i, b in enumerate(self.baselines):
-            lines.append(
-                f"  all-on-platform-{i}: lat={b.latency_s*1e3:.3f} ms  "
-                f"E={b.energy_j*1e3:.3f} mJ  th={b.throughput:.1f}/s  "
-                f"acc={b.accuracy:.4f}")
-        s = self.selected
-        names = [self.schedule[c].name if 0 <= c < len(self.schedule) else "-"
-                 for c in s.cuts]
-        lines.append(
-            f"  selected cuts {s.cuts} ({','.join(names)}): "
-            f"lat={s.latency_s*1e3:.3f} ms  E={s.energy_j*1e3:.3f} mJ  "
-            f"th={s.throughput:.1f}/s  acc={s.accuracy:.4f}  "
-            f"mem={tuple(int(m/1024) for m in s.memory_bytes)} KiB")
-        return "\n".join(lines)
+__all__ = ["DEFAULT_OBJECTIVES", "ExplorationResult", "Explorer"]
 
 
 class Explorer:
-    """Automated partitioning-point exploration (the paper's framework)."""
+    """Deprecated facade over the pluggable exploration API."""
 
     def __init__(self, graph: LayerGraph, system: SystemConfig,
                  constraints: Optional[Constraints] = None,
@@ -66,6 +46,10 @@ class Explorer:
                  batch: int = 1,
                  shared_groups: Optional[Dict[str, str]] = None,
                  allow_multi_tensor_cuts: bool = False):
+        warnings.warn(
+            "repro.core.Explorer is deprecated; use repro.explore "
+            "(ExplorationSpec + run_spec / explore_graph, or Campaign for "
+            "multi-model fan-out)", DeprecationWarning, stacklevel=2)
         self.graph = graph
         self.system = system
         self.constraints = constraints or Constraints()
@@ -79,122 +63,30 @@ class Explorer:
             shared_groups=shared_groups)
         self.allow_multi_tensor_cuts = allow_multi_tensor_cuts
 
-    # -- step 1+2: candidate discovery & filtering ---------------------------
+    # -- candidate discovery & filtering (now repro.explore.filters) ---------
     def candidate_cuts(self) -> List[int]:
-        if self.allow_multi_tensor_cuts:
-            cands = [p for p, _ in self.graph.all_cuts(self.schedule)]
-        else:
-            cands = self.graph.clean_cuts(self.schedule)
-        cands = self._memory_filter(cands)
-        cands = self._link_filter(cands)
-        return cands
+        return candidate_positions(self.evaluator, self.constraints,
+                                   self.allow_multi_tensor_cuts)
 
     def _memory_filter(self, cands: List[int]) -> List[int]:
-        """§IV-B: prune cuts whose prefix overflows platform-0 memory or
-        whose suffix overflows the last platform (interior platforms are
-        handled by NSGA-II constraint domination)."""
-        plat0 = self.system.platforms[0]
-        limit = prefix_feasible_limit(
-            self.schedule, plat0.memory_model, plat0.capacity,
-            self.evaluator.shared_groups, self.evaluator.batch)
-        cands = [p for p in cands if p <= limit]
-        platN = self.system.platforms[-1]
-        rev = prefix_feasible_limit(
-            list(reversed(self.schedule)), platN.memory_model, platN.capacity,
-            self.evaluator.shared_groups, self.evaluator.batch)
-        L = len(self.schedule)
-        min_p = L - 2 - rev   # suffix schedule[p+1..] must fit platform N
-        return [p for p in cands if p >= min_p]
+        return memory_filter(self.evaluator, cands)
 
     def _link_filter(self, cands: List[int]) -> List[int]:
-        cap = self.constraints.max_link_bytes
-        if not cap or len(self.system.platforms) < 2:
-            return cands
-        # a candidate position may end up on any link, and the bytes it
-        # ships are priced at its *producer* platform's bit width — so only
-        # prune positions that violate the budget even under the cheapest
-        # producer (the last platform never produces).  Pricing every cut at
-        # the global max bit width over-prunes heterogeneous systems.
-        bpe = min(p.quant.bits for p in self.system.platforms[:-1]) / 8.0
-        return [p for p in cands
-                if self.graph.cut_bytes(self.schedule, p, bpe)
-                * self.evaluator.batch <= cap]
+        return link_filter(self.evaluator, cands,
+                           self.constraints.max_link_bytes)
 
-    # -- steps 3-5: evaluation + search --------------------------------------
+    # -- evaluation + search (now repro.explore.strategies/runner) -----------
     def run(self, seed: int = 0, use_nsga: Optional[bool] = None,
             pop_size: Optional[int] = None,
             n_gen: Optional[int] = None) -> ExplorationResult:
-        cands = self.candidate_cuts()
-        L = len(self.schedule)
-        n_cuts = self.system.n_cuts
-        evaluator = self.evaluator
+        settings = SearchSettings(
+            strategy="auto", seed=seed, use_nsga=use_nsga,
+            pop_size=pop_size, n_gen=n_gen,
+            allow_multi_tensor_cuts=self.allow_multi_tensor_cuts)
+        return run_search(self.evaluator, constraints=self.constraints,
+                          objectives=self.objectives, weights=self.weights,
+                          settings=settings)
 
-        baselines = [single_platform_eval(evaluator, i, self.constraints)
-                     for i in range(len(self.system.platforms))]
-
-        # exhaustive scan of single-cut systems: cheap and exact, and the
-        # figure benchmarks want every point anyway
-        all_evals: List[PartitionEval] = []
-        if n_cuts == 1 and cands:
-            all_evals = evaluator.evaluate_batch(
-                np.asarray(cands, dtype=int)[:, None],
-                self.constraints).to_evals()
-
-        nsga_res = None
-        pool: List[PartitionEval] = list(all_evals) + [
-            b for b in baselines if b.violation <= 0]
-        if use_nsga is None:
-            use_nsga = n_cuts > 1 or len(cands) > 64
-        if use_nsga and cands:
-            # genes are indices into [sentinel -1] + cands + [L-1]
-            table = np.array([-1] + cands + [L - 1], dtype=int)
-
-            def _decode(G: np.ndarray) -> np.ndarray:
-                return np.sort(table[G], axis=1)
-
-            def _eval(G: np.ndarray):
-                # one vectorized call per generation instead of pop_size
-                # Python evaluations — the NSGA-II hot path
-                be = evaluator.evaluate_batch(_decode(G), self.constraints)
-                return be.as_objectives(self.objectives), be.violation
-
-            seeds = []
-            for p in cands[:: max(1, len(cands) // 16)]:
-                i = 1 + cands.index(p)
-                seeds.append([i] * 1 + [len(table) - 1] * (n_cuts - 1))
-            nsga_res = nsga2(_eval, n_var=n_cuts, lower=0,
-                             upper=len(table) - 1, seed=seed,
-                             candidates=seeds, pop_size=pop_size,
-                             n_gen=n_gen)
-            if len(nsga_res.pareto_X):
-                pool.extend(evaluator.evaluate_batch(
-                    _decode(nsga_res.pareto_X), self.constraints).to_evals())
-
-        if not pool:
-            pool = baselines[:]
-
-        # final non-dominated filtering over the union pool
-        F = np.array([ev.as_objectives(self.objectives) for ev in pool])
-        CV = np.array([ev.violation for ev in pool])
-        fronts = fast_non_dominated_sort(F, CV)
-        seen = set()
-        pareto: List[PartitionEval] = []
-        for i in fronts[0]:
-            if pool[i].cuts not in seen:
-                seen.add(pool[i].cuts)
-                pareto.append(pool[i])
-
-        selected = self._select(pareto)
-        return ExplorationResult(schedule=self.schedule, candidates=cands,
-                                 all_evals=all_evals, pareto=pareto,
-                                 selected=selected, baselines=baselines,
-                                 objectives=self.objectives, nsga=nsga_res)
-
-    # -- Def. 2: weighted-sum selection over the front ------------------------
+    # -- Def. 2 selection (now repro.explore.runner.select_weighted) ---------
     def _select(self, pareto: List[PartitionEval]) -> PartitionEval:
-        F = np.array([ev.as_objectives(self.objectives) for ev in pareto],
-                     dtype=float)
-        lo, hi = F.min(axis=0), F.max(axis=0)
-        span = np.where(hi - lo > 0, hi - lo, 1.0)
-        score = ((F - lo) / span) @ np.asarray(self.weights)
-        return pareto[int(np.argmin(score))]
+        return select_weighted(pareto, self.objectives, self.weights)

@@ -53,6 +53,33 @@ def _domination_matrix(F: np.ndarray, CV: np.ndarray) -> np.ndarray:
     return D
 
 
+def dominates_matrix(Fa: np.ndarray, CVa: np.ndarray,
+                     Fb: np.ndarray, CVb: np.ndarray) -> np.ndarray:
+    """(len(a), len(b)) matrix of constrained domination a[i] ≻ b[j]."""
+    return _constrained_dominates_vec(
+        np.asarray(Fa, dtype=float)[:, None, :],
+        np.asarray(CVa, dtype=float)[:, None],
+        np.asarray(Fb, dtype=float)[None, :, :],
+        np.asarray(CVb, dtype=float)[None, :])
+
+
+def non_dominated_mask(F: np.ndarray,
+                       CV: Optional[np.ndarray] = None) -> np.ndarray:
+    """Boolean mask of the first (constrained) non-dominated front only.
+
+    One broadcast domination matrix, no front peeling — the cheap primitive
+    for streaming archives that never need ranks beyond the first front.
+    """
+    F = np.asarray(F, dtype=float)
+    n = len(F)
+    if n == 0:
+        return np.zeros(0, dtype=bool)
+    if CV is None:
+        CV = np.zeros(n)
+    D = _domination_matrix(F, np.asarray(CV, dtype=float))
+    return D.sum(axis=0) == 0
+
+
 def fast_non_dominated_sort(F: np.ndarray,
                             CV: Optional[np.ndarray] = None) -> List[np.ndarray]:
     """Return fronts (lists of indices), best front first.

@@ -158,7 +158,15 @@ class PartitionEvaluator:
                  system: SystemConfig,
                  accuracy_fn: Optional[Callable[[Sequence[int]], float]] = None,
                  batch: int = 1,
-                 shared_groups: Optional[Dict[str, str]] = None):
+                 shared_groups: Optional[Dict[str, str]] = None,
+                 cost_cache: Optional[Dict[str, Tuple[List[LayerCost],
+                                                      np.ndarray]]] = None,
+                 memtable: Optional[SegmentMemoryTable] = None):
+        """``cost_cache`` / ``memtable`` optionally inject precomputed
+        per-arch cost tables and the Def.-3 memory table so campaign
+        runners can share them across systems; the cache is keyed by arch
+        name and is only valid for this exact (schedule, batch) pair —
+        callers own that invariant."""
         self.graph = graph
         self.schedule = list(schedule)
         self.system = system
@@ -168,18 +176,25 @@ class PartitionEvaluator:
         self._tables: Dict[str, List[LayerCost]] = {}
         self._prefix: Dict[str, np.ndarray] = {}
         self._cut_bytes_cache: Dict[Tuple[int, float], int] = {}
-        self._memtable = SegmentMemoryTable(self.schedule, shared_groups)
+        self._memtable = (memtable if memtable is not None
+                          else SegmentMemoryTable(self.schedule, shared_groups))
         self._cut_elems: Optional[np.ndarray] = None  # lazy, O(L·E) to build
+        cache = cost_cache if cost_cache is not None else {}
         for plat in system.platforms:
             key = plat.arch.name
             if key not in self._tables:
-                tab = layer_cost_table(self.schedule, plat.arch, batch)
+                if key in cache:
+                    tab, pre = cache[key]
+                else:
+                    tab = layer_cost_table(self.schedule, plat.arch, batch)
+                    lat = np.array([c.latency_s for c in tab])
+                    en = np.array([c.energy_j for c in tab])
+                    pre = np.stack([
+                        np.concatenate([[0.0], np.cumsum(lat)]),
+                        np.concatenate([[0.0], np.cumsum(en)])])
+                    cache[key] = (tab, pre)
                 self._tables[key] = tab
-                lat = np.array([c.latency_s for c in tab])
-                en = np.array([c.energy_j for c in tab])
-                self._prefix[key] = np.stack([
-                    np.concatenate([[0.0], np.cumsum(lat)]),
-                    np.concatenate([[0.0], np.cumsum(en)])])
+                self._prefix[key] = pre
 
     # -- O(1) segment cost via prefix sums -----------------------------------
     def _segment_cost(self, arch_name: str, a: int, b: int) -> Tuple[float, float]:
@@ -203,6 +218,11 @@ class PartitionEvaluator:
                 [self.graph.cut_bytes(self.schedule, p, 1.0)
                  for p in range(len(self.schedule) - 1)], dtype=np.int64)
         return self._cut_elems
+
+    def cut_elements(self) -> np.ndarray:
+        """Public view of the per-position link element counts (length
+        L-1), used by the candidate filters' feasibility matrices."""
+        return self._cut_elems_vec()
 
     def evaluate(self, cuts: Sequence[int],
                  constraints: Optional[Constraints] = None) -> PartitionEval:

@@ -1,0 +1,82 @@
+"""Declarative exploration-campaign API for automated DNN partitioning.
+
+This package is the paper's Fig.-1 framework exposed as composable,
+declarative pieces (replacing the monolithic ``repro.core.explorer``
+class, which survives only as a deprecation shim):
+
+========================================  ====================================
+Paper stage (Fig. 1)                      API piece
+========================================  ====================================
+DNN model → layer graph                   :class:`ModelRef` (``spec.py``)
+System description                        :class:`SystemSpec` /
+                                          :class:`PlatformSpec` /
+                                          :class:`LinkSpec`
+Linear schedule (§IV-A)                   ``schedule_policy`` on
+                                          :class:`ExplorationSpec`
+Candidate cuts + memory/link filtering    ``filters.candidate_positions``
+(§IV-B, Def. 1/3)                         + per-(link, position)
+                                          ``filters.link_feasibility``
+Metric evaluation (Table I)               ``repro.core.partition``
+                                          ``PartitionEvaluator`` (shared by
+                                          all strategies)
+Search / NSGA-II (§IV)                    :class:`SearchStrategy` protocol —
+                                          :class:`ExhaustiveSearch`,
+                                          :class:`MultiCutScan`,
+                                          :class:`NSGA2Search`
+Pareto front + Def.-2 selection           ``runner.run_search`` →
+                                          :class:`ExplorationResult`
+Fleet-level studies (many models/         :class:`Campaign` →
+systems, shared cost tables)              :class:`CampaignReport`
+========================================  ====================================
+
+Typical use::
+
+    from repro.explore import (Campaign, ExplorationSpec, ModelRef,
+                               PlatformSpec, SearchSettings, SystemSpec,
+                               run_spec)
+
+    spec = ExplorationSpec(
+        model=ModelRef("cnn", "squeezenet11"),
+        system=SystemSpec(
+            platforms=(PlatformSpec("sensor", "eyr", bits=16),
+                       PlatformSpec("central", "smb", bits=8)),
+            links=("gige",)),
+        objectives=("latency", "energy", "throughput"))
+    result = run_spec(spec)                       # one model × one system
+    print(result.summary())
+
+    fleet = Campaign(spec, models=[ModelRef("cnn", n) for n in zoo])
+    report = fleet.run().report                   # serializable fleet report
+    report.save("campaign.json")
+
+Specs are JSON-round-trippable (``ExplorationSpec.to_json``/``from_json``),
+and strategies are drop-in interchangeable through
+``SearchSettings.strategy``.
+"""
+
+from repro.explore.campaign import (Campaign, CampaignEntry, CampaignReport,
+                                    CampaignResult)
+from repro.explore.filters import (candidate_positions, feasible_cut_rows,
+                                   link_feasibility, link_filter,
+                                   memory_filter)
+from repro.explore.result import (ExplorationResult, eval_from_dict,
+                                  eval_to_dict)
+from repro.explore.runner import (DEFAULT_OBJECTIVES, explore_graph,
+                                  run_search, run_spec, select_weighted)
+from repro.explore.spec import (ExplorationSpec, LinkSpec, ModelRef,
+                                PlatformSpec, SearchSettings, SystemSpec)
+from repro.explore.strategies import (ExhaustiveSearch, MultiCutScan,
+                                      NSGA2Search, SearchContext,
+                                      SearchStrategy, StrategyOutput,
+                                      register_strategy, scaled_nsga_defaults)
+
+__all__ = [
+    "Campaign", "CampaignEntry", "CampaignReport", "CampaignResult",
+    "DEFAULT_OBJECTIVES", "ExhaustiveSearch", "ExplorationResult",
+    "ExplorationSpec", "LinkSpec", "ModelRef", "MultiCutScan", "NSGA2Search",
+    "PlatformSpec", "SearchContext", "SearchSettings", "SearchStrategy",
+    "StrategyOutput", "SystemSpec", "candidate_positions", "eval_from_dict",
+    "eval_to_dict", "explore_graph", "feasible_cut_rows", "link_feasibility",
+    "link_filter", "memory_filter", "register_strategy", "run_search",
+    "run_spec", "scaled_nsga_defaults", "select_weighted",
+]

@@ -1,0 +1,144 @@
+"""Campaign runner: fan one exploration-spec template across many models
+and/or systems in a single run.
+
+Per model, the schedule, the Def.-3 :class:`SegmentMemoryTable` and the
+per-arch ``layer_cost_table`` prefix sums are built **once** and shared
+across every system in the fan-out (two systems built from the same
+accelerator archs never re-profile a layer).  The outcome is a
+:class:`CampaignResult` holding full :class:`ExplorationResult` objects for
+programmatic use plus a JSON-serializable :class:`CampaignReport`
+(per-model Pareto fronts + Def.-2 selections) for storage and dashboards.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.core.graph import linearize
+from repro.core.memory import SegmentMemoryTable
+from repro.explore.result import ExplorationResult
+from repro.explore.spec import ExplorationSpec, ModelRef, SystemSpec
+
+
+@dataclasses.dataclass
+class CampaignEntry:
+    """One (model, system) cell of the fan-out, with its live result."""
+
+    model: str
+    system: str
+    result: ExplorationResult
+    wall_s: float
+
+
+@dataclasses.dataclass
+class CampaignReport:
+    """Serializable campaign outcome (JSON round-trippable)."""
+
+    template: Dict[str, Any]          # the spec template, as a plain dict
+    entries: List[Dict[str, Any]]     # flattened per-(model, system) reports
+    wall_s: float = 0.0
+
+    def to_dict(self) -> Dict[str, Any]:
+        # normalized through JSON so tuples become lists and the dict form
+        # is identical before and after a round-trip
+        return json.loads(json.dumps(dataclasses.asdict(self)))
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=indent)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "CampaignReport":
+        return cls(template=d["template"], entries=list(d["entries"]),
+                   wall_s=float(d.get("wall_s", 0.0)))
+
+    @classmethod
+    def from_json(cls, s: str) -> "CampaignReport":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path: str, indent: int = 1) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json(indent=indent))
+
+    def summary(self) -> str:
+        lines = [f"campaign: {len(self.entries)} (model × system) runs "
+                 f"in {self.wall_s:.1f}s"]
+        for e in self.entries:
+            sel = e.get("selected")
+            pick = (f"cuts={tuple(sel['cuts'])} "
+                    f"lat={sel['latency_s']*1e3:.2f}ms "
+                    f"th={sel['throughput']:.1f}/s"
+                    if sel else "no feasible partitioning")
+            lines.append(f"  {e['model']} × {e['system']}: "
+                         f"|pareto|={len(e['pareto'])}  {pick}")
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass
+class CampaignResult:
+    entries: List[CampaignEntry]
+    report: CampaignReport
+
+    def get(self, model: str, system: Optional[str] = None
+            ) -> ExplorationResult:
+        for e in self.entries:
+            if e.model == model and (system is None or e.system == system):
+                return e.result
+        raise KeyError(f"no campaign entry for model={model!r} "
+                       f"system={system!r}")
+
+
+class Campaign:
+    """Fan an :class:`ExplorationSpec` template across models × systems.
+
+    ``models`` / ``systems`` default to the template's own; objectives,
+    constraints, search settings, schedule policy and batch size come from
+    the template unchanged, so swapping the search strategy for the whole
+    fleet is a one-field edit.
+    """
+
+    def __init__(self, template: ExplorationSpec,
+                 models: Optional[Sequence[ModelRef]] = None,
+                 systems: Optional[Sequence[SystemSpec]] = None):
+        self.template = template
+        self.models = list(models) if models is not None else [template.model]
+        self.systems = (list(systems) if systems is not None
+                        else [template.system])
+
+    def run(self, verbose: bool = False) -> CampaignResult:
+        from repro.explore.runner import explore_graph
+        t_start = time.perf_counter()
+        tpl = self.template
+        entries: List[CampaignEntry] = []
+        for mref in self.models:
+            graph, shared = mref.build()
+            schedule = linearize(graph, tpl.schedule_policy)
+            memtable = SegmentMemoryTable(schedule, shared)
+            cost_cache: Dict = {}     # per-arch tables, shared across systems
+            for sspec in self.systems:
+                t0 = time.perf_counter()
+                res = explore_graph(
+                    graph, sspec.build(), objectives=tpl.objectives,
+                    weights=tpl.weights, constraints=tpl.constraints,
+                    search=tpl.search, batch=tpl.batch,
+                    shared_groups=shared, schedule=schedule,
+                    cost_cache=cost_cache, memtable=memtable)
+                wall = time.perf_counter() - t0
+                entries.append(CampaignEntry(
+                    model=mref.label, system=sspec.label, result=res,
+                    wall_s=wall))
+                if verbose:
+                    sel = res.selected
+                    print(f"[campaign] {mref.label} × {sspec.label}: "
+                          f"|pareto|={len(res.pareto)} "
+                          f"cuts={sel.cuts if sel else None} "
+                          f"({wall:.2f}s)")
+        report = CampaignReport(
+            template=tpl.to_dict(),
+            entries=[{"model": e.model, "system": e.system,
+                      "wall_s": round(e.wall_s, 4), **e.result.to_report()}
+                     for e in entries],
+            wall_s=round(time.perf_counter() - t_start, 4))
+        return CampaignResult(entries=entries, report=report)

@@ -1,0 +1,227 @@
+"""Declarative exploration specs — JSON-round-trippable descriptions of one
+exploration run: *which model*, *which system*, *which objectives and
+constraints*, *which search strategy*.
+
+Everything here is data.  Resolution to live objects (layer graphs,
+``SystemConfig``) happens in :meth:`ModelRef.build` / :meth:`SystemSpec.build`
+so a spec can be stored, diffed, and shipped between machines, then executed
+by :func:`repro.explore.runner.run_spec` or fanned out by
+:class:`repro.explore.campaign.Campaign`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional, Tuple, Union
+
+from repro.core.link import LinkModel, get_link
+from repro.core.partition import Constraints, Platform, SystemConfig
+from repro.core.quant import QuantSpec
+
+VALID_OBJECTIVES = ("latency", "energy", "throughput", "bandwidth",
+                    "memory", "accuracy")
+VALID_STRATEGIES = ("auto", "exhaustive", "multicut", "nsga2")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelRef:
+    """Reference to a model in one of the repo's registries.
+
+    kind:
+      * ``cnn``      — ``repro.models.cnn.zoo`` (options: ``in_hw``,
+        ``n_classes``, ``w`` …, forwarded to the zoo builder).
+      * ``registry`` — ``repro.models.registry`` LLM/SSM configs (options:
+        ``seq`` (required for graph extraction), ``reduced``).
+    """
+
+    kind: str
+    name: str
+    options: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def label(self) -> str:
+        return self.name
+
+    def build(self):
+        """Resolve to ``(LayerGraph, shared_groups or None)``.
+
+        Imports are lazy: CNN graphs need no JAX, registry models do.
+        """
+        if self.kind == "cnn":
+            from repro.models.cnn.zoo import build_cnn
+            return build_cnn(self.name, **self.options).to_graph(), None
+        if self.kind == "registry":
+            from repro.models.registry import build_model, get_config
+            opts = dict(self.options)
+            seq = opts.pop("seq", 1024)
+            reduced = opts.pop("reduced", False)
+            cfg = get_config(self.name)
+            if reduced:
+                cfg = cfg.reduced()
+            model = build_model(cfg)
+            shared = (model.shared_groups()
+                      if hasattr(model, "shared_groups") else None)
+            return model.to_graph(seq), shared
+        raise ValueError(f"unknown model kind {self.kind!r} "
+                         f"(expected 'cnn' or 'registry')")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlatformSpec:
+    """One compute node, by accelerator-registry name (see ``get_arch``)."""
+
+    name: str
+    arch: str
+    bits: int = 8
+    mem_capacity: Optional[int] = None
+
+    def build(self) -> Platform:
+        from repro.core.hwmodel.arch import get_arch
+        return Platform(self.name, get_arch(self.arch),
+                        QuantSpec(bits=self.bits),
+                        mem_capacity=self.mem_capacity)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """A link-registry entry plus optional field overrides (e.g. a slower
+    Ethernet for sensitivity sweeps)."""
+
+    base: str = "gige"
+    name: Optional[str] = None
+    rate_bps: Optional[float] = None
+    t_setup_s: Optional[float] = None
+    payload_bytes: Optional[int] = None
+    header_bytes: Optional[int] = None
+    p_tx_w: Optional[float] = None
+    p_rx_w: Optional[float] = None
+    e_per_byte_j: Optional[float] = None
+
+    _OVERRIDES = ("name", "rate_bps", "t_setup_s", "payload_bytes",
+                  "header_bytes", "p_tx_w", "p_rx_w", "e_per_byte_j")
+
+    def build(self) -> LinkModel:
+        link = get_link(self.base)
+        over = {f: getattr(self, f) for f in self._OVERRIDES
+                if getattr(self, f) is not None}
+        return dataclasses.replace(link, **over) if over else link
+
+
+LinkLike = Union[str, LinkSpec]
+
+
+def as_link_spec(link: LinkLike) -> LinkSpec:
+    return LinkSpec(base=link) if isinstance(link, str) else link
+
+
+@dataclasses.dataclass(frozen=True)
+class SystemSpec:
+    """A chain of platforms: ``platforms[i] --links[i]--> platforms[i+1]``."""
+
+    platforms: Tuple[PlatformSpec, ...]
+    links: Tuple[LinkSpec, ...]
+    name: Optional[str] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "platforms", tuple(self.platforms))
+        object.__setattr__(
+            self, "links", tuple(as_link_spec(l) for l in self.links))
+        if len(self.links) != len(self.platforms) - 1:
+            raise ValueError(
+                f"{len(self.platforms)} platforms need "
+                f"{len(self.platforms) - 1} links, got {len(self.links)}")
+
+    @property
+    def label(self) -> str:
+        return self.name or "+".join(p.name for p in self.platforms)
+
+    def build(self) -> SystemConfig:
+        return SystemConfig([p.build() for p in self.platforms],
+                            [l.build() for l in self.links])
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSettings:
+    """Which :class:`~repro.explore.strategies.SearchStrategy` runs and how.
+
+    ``auto`` reproduces the legacy ``Explorer.run`` policy: exhaustive
+    single-cut scan when the system has one link, NSGA-II on top when
+    ``n_cuts > 1`` or the candidate list is large (override via
+    ``use_nsga``).  ``pop_size``/``n_gen`` of ``None`` scale with the
+    schedule depth and cut count (see ``scaled_nsga_defaults``) — sized for
+    the batched evaluator, not the old scalar loop.
+    """
+
+    strategy: str = "auto"
+    seed: int = 0
+    pop_size: Optional[int] = None
+    n_gen: Optional[int] = None
+    use_nsga: Optional[bool] = None
+    max_scan: int = 1_000_000     # MultiCutScan enumeration cap
+    scan_chunk: int = 4096        # rows per evaluate_batch call in scans
+    allow_multi_tensor_cuts: bool = False
+
+    def __post_init__(self):
+        if self.strategy not in VALID_STRATEGIES:
+            raise ValueError(f"unknown strategy {self.strategy!r}; "
+                             f"expected one of {VALID_STRATEGIES}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExplorationSpec:
+    """One declarative exploration campaign unit: model × system × search.
+
+    JSON-round-trippable (``to_json`` / ``from_json``); resolve and run with
+    :func:`repro.explore.runner.run_spec`.
+    """
+
+    model: ModelRef
+    system: SystemSpec
+    objectives: Tuple[str, ...] = ("latency", "energy")
+    weights: Optional[Tuple[float, ...]] = None
+    constraints: Constraints = dataclasses.field(default_factory=Constraints)
+    search: SearchSettings = dataclasses.field(default_factory=SearchSettings)
+    schedule_policy: str = "min_memory"
+    batch: int = 1
+
+    def __post_init__(self):
+        object.__setattr__(self, "objectives", tuple(self.objectives))
+        if self.weights is not None:
+            object.__setattr__(self, "weights", tuple(self.weights))
+        for o in self.objectives:
+            if o not in VALID_OBJECTIVES:
+                raise ValueError(f"unknown objective {o!r}; "
+                                 f"expected one of {VALID_OBJECTIVES}")
+        if self.weights is not None and len(self.weights) != len(self.objectives):
+            raise ValueError("weights must match objectives")
+
+    # -- serialization -------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ExplorationSpec":
+        sys_d = d["system"]
+        system = SystemSpec(
+            platforms=tuple(PlatformSpec(**p) for p in sys_d["platforms"]),
+            links=tuple(LinkSpec(**l) if isinstance(l, dict) else l
+                        for l in sys_d["links"]),
+            name=sys_d.get("name"))
+        weights = d.get("weights")
+        return cls(
+            model=ModelRef(**d["model"]),
+            system=system,
+            objectives=tuple(d.get("objectives", ("latency", "energy"))),
+            weights=tuple(weights) if weights is not None else None,
+            constraints=Constraints(**d.get("constraints", {})),
+            search=SearchSettings(**d.get("search", {})),
+            schedule_policy=d.get("schedule_policy", "min_memory"),
+            batch=d.get("batch", 1))
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExplorationSpec":
+        return cls.from_dict(json.loads(s))

@@ -1,0 +1,262 @@
+"""Pluggable search strategies (Fig. 1 stages 4–5).
+
+Every strategy consumes the same :class:`SearchContext` — a shared
+:class:`~repro.core.partition.PartitionEvaluator`, the filtered candidate
+positions, constraints, objectives — and returns a :class:`StrategyOutput`
+pool of evaluated placements, so strategies are interchangeable through one
+:class:`~repro.explore.spec.ExplorationSpec` and directly comparable in
+tests:
+
+* :class:`ExhaustiveSearch` — single-cut scan over the candidates (today's
+  default path; exact for two-platform systems).
+* :class:`MultiCutScan`    — exhaustive enumeration of every sorted k-cut
+  vector over the candidate table, chunked through ``evaluate_batch`` with
+  a streaming non-dominated archive.  Exact ground truth for small systems
+  now that ~1M evals/s are available.
+* :class:`NSGA2Search`     — the genetic search of ``repro.core.nsga2``
+  with population/generation defaults scaled to the schedule depth and cut
+  count (not the old scalar-loop constants).
+
+Register additional strategies with :func:`register_strategy`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Dict, List, Optional, Protocol, Tuple, Type, runtime_checkable
+
+import numpy as np
+
+from repro.core.nsga2 import (NSGA2Result, dominates_matrix,
+                              non_dominated_mask, nsga2)
+from repro.core.partition import (Constraints, PartitionEval,
+                                  PartitionEvaluator)
+from repro.explore.filters import feasible_cut_rows
+from repro.explore.spec import SearchSettings
+
+# full per-point scans are kept (for Fig.-2-style plots) only below this size
+_ALL_EVALS_CAP = 16384
+
+
+@dataclasses.dataclass
+class SearchContext:
+    """Everything a strategy needs; shared across strategies of one run."""
+
+    evaluator: PartitionEvaluator
+    candidates: List[int]
+    constraints: Constraints
+    objectives: Tuple[str, ...]
+    settings: SearchSettings
+    link_feas: Optional[np.ndarray] = None   # (n_links, L-1) or None
+
+    @property
+    def n_cuts(self) -> int:
+        return self.evaluator.system.n_cuts
+
+    @property
+    def depth(self) -> int:
+        return len(self.evaluator.schedule)
+
+
+@dataclasses.dataclass
+class StrategyOutput:
+    evals: List[PartitionEval]
+    all_evals: List[PartitionEval] = dataclasses.field(default_factory=list)
+    nsga: Optional[NSGA2Result] = None
+    exhaustive: bool = False   # exact scans precede baselines in the pool
+    n_evaluated: int = 0       # candidate vectors actually scored
+
+
+@runtime_checkable
+class SearchStrategy(Protocol):
+    """The strategy protocol: a name and one ``search`` method."""
+
+    name: str
+
+    def search(self, ctx: SearchContext) -> StrategyOutput: ...
+
+
+def scaled_nsga_defaults(n_candidates: int, n_cuts: int,
+                         depth: int) -> Tuple[int, int]:
+    """Population/generation defaults sized for the batched evaluator.
+
+    The paper sizes the GA by layer count; with ``evaluate_batch`` scoring
+    ~1M candidates/s a generation costs one vectorized call, so defaults
+    scale with the gene space (candidates × cuts) and the schedule depth
+    instead of the old fixed small constants.
+    """
+    span = n_candidates + 2                  # + the -1 / L-1 sentinels
+    pop = int(np.clip(8.0 * np.sqrt(span * max(n_cuts, 1)), 64, 512))
+    pop = max(pop // 4 * 4, 16)
+    n_gen = int(np.clip(depth // 2, 24, 120))
+    return pop, n_gen
+
+
+def _gene_table(ctx: SearchContext) -> np.ndarray:
+    """Gene values: [skip-sentinel -1] + candidates + [end-sentinel L-1]."""
+    return np.array([-1] + list(ctx.candidates) + [ctx.depth - 1], dtype=int)
+
+
+class ExhaustiveSearch:
+    """Single-cut scan: every candidate as the first (only) cut, remaining
+    platforms idle.  For two-platform systems this is the exact Fig.-2 scan
+    and matches the legacy ``Explorer.run`` point set bit-for-bit."""
+
+    name = "exhaustive"
+
+    def search(self, ctx: SearchContext) -> StrategyOutput:
+        if not ctx.candidates:
+            return StrategyOutput([], exhaustive=True)
+        C = np.full((len(ctx.candidates), ctx.n_cuts), ctx.depth - 1,
+                    dtype=int)
+        C[:, 0] = ctx.candidates
+        evals = ctx.evaluator.evaluate_batch(C, ctx.constraints).to_evals()
+        return StrategyOutput(evals, all_evals=evals, exhaustive=True,
+                              n_evaluated=len(evals))
+
+
+class MultiCutScan:
+    """Exhaustive k-cut enumeration over the candidate table.
+
+    Enumerates every sorted cut vector (with the skip/end sentinels, so
+    fewer-partition schedules are included — the Table-II effect), prunes
+    rows whose active cuts fail the per-(link, position) feasibility matrix
+    exactly, and streams chunks through ``evaluate_batch`` while keeping a
+    running constrained non-dominated archive — memory stays bounded even
+    for hundreds of thousands of combinations.
+    """
+
+    name = "multicut"
+
+    def search(self, ctx: SearchContext) -> StrategyOutput:
+        if not ctx.candidates:
+            return StrategyOutput([], exhaustive=True)
+        table = _gene_table(ctx)
+        k = ctx.n_cuts
+        n_combos = math.comb(len(table) + k - 1, k)
+        if n_combos > ctx.settings.max_scan:
+            raise ValueError(
+                f"MultiCutScan: {n_combos} cut vectors exceed "
+                f"max_scan={ctx.settings.max_scan}; use the 'nsga2' "
+                f"strategy for this system or raise SearchSettings.max_scan")
+        keep_all = n_combos <= _ALL_EVALS_CAP
+        all_evals: List[PartitionEval] = []
+        front_evals: List[PartitionEval] = []
+        front_F = front_CV = None
+        n_evaluated = 0
+        chunk = max(int(ctx.settings.scan_chunk), 1)
+        combos = itertools.combinations_with_replacement(table.tolist(), k)
+        while True:
+            block = list(itertools.islice(combos, chunk))
+            if not block:
+                break
+            C = np.asarray(block, dtype=np.int64)
+            C = C[feasible_cut_rows(C, ctx.evaluator, ctx.link_feas)]
+            if not len(C):
+                continue
+            be = ctx.evaluator.evaluate_batch(C, ctx.constraints)
+            n_evaluated += len(be)
+            if keep_all:
+                all_evals.extend(be.to_evals())
+            F = be.as_objectives(ctx.objectives)
+            CV = be.violation
+            if front_F is not None:
+                # cheap pre-filter: drop rows the archive already dominates
+                # (|archive| × chunk) before the quadratic in-chunk mask
+                dom = dominates_matrix(front_F, front_CV, F, CV)
+                alive = np.flatnonzero(~dom.any(axis=0))
+                if not len(alive):
+                    continue
+                F2 = np.concatenate([front_F, F[alive]])
+                CV2 = np.concatenate([front_CV, CV[alive]])
+            else:
+                alive = np.arange(len(F))
+                F2, CV2 = F, CV
+            n_arch = len(front_evals)
+            fr = np.flatnonzero(non_dominated_mask(F2, CV2))
+            front_evals = [front_evals[j] if j < n_arch
+                           else be.row(alive[j - n_arch]) for j in fr]
+            front_F, front_CV = F2[fr], CV2[fr]
+        # all_evals stays empty above the cap: only a full scan may pose as
+        # "every point" (n_evaluated records the true coverage either way)
+        return StrategyOutput(front_evals, all_evals=all_evals,
+                              exhaustive=True, n_evaluated=n_evaluated)
+
+
+class NSGA2Search:
+    """NSGA-II over gene indices into the candidate table (§IV)."""
+
+    name = "nsga2"
+
+    def search(self, ctx: SearchContext) -> StrategyOutput:
+        cands = ctx.candidates
+        if not cands:
+            return StrategyOutput([])
+        evaluator = ctx.evaluator
+        table = _gene_table(ctx)
+        n_cuts = ctx.n_cuts
+
+        def _decode(G: np.ndarray) -> np.ndarray:
+            return np.sort(table[G], axis=1)
+
+        def _eval(G: np.ndarray):
+            # one vectorized call per generation — the NSGA-II hot path
+            be = evaluator.evaluate_batch(_decode(G), ctx.constraints)
+            return be.as_objectives(ctx.objectives), be.violation
+
+        seeds = []
+        for p in cands[:: max(1, len(cands) // 16)]:
+            i = 1 + cands.index(p)
+            seeds.append([i] + [len(table) - 1] * (n_cuts - 1))
+        pop, n_gen = ctx.settings.pop_size, ctx.settings.n_gen
+        if pop is None or n_gen is None:
+            dpop, dgen = scaled_nsga_defaults(len(cands), n_cuts, ctx.depth)
+            pop, n_gen = pop or dpop, n_gen or dgen
+        res = nsga2(_eval, n_var=n_cuts, lower=0, upper=len(table) - 1,
+                    seed=ctx.settings.seed, candidates=seeds,
+                    pop_size=pop, n_gen=n_gen)
+        evals: List[PartitionEval] = []
+        if len(res.pareto_X):
+            evals = evaluator.evaluate_batch(
+                _decode(res.pareto_X), ctx.constraints).to_evals()
+        return StrategyOutput(evals, nsga=res,
+                              n_evaluated=pop * (n_gen + 1))
+
+
+STRATEGIES: Dict[str, Type] = {
+    "exhaustive": ExhaustiveSearch,
+    "multicut": MultiCutScan,
+    "nsga2": NSGA2Search,
+}
+
+
+def register_strategy(name: str, cls: Type) -> None:
+    """Register a custom :class:`SearchStrategy` implementation."""
+    STRATEGIES[name] = cls
+
+
+def resolve_strategies(settings: SearchSettings, n_cuts: int,
+                       n_candidates: int) -> List[SearchStrategy]:
+    """Map a strategy name to concrete instances.
+
+    ``auto`` reproduces the legacy policy: exhaustive scan for single-cut
+    systems, plus NSGA-II when ``n_cuts > 1`` or the candidate list is
+    large (``settings.use_nsga`` overrides).
+    """
+    if settings.strategy == "auto":
+        out: List[SearchStrategy] = []
+        if n_cuts == 1:
+            out.append(ExhaustiveSearch())
+        use = settings.use_nsga
+        if use is None:
+            use = n_cuts > 1 or n_candidates > 64
+        if use:
+            out.append(NSGA2Search())
+        return out
+    try:
+        return [STRATEGIES[settings.strategy]()]
+    except KeyError:
+        raise ValueError(f"unknown strategy {settings.strategy!r}; "
+                         f"have {['auto'] + sorted(STRATEGIES)}")

@@ -136,9 +136,9 @@ def explorer_stage_boundary(cfg: ModelConfig, seq: int, n_stages: int,
     Pareto-selected cut is the balanced split; heterogeneous pod mixes move
     it — both come from the same machinery (DESIGN.md §5).
     """
-    from repro.core import (Constraints, Explorer, Platform, QuantSpec,
-                            SystemConfig, get_link)
+    from repro.core import Platform, QuantSpec, SystemConfig, get_link
     from repro.core.hwmodel.arch import TPU_V5E
+    from repro.explore import SearchSettings, explore_graph
     from repro.models.registry import build_model
     import dataclasses as dc
 
@@ -148,11 +148,15 @@ def explorer_stage_boundary(cfg: ModelConfig, seq: int, n_stages: int,
                    QuantSpec(bits=16))
     system = SystemConfig([pod] * n_stages,
                           [get_link(link)] * (n_stages - 1))
-    ex = Explorer(graph, system, objectives=("latency", "throughput"),
-                  schedule_policy="insertion")
-    res = ex.run(seed=0)
+    res = explore_graph(graph, system, objectives=("latency", "throughput"),
+                        schedule_policy="insertion",
+                        search=SearchSettings(seed=0))
     # map graph cut positions back to block indices (2 nodes per block:
     # attention + ffn, plus embed at 0)
+    if res.selected is None:          # no feasible partition: balanced split
+        step = max(1, cfg.n_layers // n_stages)
+        return [min(cfg.n_layers - 1, (k + 1) * step - 1)
+                for k in range(n_stages - 1)], res
     cuts = []
     for c in res.selected.cuts:
         layer = max(0, min(cfg.n_layers - 1, c // 2))

@@ -21,8 +21,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Explorer, Platform, QuantSpec, SystemConfig, get_link)
+from repro.core import (Platform, QuantSpec, SystemConfig, get_link)
 from repro.core.hwmodel.arch import EYERISS_LIKE, SIMBA_LIKE
+from repro.explore import SearchSettings, explore_graph
 from repro.data.synthetic import SyntheticTokens, make_batch_for
 from repro.models.registry import ARCH_IDS, get_config, build_model
 from repro.optim.optimizers import get_optimizer
@@ -74,12 +75,12 @@ def main():
             [Platform("A", EYERISS_LIKE, QuantSpec(bits=16)),
              Platform("B", SIMBA_LIKE, QuantSpec(bits=8))],
             [get_link("gige")])
-        ex = Explorer(graph, system,
-                      objectives=("latency", "energy", "throughput"))
-        er = ex.run(seed=0)
+        er = explore_graph(graph, system,
+                           objectives=("latency", "energy", "throughput"),
+                           search=SearchSettings(seed=0))
         print("[serve] explorer:")
         print(er.summary())
-        cut = er.selected.cuts[0]
+        cut = er.selected.cuts[0] if er.selected is not None else 0
         layer_cut = max(0, min(cfg.n_layers - 2, (cut - 1) // 2))
         runner = PartitionedLMRunner(model, params, [layer_cut])
         batch = {"tokens": jnp.asarray(prompts)}

@@ -1,0 +1,341 @@
+"""The declarative exploration API (`repro.explore`): spec/report JSON
+round-trips, strategy equivalence (exhaustive ≡ legacy shim; MultiCutScan ⊇
+NSGA-II), campaign fan-out with shared cost tables, the per-(link, position)
+feasibility filter, and the deprecation shim."""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import layers as L
+from repro.core.graph import LayerGraph
+from repro.core.nsga2 import dominates
+from repro.core.partition import Constraints
+from repro.explore import (Campaign, CampaignReport, ExplorationResult,
+                           ExplorationSpec, LinkSpec, ModelRef, PlatformSpec,
+                           SearchSettings, SystemSpec, eval_from_dict,
+                           eval_to_dict, explore_graph, link_feasibility,
+                           feasible_cut_rows, run_spec, scaled_nsga_defaults)
+
+TWO_PLATFORM = SystemSpec(
+    platforms=(PlatformSpec("A", "eyr", bits=16),
+               PlatformSpec("B", "smb", bits=8)),
+    links=("gige",))
+
+FOUR_PLATFORM = SystemSpec(
+    platforms=(PlatformSpec("A0", "eyr", bits=16),
+               PlatformSpec("A1", "eyr", bits=16),
+               PlatformSpec("B0", "smb", bits=8),
+               PlatformSpec("B1", "smb", bits=8)),
+    links=("gige", "gige", "gige"))
+
+SQUEEZE = ModelRef("cnn", "squeezenet11", {"in_hw": 64})
+
+
+def make_spec(**kw):
+    defaults = dict(model=SQUEEZE, system=TWO_PLATFORM,
+                    objectives=("latency", "energy"))
+    defaults.update(kw)
+    return ExplorationSpec(**defaults)
+
+
+# -- spec / report serialization ----------------------------------------------
+
+def test_spec_json_roundtrip():
+    spec = make_spec(
+        system=SystemSpec(
+            platforms=(PlatformSpec("A", "eyr", bits=16,
+                                    mem_capacity=123456),
+                       PlatformSpec("B", "smb", bits=8)),
+            links=(LinkSpec(base="gige", name="slow", rate_bps=1e8),),
+            name="ab"),
+        objectives=("latency", "energy", "throughput"),
+        weights=(2.0, 1.0, 1.0),
+        constraints=Constraints(max_link_bytes=2_000_000, min_accuracy=0.5),
+        search=SearchSettings(strategy="multicut", seed=3, max_scan=5000),
+        batch=4)
+    s = spec.to_json()
+    spec2 = ExplorationSpec.from_json(s)
+    assert spec2 == spec
+    # stable through a second trip, and valid JSON throughout
+    assert json.loads(spec2.to_json()) == json.loads(s)
+    # resolvable to live objects
+    system = spec2.system.build()
+    assert system.platforms[0].capacity == 123456
+    assert system.links[0].rate_bps == 1e8
+
+
+def test_spec_rejects_bad_fields():
+    with pytest.raises(ValueError):
+        make_spec(objectives=("latency", "speed"))
+    with pytest.raises(ValueError):
+        make_spec(search=SearchSettings(strategy="magic"))
+    with pytest.raises(ValueError):
+        SystemSpec(platforms=(PlatformSpec("A", "eyr"),), links=("gige",))
+
+
+def test_eval_dict_roundtrip():
+    res = run_spec(make_spec())
+    for ev in res.pareto + res.baselines:
+        d = json.loads(json.dumps(eval_to_dict(ev)))
+        assert eval_from_dict(d) == ev
+
+
+# -- strategy equivalence -----------------------------------------------------
+
+@pytest.fixture(scope="module")
+def squeezenet_objects():
+    graph, _ = SQUEEZE.build()
+    return graph, TWO_PLATFORM.build()
+
+
+def test_exhaustive_matches_legacy_explorer(squeezenet_objects):
+    """The new ExhaustiveSearch reproduces the legacy Explorer.run output
+    exactly (same candidates, same scan points, same front, same pick)."""
+    graph, system = squeezenet_objects
+    objectives = ("latency", "energy", "throughput")
+    with pytest.warns(DeprecationWarning):
+        from repro.core import Explorer
+        legacy = Explorer(graph, system, objectives=objectives)
+    res_old = legacy.run(seed=0, use_nsga=False)
+    res_new = explore_graph(
+        graph, system, objectives=objectives,
+        search=SearchSettings(strategy="exhaustive"))
+    assert res_new.candidates == res_old.candidates
+    assert [e.cuts for e in res_new.all_evals] == \
+           [e.cuts for e in res_old.all_evals]
+    assert [e.cuts for e in res_new.pareto] == \
+           [e.cuts for e in res_old.pareto]
+    for a, b in zip(res_new.pareto, res_old.pareto):
+        assert a == b
+    assert res_new.selected == res_old.selected
+
+
+def test_multicut_front_contains_nsga_front(squeezenet_objects):
+    """MultiCutScan is exhaustive ground truth over the encoded cut space;
+    no NSGA-II front point may dominate it, on the same spec with only the
+    strategy swapped (drop-in interchangeability)."""
+    graph, _ = squeezenet_objects
+    base = make_spec(system=FOUR_PLATFORM,
+                     objectives=("latency", "energy", "bandwidth"))
+    spec_scan = dataclasses.replace(
+        base, search=SearchSettings(strategy="multicut"))
+    spec_ga = dataclasses.replace(
+        base, search=SearchSettings(strategy="nsga2", seed=1,
+                                    pop_size=32, n_gen=12))
+    res_scan = run_spec(spec_scan)
+    res_ga = run_spec(spec_ga)
+    assert res_scan.strategy == "multicut"
+    assert res_ga.nsga is not None
+    F_scan = [np.array(e.as_objectives(base.objectives))
+              for e in res_scan.pareto]
+    for ev in res_ga.pareto:
+        f = np.array(ev.as_objectives(base.objectives))
+        assert not any(dominates(f, g) for g in F_scan), \
+            f"NSGA point {ev.cuts} dominates the exhaustive front"
+
+
+def test_multicut_includes_fewer_partition_schedules():
+    """The scan covers the skip/end sentinels, so Table-II-style
+    fewer-partition schedules appear in the evaluated pool."""
+    g = LayerGraph(name="chain")
+    g.chain([L.conv_layer(f"conv{i}", 16, 16, (16, 16), 3)
+             for i in range(8)])
+    spec = ExplorationSpec(
+        model=SQUEEZE, system=FOUR_PLATFORM,
+        objectives=("latency", "energy"),
+        search=SearchSettings(strategy="multicut"))
+    res = explore_graph(g, spec.system.build(),
+                        objectives=spec.objectives, search=spec.search)
+    n_parts = {e.n_partitions for e in res.all_evals}
+    assert 1 in n_parts and 2 in n_parts
+
+
+def test_multicut_scan_cap():
+    spec = make_spec(system=FOUR_PLATFORM,
+                     search=SearchSettings(strategy="multicut", max_scan=10))
+    with pytest.raises(ValueError, match="max_scan"):
+        run_spec(spec)
+
+
+def test_scaled_nsga_defaults_grow_with_problem():
+    p1, g1 = scaled_nsga_defaults(10, 1, 20)
+    p2, g2 = scaled_nsga_defaults(200, 3, 200)
+    assert p2 > p1 and g2 > g1
+    assert p2 <= 512 and g2 <= 120
+
+
+# -- per-(link, position) feasibility -----------------------------------------
+
+def test_link_feasibility_matrix_heterogeneous():
+    """A 16-bit producer link can be infeasible where the 8-bit one is
+    fine; the matrix prices each link at its own producer width."""
+    g = LayerGraph(name="chain")
+    couts = [4, 4, 32, 4, 4, 4]          # conv2's output tensor is the fat one
+    cin = 4
+    chain = []
+    for i, co in enumerate(couts):
+        chain.append(L.conv_layer(f"conv{i}", cin, co, (16, 16), 3))
+        cin = co
+    g.chain(chain)
+    system = SystemSpec(
+        platforms=(PlatformSpec("A", "smb", bits=8),
+                   PlatformSpec("B", "eyr", bits=16),
+                   PlatformSpec("C", "smb", bits=8)),
+        links=("gige", "gige")).build()
+    from repro.core.partition import PartitionEvaluator
+    sched = g.topo_sort()
+    ev = PartitionEvaluator(g, sched, system)
+    elems = ev.cut_elements()
+    cap = int(np.ceil(elems.max() * 1.0))       # fits at 1 B/elem, not 2
+    feas = link_feasibility(ev, cap)
+    assert feas.shape == (2, len(sched) - 1)
+    p = int(np.argmax(elems))
+    assert feas[0, p] and not feas[1, p]
+    # exact row pruning: the fat cut is allowed on link 0, not on link 1
+    C = np.array([[p, len(sched) - 1],          # p feeds link 0 -> keep
+                  [0, p]])                      # p feeds link 1 -> drop
+    keep = feasible_cut_rows(C, ev, feas)
+    assert keep.tolist() == [True, False]
+    # and pruning is exact: the dropped row really violates the budget
+    bad = ev.evaluate(C[1], Constraints(max_link_bytes=cap))
+    assert bad.link_bytes > cap
+
+
+def test_multicut_pruning_matches_bruteforce():
+    """Scan with the feasibility pre-filter finds the same front as brute
+    force evaluation of every combination under the constraint."""
+    g = LayerGraph(name="chain")
+    g.chain([L.conv_layer(f"conv{i}", 8, 8, (12, 12), 3) for i in range(7)])
+    system = SystemSpec(
+        platforms=(PlatformSpec("A", "smb", bits=8),
+                   PlatformSpec("B", "eyr", bits=16),
+                   PlatformSpec("C", "smb", bits=8)),
+        links=("gige", "gige")).build()
+    from repro.core.partition import PartitionEvaluator
+    sched = g.topo_sort()
+    ev = PartitionEvaluator(g, sched, system)
+    cap = int(ev.cut_elements().max())          # tight heterogeneous budget
+    cons = Constraints(max_link_bytes=cap)
+    res = explore_graph(g, system, objectives=("latency", "energy"),
+                        constraints=cons,
+                        search=SearchSettings(strategy="multicut"))
+    for e in res.pareto:
+        assert e.violation <= 0
+        assert e.link_bytes <= cap
+
+
+# -- campaign -----------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def campaign_result():
+    spec = ExplorationSpec(
+        model=SQUEEZE, system=TWO_PLATFORM,
+        objectives=("latency", "energy", "throughput"))
+    models = [ModelRef("cnn", n, {"in_hw": 64})
+              for n in ("squeezenet11", "vgg16", "resnet50")]
+    return Campaign(spec, models=models).run()
+
+
+def test_campaign_scores_three_models(campaign_result):
+    cr = campaign_result
+    assert len(cr.entries) == 3
+    for e in cr.entries:
+        assert len(e.result.pareto) >= 1
+        assert e.result.selected is not None
+        assert e.result.selected.violation <= 0
+    assert {e.model for e in cr.entries} == \
+           {"squeezenet11", "vgg16", "resnet50"}
+    # entries retrievable by model label
+    assert cr.get("vgg16").selected is not None
+
+
+def test_campaign_report_json_roundtrip(campaign_result):
+    rep = campaign_result.report
+    rep2 = CampaignReport.from_json(rep.to_json())
+    assert rep2.to_dict() == rep.to_dict()
+    assert len(rep2.entries) == 3
+    for e in rep2.entries:
+        assert e["selected"] is not None
+        assert eval_from_dict(e["selected"]).cuts == \
+               tuple(e["selected"]["cuts"])
+    # the template itself round-trips back into a runnable spec
+    assert ExplorationSpec.from_dict(rep2.template) is not None
+    assert rep.summary()
+
+
+def test_campaign_shares_cost_tables(monkeypatch):
+    """Two systems over the same archs must profile each arch once per
+    model, not once per (model, system)."""
+    import repro.core.partition as P
+    calls = []
+    real = P.layer_cost_table
+
+    def counting(schedule, arch, batch):
+        calls.append(arch.name)
+        return real(schedule, arch, batch)
+
+    monkeypatch.setattr(P, "layer_cost_table", counting)
+    spec = ExplorationSpec(model=SQUEEZE, system=TWO_PLATFORM,
+                           objectives=("latency", "energy"))
+    sys_b = SystemSpec(
+        platforms=(PlatformSpec("A2", "eyr", bits=16),
+                   PlatformSpec("B2", "smb", bits=8)),
+        links=(LinkSpec(base="gige", rate_bps=1e8),), name="slow")
+    Campaign(spec, systems=[TWO_PLATFORM, sys_b]).run()
+    # one EYR + one SMB profile total, despite two systems
+    assert sorted(calls) == ["EYR", "SMB"]
+
+
+# -- result robustness (satellite: empty fronts / sentinel cuts) --------------
+
+def test_summary_handles_empty_front_and_sentinel_cuts():
+    res = run_spec(make_spec())
+    empty = ExplorationResult(
+        schedule=res.schedule, candidates=[], all_evals=[], pareto=[],
+        selected=None, baselines=res.baselines, objectives=res.objectives)
+    text = empty.summary()
+    assert "no feasible partitioning" in text
+    rep = empty.to_report()
+    assert rep["selected"] is None and rep["pareto"] == []
+    # sentinel / out-of-range cut indices must not raise
+    weird = dataclasses.replace(
+        res.baselines[0], cuts=(-1, 10 ** 6)[:len(res.baselines[0].cuts)])
+    patched = ExplorationResult(
+        schedule=res.schedule, candidates=res.candidates, all_evals=[],
+        pareto=[weird], selected=weird, baselines=res.baselines,
+        objectives=res.objectives)
+    assert "-" in patched.summary()
+    assert patched.to_report()["selected_layers"] == ["-"] * len(weird.cuts)
+
+
+def test_infeasible_everything_still_returns_result():
+    """Absurd constraints: no feasible cut, baselines infeasible — the
+    result must still materialize (pool falls back to baselines)."""
+    g = LayerGraph(name="chain")
+    g.chain([L.conv_layer(f"conv{i}", 8, 8, (8, 8), 3) for i in range(5)])
+    system = SystemSpec(
+        platforms=(PlatformSpec("A", "eyr", bits=16, mem_capacity=10),
+                   PlatformSpec("B", "smb", bits=8, mem_capacity=10)),
+        links=("gige",)).build()
+    res = explore_graph(g, system, objectives=("latency", "energy"),
+                        constraints=Constraints(max_link_bytes=1))
+    assert res.candidates == []
+    assert res.summary()          # must not raise
+    assert res.selected is not None   # least-bad baseline still picked
+
+
+# -- deprecation shim ---------------------------------------------------------
+
+def test_explorer_shim_warns_and_delegates(squeezenet_objects):
+    graph, system = squeezenet_objects
+    from repro.core import Explorer
+    with pytest.warns(DeprecationWarning, match="repro.explore"):
+        ex = Explorer(graph, system, objectives=("latency", "energy"))
+    res = ex.run(seed=0)
+    assert isinstance(res, ExplorationResult)
+    assert ex.candidate_cuts() == res.candidates
+    # shim filters agree with the new filter pipeline
+    assert ex._memory_filter(list(range(len(ex.schedule) - 1)))

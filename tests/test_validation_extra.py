@@ -7,27 +7,33 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core import Explorer, Platform, QuantSpec, SystemConfig, get_link
+from repro.core import Platform, QuantSpec, SystemConfig, get_link
 from repro.core.hwmodel import EYERISS_LIKE, SIMBA_LIKE
 from repro.core.nsga2 import dominates, fast_non_dominated_sort
+from repro.explore import SearchSettings, explore_graph
 from repro.models.cnn.zoo import build_cnn
 from repro.models.registry import build_model, get_config
 
 
 def test_nsga_recovers_exhaustive_front():
     """On a single-cut system the exhaustive Pareto front is ground truth;
-    NSGA-II (forced on) must return only non-dominated points w.r.t. it."""
+    NSGA-II must return only non-dominated points w.r.t. it."""
     g = build_cnn("squeezenet11", in_hw=64).to_graph()
     system = SystemConfig(
         [Platform("A", EYERISS_LIKE, QuantSpec(bits=16)),
          Platform("B", SIMBA_LIKE, QuantSpec(bits=8))],
         [get_link("gige")])
-    ex = Explorer(g, system, objectives=("latency", "energy"))
-    res_exh = ex.run(seed=0, use_nsga=False)
-    res_nsga = ex.run(seed=1, use_nsga=True, pop_size=24, n_gen=20)
-    F_exh = np.array([e.as_objectives(ex.objectives) for e in res_exh.pareto])
+    objectives = ("latency", "energy")
+    res_exh = explore_graph(
+        g, system, objectives=objectives,
+        search=SearchSettings(strategy="exhaustive", seed=0))
+    res_nsga = explore_graph(
+        g, system, objectives=objectives,
+        search=SearchSettings(strategy="nsga2", seed=1, pop_size=24,
+                              n_gen=20))
+    F_exh = np.array([e.as_objectives(objectives) for e in res_exh.pareto])
     for ev in res_nsga.pareto:
-        f = np.array(ev.as_objectives(ex.objectives))
+        f = np.array(ev.as_objectives(objectives))
         assert not any(dominates(g_, f) for g_ in F_exh), \
             f"NSGA point {ev.cuts} dominated by exhaustive front"
 
