@@ -14,7 +14,6 @@ import os
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import csv_row, timed
 from repro.core import QuantSpec

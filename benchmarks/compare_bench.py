@@ -1,0 +1,130 @@
+"""Perf-regression gate over ``BENCH_explorer.json`` artifacts.
+
+Diffs the search-path throughput keys of the current benchmark run against a
+baseline (the previous successful CI run's uploaded artifact, falling back
+to the committed ``benchmarks/baseline_explorer.json``) and exits non-zero
+when any tracked metric regressed by more than ``--max-regression``
+(default 20%) — the ROADMAP "perf trajectory" gate.
+
+Tracked keys:
+
+* higher is better: ``batch_evals_per_s``, ``nsga_evals_per_s``,
+  ``jit_nsga_evals_per_s``
+* lower is better:  ``campaign_wall_s``
+
+Baselines are only comparable when their ``bench_schema`` matches the
+current run's (key semantics change across schema bumps — e.g. schema 2
+moved ``nsga_evals_per_s`` to pop 2048); mismatching baselines are skipped.
+The committed fallback baseline is an intentionally conservative floor (CI
+runners are slower than dev machines), not a fresh measurement.
+
+CI runs the gate twice: tight (20%) against the deterministic committed
+floor, and looser (``--max-regression 0.5``) against the previous run's
+artifact — absolute evals/s vary across heterogeneous hosted runners, so a
+tight threshold there would flag runner lottery, not code.
+
+  python benchmarks/compare_bench.py --current BENCH_explorer.json \
+      --baseline prev/BENCH_explorer.json \
+      --baseline benchmarks/baseline_explorer.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Optional, Tuple
+
+HIGHER_BETTER = ("batch_evals_per_s", "nsga_evals_per_s",
+                 "jit_nsga_evals_per_s")
+LOWER_BETTER = ("campaign_wall_s",)
+
+
+def load(path: str) -> Optional[dict]:
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"note: unreadable baseline {path}: {e}")
+        return None
+
+
+def pick_baseline(paths, schema) -> Tuple[Optional[dict], Optional[str]]:
+    """First baseline that exists and speaks the current schema."""
+    for p in paths:
+        d = load(p)
+        if d is None:
+            continue
+        if d.get("bench_schema") != schema:
+            print(f"note: skipping baseline {p} "
+                  f"(bench_schema={d.get('bench_schema')!r} != {schema!r})")
+            continue
+        return d, p
+    return None, None
+
+
+def diff(base: dict, cur: dict, max_regression: float) -> int:
+    """Print the per-key comparison; return the number of regressions."""
+    failures = 0
+    rows = [(k, +1) for k in HIGHER_BETTER] + [(k, -1) for k in LOWER_BETTER]
+    print(f"{'metric':26s} {'baseline':>12s} {'current':>12s} "
+          f"{'change':>8s}  verdict")
+    for key, sign in rows:
+        b, c = base.get(key), cur.get(key)
+        if b is None or c is None:
+            print(f"{key:26s} {'-':>12s} {'-':>12s} {'-':>8s}  skipped "
+                  f"(missing in {'baseline' if b is None else 'current'})")
+            continue
+        if not b:
+            print(f"{key:26s} {b:12.1f} {'-':>12s} {'-':>8s}  skipped "
+                  f"(baseline value 0 — unusable)")
+            continue
+        change = (c - b) / b                      # >0 = value went up
+        regression = -change * sign               # >0 = got worse
+        verdict = "ok"
+        if regression > max_regression:
+            verdict = f"REGRESSION (>{max_regression:.0%})"
+            failures += 1
+        print(f"{key:26s} {b:12.1f} {c:12.1f} {change:+8.1%}  {verdict}")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default="BENCH_explorer.json")
+    ap.add_argument("--baseline", action="append", default=[],
+                    help="candidate baseline paths, tried in order "
+                         "(first existing, schema-matching one wins)")
+    ap.add_argument("--max-regression", type=float, default=0.20,
+                    help="fail when a metric regresses by more than this "
+                         "fraction (default 0.20)")
+    args = ap.parse_args()
+
+    cur = load(args.current)
+    if cur is None:
+        print(f"FAIL: current benchmark {args.current} not found",
+              file=sys.stderr)
+        return 1
+    paths = args.baseline or ["benchmarks/baseline_explorer.json"]
+    base, used = pick_baseline(paths, cur.get("bench_schema"))
+    if base is None:
+        print("note: no usable baseline — skipping the regression gate "
+              f"(tried: {', '.join(paths)})")
+        return 0
+
+    print(f"baseline: {used} (mode={base.get('mode')}) vs "
+          f"current: {args.current} (mode={cur.get('mode')})")
+    failures = diff(base, cur, args.max_regression)
+    if failures:
+        print(f"FAIL: {failures} metric(s) regressed more than "
+              f"{args.max_regression:.0%}", file=sys.stderr)
+        return 1
+    print("perf gate: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,18 +1,22 @@
 """Search-path throughput benchmark: candidate evaluations/second through
 the scalar ``PartitionEvaluator.evaluate`` loop vs the vectorized
-``evaluate_batch`` path, a wall-clock NSGA-II-scale run, and a multi-model
-``Campaign`` fan-out — the whole Fig.-1 hot path at fleet scale.
+``evaluate_batch`` path, NSGA-II-scale runs through both the NumPy and the
+``jax.jit``-compiled strategy at pop ≥ 2048, and a multi-model ``Campaign``
+fan-out — the whole Fig.-1 hot path at fleet scale.
 
 This is the hot path of the whole framework (§IV, Table I): search quality
 scales with how many placements we can afford to score, so regressions here
 silently shrink the reachable population/generation budget.
 
 Emits a machine-readable ``BENCH_explorer.json`` (evals/s, campaign
-wall-clock) so CI can track the perf trajectory across PRs.
+wall-clock, JIT compile time reported separately from steady-state rate) so
+CI can track the perf trajectory across PRs and gate regressions with
+``benchmarks/compare_bench.py``.
 
   PYTHONPATH=src python benchmarks/explorer_bench.py            # full
   PYTHONPATH=src python benchmarks/explorer_bench.py --quick    # CI mode
-  ... --min-speedup 5    # exit non-zero below this batch/scalar ratio
+  ... --min-speedup 5        # exit non-zero below this batch/scalar ratio
+  ... --min-jit-speedup 3    # exit non-zero below this jit/numpy NSGA ratio
 """
 
 from __future__ import annotations
@@ -83,8 +87,9 @@ def bench_eval_paths(out: dict, model: str = "squeezenet11",
 
 
 def bench_nsga_run(out: dict, model: str = "squeezenet11",
-                   pop_size: int = 128, n_gen: int = 20):
-    """End-to-end exploration at NSGA-II scale (pop >= 128, n_cuts = 3)."""
+                   pop_size: int = 2048, n_gen: int = 3):
+    """End-to-end exploration through the NumPy NSGA-II strategy at the
+    population scale the JIT comparison is specified at (pop >= 2048)."""
     graph = build_cnn(model, in_hw=64).to_graph()
     t0 = time.perf_counter()
     res = explore_graph(graph, chain_system(),
@@ -93,13 +98,48 @@ def bench_nsga_run(out: dict, model: str = "squeezenet11",
                                               n_gen=n_gen))
     dt = time.perf_counter() - t0
     evals = pop_size * (n_gen + 1)
+    out["nsga_pop"] = pop_size
     out["nsga_run_s"] = round(dt, 3)
     out["nsga_evals_per_s"] = round(evals / dt, 1)
     print(csv_row("explorer_nsga_run", dt * 1e6,
                   f"pop={pop_size};gens={n_gen};"
                   f"evals_per_s={evals / dt:.0f};"
                   f"pareto={len(res.pareto)}"))
-    return dt
+    return evals / dt
+
+
+def bench_jit_nsga_run(out: dict, model: str = "squeezenet11",
+                       pop_size: int = 2048, n_gen: int = 8):
+    """The ``jax.jit``-compiled NSGA-II strategy at the same scale.
+
+    Two identical searches over one evaluator: the first pays XLA
+    compilation (the strategy caches the compiled runner on the evaluator),
+    the second is steady state.  ``jit_nsga_evals_per_s`` is the
+    steady-state rate; compilation is reported separately as
+    ``jit_compile_s`` so the regression gate tracks throughput, not
+    compiler wall-clock.
+    """
+    evaluator = make_evaluator(model)
+    settings = SearchSettings(strategy="jit_nsga2", seed=0,
+                              pop_size=pop_size, n_gen=n_gen)
+    from repro.explore import run_search
+    t0 = time.perf_counter()
+    run_search(evaluator, settings=settings)
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = run_search(evaluator, settings=settings)
+    dt = time.perf_counter() - t0
+    evals = pop_size * (n_gen + 1)
+    out["jit_nsga_pop"] = pop_size
+    out["jit_nsga_run_s"] = round(dt, 3)
+    out["jit_nsga_evals_per_s"] = round(evals / dt, 1)
+    out["jit_compile_s"] = round(max(cold - dt, 0.0), 3)
+    print(csv_row("explorer_jit_nsga_run", dt * 1e6,
+                  f"pop={pop_size};gens={n_gen};"
+                  f"evals_per_s={evals / dt:.0f};"
+                  f"compile={max(cold - dt, 0):.1f}s;"
+                  f"pareto={len(res.pareto)}"))
+    return evals / dt
 
 
 def bench_campaign(out: dict, models=("squeezenet11", "regnetx_400mf",
@@ -131,19 +171,29 @@ def main() -> int:
                     help="smaller workload for CI")
     ap.add_argument("--min-speedup", type=float, default=None,
                     help="fail when batch/scalar speedup drops below this")
+    ap.add_argument("--min-jit-speedup", type=float, default=None,
+                    help="fail when the jit/numpy NSGA-II evals/s ratio "
+                         "drops below this")
     ap.add_argument("--json", default="BENCH_explorer.json",
                     help="machine-readable output path")
     args = ap.parse_args()
 
-    out = {"mode": "quick" if args.quick else "full"}
+    # bench_schema guards cross-PR artifact diffs: compare_bench.py refuses
+    # to diff files whose schemas (and so key semantics) don't match
+    out = {"mode": "quick" if args.quick else "full", "bench_schema": 2}
     if args.quick:
         speedup = bench_eval_paths(out, n_candidates=1024, scalar_cap=128)
-        bench_nsga_run(out, pop_size=128, n_gen=8)
+        np_rate = bench_nsga_run(out, pop_size=2048, n_gen=3)
+        jit_rate = bench_jit_nsga_run(out, pop_size=2048, n_gen=8)
         bench_campaign(out)
     else:
         speedup = bench_eval_paths(out, n_candidates=8192, scalar_cap=512)
-        bench_nsga_run(out, pop_size=256, n_gen=30)
+        np_rate = bench_nsga_run(out, pop_size=2048, n_gen=8)
+        jit_rate = bench_jit_nsga_run(out, pop_size=2048, n_gen=30)
         bench_campaign(out)
+    out["jit_nsga_speedup"] = round(jit_rate / np_rate, 1)
+    print(csv_row("explorer_jit_nsga_speedup", 0.0,
+                  f"x{jit_rate / np_rate:.1f}"))
 
     with open(args.json, "w") as f:
         json.dump(out, f, indent=1)
@@ -152,6 +202,11 @@ def main() -> int:
     if args.min_speedup is not None and speedup < args.min_speedup:
         print(f"FAIL: batch speedup x{speedup:.1f} < "
               f"required x{args.min_speedup:.1f}", file=sys.stderr)
+        return 1
+    if (args.min_jit_speedup is not None
+            and jit_rate / np_rate < args.min_jit_speedup):
+        print(f"FAIL: jit NSGA-II speedup x{jit_rate / np_rate:.1f} < "
+              f"required x{args.min_jit_speedup:.1f}", file=sys.stderr)
         return 1
     return 0
 

@@ -44,3 +44,18 @@ fleet = Campaign(spec, models=[ModelRef("cnn", n)
                                          "efficientnet_b0")])
 report = fleet.run().report
 print("\n" + report.summary())
+
+# 4. big populations: strategy="jit_nsga2" compiles the whole NSGA-II
+#    generation loop (ranking, crowding, variation, metric evaluation over
+#    the precomputed cost tables) into one jax.jit program — pick it when
+#    pop_size climbs into the thousands (~10x the NumPy strategy at pop
+#    2048; CI's benchmarks/explorer_bench.py + compare_bench.py gate keeps
+#    both paths from regressing >20% run-over-run)
+import dataclasses  # noqa: E402
+
+from repro.explore import SearchSettings  # noqa: E402
+
+jit_spec = dataclasses.replace(
+    spec, search=SearchSettings(strategy="jit_nsga2", pop_size=4096,
+                                n_gen=40))
+print("\njit_nsga2:", run_spec(jit_spec).summary())

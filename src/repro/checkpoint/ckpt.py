@@ -6,10 +6,9 @@ exactly.  Works for params, optimizer state, and RNG-free model state.
 
 from __future__ import annotations
 
-import json
 import os
 import re
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

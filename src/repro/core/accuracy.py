@@ -17,7 +17,7 @@ Two implementations of the ``accuracy_fn(cuts) -> float`` protocol:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Callable, Dict, Sequence, Tuple
 
 import numpy as np
 
@@ -49,6 +49,16 @@ class ProxyAccuracy:
             for i in range(bounds[k] + 1, bounds[k + 1] + 1):
                 loss += self._weight[i] * n
         return max(0.0, self.base_accuracy - self.noise_scale * loss)
+
+    def proxy_arrays(self):
+        """Arrays for the jittable evaluator fast-path: the per-layer weight
+        prefix, per-platform noise, and the (base, scale) affine map.  Any
+        accuracy oracle exposing this protocol can run inside
+        ``JitNSGA2Search``; measured oracles cannot and fall back to the
+        NumPy strategy."""
+        noise = np.array([self._noise(p.quant.bits)
+                          for p in self.system.platforms])
+        return self._weight_prefix, noise, self.base_accuracy, self.noise_scale
 
     def evaluate_batch(self, cuts: np.ndarray) -> np.ndarray:
         """Vectorized proxy accuracy for a whole (N, n_cuts) matrix.

@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from functools import lru_cache
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 from repro.core import layers as L
 from repro.core.hwmodel.arch import AcceleratorArch
@@ -232,7 +232,11 @@ def evaluate_layer(layer: L.LayerInfo, arch: AcceleratorArch,
     for a in atoms:
         l, e, d, cs, ms, _ = _map_gemm(key, a.k, a.c, a.p * batch,
                                        a.weight_resident, bpe)
-        lat += l; en += e; dram += d; comp += cs; mem += ms
+        lat += l
+        en += e
+        dram += d
+        comp += cs
+        mem += ms
         macs += a.macs * batch
     if elem or not atoms:
         elems = (elem or max(layer.fmap_in, layer.fmap_out)) * batch

@@ -238,7 +238,8 @@ def nsga2(evaluate: Callable[[np.ndarray], Tuple[np.ndarray, np.ndarray]],
         Xc = _repair_batch(Xc, lower, upper)
         Fc, CVc = evaluate(Xc)
         # elitist environmental selection
-        Xall = np.concatenate([X, Xc]); Fall = np.concatenate([F, Fc])
+        Xall = np.concatenate([X, Xc])
+        Fall = np.concatenate([F, Fc])
         CVall = np.concatenate([CV, CVc])
         fronts = fast_non_dominated_sort(Fall, CVall)
         keep: List[int] = []
@@ -256,11 +257,35 @@ def nsga2(evaluate: Callable[[np.ndarray], Tuple[np.ndarray, np.ndarray]],
                         "best": F.min(axis=0).tolist(),
                         "feasible": int((CV <= 0).sum())})
 
+    return NSGA2Result(X=X, F=F, CV=CV, pareto_idx=pareto_indices(X, F, CV),
+                       history=history)
+
+
+def pareto_indices(X: np.ndarray, F: np.ndarray, CV: np.ndarray) -> np.ndarray:
+    """Final-front extraction shared by the NumPy and JIT search paths:
+    first constrained front, feasible subset when non-empty, unique decision
+    vectors (first occurrence wins, ascending index order)."""
     fronts = fast_non_dominated_sort(F, CV)
     first = fronts[0]
     feas = first[CV[first] <= 0]
     pareto = feas if len(feas) else first
-    # unique decision vectors on the front
     _, uniq = np.unique(X[pareto], axis=0, return_index=True)
-    return NSGA2Result(X=X, F=F, CV=CV, pareto_idx=pareto[np.sort(uniq)],
-                       history=history)
+    return pareto[np.sort(uniq)]
+
+
+_JAX_TWINS = ("constrained_dominates", "domination_matrix",
+              "nondominated_rank", "crowding_by_rank", "tournament",
+              "repair", "make_offspring", "make_jit_runner")
+
+
+def __getattr__(name: str):
+    """Lazy access to the JIT-compiled operator twins (``jit_`` prefixed),
+    e.g. ``nsga2.jit_nondominated_rank`` → ``nsga2_jax.nondominated_rank``.
+    Keeps this module importable without pulling in JAX."""
+    if name.startswith("jit_") and name[4:] in _JAX_TWINS:
+        import repro.core.nsga2_jax as _jx
+        return getattr(_jx, name[4:])
+    if name == "jit_nsga2":
+        import repro.core.nsga2_jax as _jx
+        return _jx.jit_nsga2
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,252 @@
+"""JIT-compiled twins of the NSGA-II operators (``repro.core.nsga2``).
+
+Everything here is shape-static and traceable, so the *entire* generation
+loop — non-dominated ranking, crowding, binary tournaments, crossover,
+mutation, repair and the batched metric evaluation — runs as one compiled
+XLA program over fixed-shape population arrays (:func:`jit_nsga2`).  That is
+what lifts the search from the NumPy path's ~1k evals/s at pop 2048 (where
+the O(pop²) sort dominates) to accelerator-rate populations of 10k+.
+
+Differences from the NumPy implementation, by construction:
+
+* randomness comes from ``jax.random`` (different stream than
+  ``np.random.default_rng``), so runs are seeded/reproducible but not
+  bit-identical to the NumPy search — equivalence is at the Pareto-front
+  level (tested);
+* front peeling stops once ``pop_size`` individuals are ranked (the only
+  ranks environmental selection can consume); the tail keeps rank ``n``;
+* crowding is computed per rank group over the combined parent+offspring
+  population and carried into the next generation's tournaments instead of
+  being recomputed on the survivors.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+Array = jax.Array
+EvalFn = Callable[[Array], Tuple[Array, Array]]
+
+
+# -- jittable domination / ranking / crowding ---------------------------------
+
+def constrained_dominates(Fa: Array, cva: Array,
+                          Fb: Array, cvb: Array) -> Array:
+    """Broadcasting Deb constraint-domination (twin of the NumPy version)."""
+    feas_a, feas_b = cva <= 0, cvb <= 0
+    dom = jnp.all(Fa <= Fb, axis=-1) & jnp.any(Fa < Fb, axis=-1)
+    return jnp.where(feas_a & ~feas_b, True,
+                     jnp.where(feas_b & ~feas_a, False,
+                               jnp.where(~feas_a & ~feas_b, cva < cvb, dom)))
+
+
+def domination_matrix(F: Array, CV: Array) -> Array:
+    """D[p, q] = p constraint-dominates q, diagonal cleared."""
+    n = F.shape[0]
+    D = constrained_dominates(F[:, None, :], CV[:, None],
+                              F[None, :, :], CV[None, :])
+    return D & ~jnp.eye(n, dtype=bool)
+
+
+def _pack_bits(B: Array) -> Array:
+    """Pack a boolean (n, m) matrix into (ceil(n/32), m) uint32 words along
+    axis 0 (bit j of word w, column q = B[32w + j, q])."""
+    n, m = B.shape
+    pad = (-n) % 32
+    Bp = jnp.pad(B, ((0, pad), (0, 0)))
+    W = Bp.reshape(-1, 32, m).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32))
+    return (W * weights[None, :, None]).sum(axis=1, dtype=jnp.uint32)
+
+
+def nondominated_rank(F: Array, CV: Array,
+                      cap: Optional[int] = None) -> Array:
+    """Front index per individual (0 = first front), peeled until at least
+    ``cap`` individuals are ranked (default: all).  The unpeeled tail keeps
+    rank ``n`` — environmental selection never reaches it.
+
+    The domination matrix is bit-packed (32 individuals per uint32 word), so
+    each peel step counts surviving dominators with ``population_count``
+    over a (n/32, n) word matrix — ~n²/8 bytes of traffic per front instead
+    of the 4n² a float mat-vec would read.
+    """
+    n = F.shape[0]
+    cap = n if cap is None else min(cap, n)
+    Dp = _pack_bits(domination_matrix(F, CV))       # (W, n) uint32
+    state = (jnp.full(n, n, dtype=jnp.int32),       # rank
+             jnp.ones(n, dtype=bool),               # alive (unranked)
+             jnp.int32(0), jnp.int32(0))            # front idx, ranked count
+
+    def cond(s):
+        _, alive, _, done = s
+        return alive.any() & (done < cap)
+
+    def body(s):
+        rank, alive, r, done = s
+        alive_p = _pack_bits(alive[:, None])[:, 0]  # (W,)
+        n_dom = lax.population_count(Dp & alive_p[:, None]).sum(axis=0)
+        front = alive & (n_dom == 0)                # no alive dominator
+        front = jnp.where(front.any(), front, alive)   # numerical safety
+        rank = jnp.where(front, r, rank)
+        return (rank, alive & ~front, r + 1,
+                done + front.sum(dtype=jnp.int32))
+
+    rank, _, _, _ = lax.while_loop(cond, body, state)
+    return rank
+
+
+def crowding_by_rank(F: Array, rank: Array) -> Array:
+    """Crowding distance within each rank group (twin of
+    ``crowding_distance`` applied per front, without materializing fronts).
+
+    Per objective: lexsort by (rank, value); interior points accumulate the
+    neighbour gap normalized by their group's value span (segment min/max),
+    group boundaries get ``inf`` — exactly the NumPy accounting.
+    """
+    n, m = F.shape
+    crowd = jnp.zeros(n)
+    for j in range(m):                               # m static, unrolled
+        f = F[:, j]
+        order = jnp.lexsort((f, rank))
+        sr, sf = rank[order], f[order]
+        span = (jax.ops.segment_max(f, rank, num_segments=n + 1)
+                - jax.ops.segment_min(f, rank, num_segments=n + 1))[sr]
+        same = sr[1:] == sr[:-1]
+        false1 = jnp.zeros(1, dtype=bool)
+        interior = (jnp.concatenate([false1, same])
+                    & jnp.concatenate([same, false1]))
+        gap = (jnp.concatenate([sf[1:], sf[-1:]])
+               - jnp.concatenate([sf[:1], sf[:-1]]))
+        contrib = jnp.where(
+            interior,
+            jnp.where(span > 0, gap / jnp.where(span > 0, span, 1.0), 0.0),
+            jnp.inf)
+        crowd = crowd.at[order].add(contrib)
+    return crowd
+
+
+# -- jittable GA operators ----------------------------------------------------
+
+def tournament(key: Array, F: Array, CV: Array, crowd: Array,
+               n: int) -> Array:
+    """n independent binary tournaments → winner indices."""
+    ka, kb = jax.random.split(key)
+    a = jax.random.randint(ka, (n,), 0, F.shape[0])
+    b = jax.random.randint(kb, (n,), 0, F.shape[0])
+    a_dom = constrained_dominates(F[a], CV[a], F[b], CV[b])
+    b_dom = constrained_dominates(F[b], CV[b], F[a], CV[a])
+    return jnp.where(a_dom | (~b_dom & (crowd[a] >= crowd[b])), a, b)
+
+
+def repair(X: Array, lo: int, hi: int) -> Array:
+    """Clip/sort/de-duplicate cut vectors — twin of ``_repair_batch`` (the
+    scans run over the short static n_var axis, unrolled)."""
+    X = jnp.clip(jnp.sort(X, axis=1), lo, hi)
+    n_var = X.shape[1]
+    for i in range(1, n_var):
+        X = X.at[:, i].set(jnp.where(X[:, i] <= X[:, i - 1],
+                                     jnp.minimum(hi, X[:, i - 1] + 1),
+                                     X[:, i]))
+    for i in range(n_var - 2, -1, -1):     # if saturated at hi, push left
+        X = X.at[:, i].set(jnp.where(X[:, i] >= X[:, i + 1],
+                                     jnp.maximum(lo, X[:, i + 1] - 1),
+                                     X[:, i]))
+    return X
+
+
+def make_offspring(key: Array, X: Array, F: Array, CV: Array, crowd: Array,
+                   lo: int, hi: int) -> Array:
+    """Tournaments → uniform crossover → blend step → reset/local-step
+    mutation → repair, mirroring the NumPy brood construction."""
+    pop, n_var = X.shape
+    half = (pop + 1) // 2
+    k1, k2, k3, k4, k5, k6, k7, k8 = jax.random.split(key, 8)
+    P1 = X[tournament(k1, F, CV, crowd, half)]
+    P2 = X[tournament(k2, F, CV, crowd, half)]
+    mask = jax.random.uniform(k3, (half, n_var)) < 0.5
+    Xc = jnp.concatenate([jnp.where(mask, P1, P2),
+                          jnp.where(mask, P2, P1)])[:pop]
+    if n_var > 0:
+        par1 = jnp.concatenate([P1, P1])[:pop]
+        par2 = jnp.concatenate([P2, P2])[:pop]
+        blend = jax.random.uniform(k4, (pop,)) < 0.3
+        j = jax.random.randint(k5, (pop,), 0, n_var)
+        rows = jnp.arange(pop)
+        mid = (par1[rows, j] + par2[rows, j]) // 2
+        Xc = Xc.at[rows, j].set(jnp.where(blend, mid, Xc[rows, j]))
+    nv = max(n_var, 1)
+    r = jax.random.uniform(k6, (pop, n_var))
+    reset = r < 0.5 / nv
+    step = ~reset & (r < 2.0 / nv)
+    Xc = jnp.where(reset, jax.random.randint(k7, Xc.shape, lo, hi + 1), Xc)
+    Xc = jnp.where(step, Xc + jax.random.randint(k8, Xc.shape, -3, 4), Xc)
+    return repair(Xc, lo, hi)
+
+
+# -- the compiled generation loop ---------------------------------------------
+
+def make_jit_runner(eval_fn: EvalFn, n_var: int, lower: int, upper: int,
+                    pop_size: int):
+    """Compile the whole NSGA-II run into one XLA program.
+
+    Returns ``run(key, X0, n_gen) -> (X, F, CV)``; ``n_gen`` is a traced
+    loop bound, so one compilation serves any generation budget at a given
+    (pop_size, n_var) shape.
+    """
+    lo, hi = lower, upper
+
+    def gen_step(carry):
+        key, X, F, CV, crowd = carry
+        key, k_off = jax.random.split(key)
+        Xc = make_offspring(k_off, X, F, CV, crowd, lo, hi)
+        Fc, CVc = eval_fn(Xc)
+        Xall = jnp.concatenate([X, Xc])
+        Fall = jnp.concatenate([F, Fc])
+        CVall = jnp.concatenate([CV, CVc])
+        # elitist environmental selection: whole fronts in rank order, the
+        # boundary front tie-broken by crowding == lexsort by (rank, -crowd)
+        rank = nondominated_rank(Fall, CVall, cap=pop_size)
+        crowd_all = crowding_by_rank(Fall, rank)
+        keep = jnp.lexsort((-crowd_all, rank))[:pop_size]
+        return key, Xall[keep], Fall[keep], CVall[keep], crowd_all[keep]
+
+    @jax.jit
+    def run(key: Array, X0: Array, n_gen) -> Tuple[Array, Array, Array]:
+        X0 = repair(X0, lo, hi)
+        F0, CV0 = eval_fn(X0)
+        crowd0 = crowding_by_rank(F0, nondominated_rank(F0, CV0))
+        carry = (key, X0, F0, CV0, crowd0)
+        carry = lax.fori_loop(0, n_gen, lambda _, c: gen_step(c), carry)
+        return carry[1], carry[2], carry[3]
+
+    return run
+
+
+def jit_nsga2(eval_fn: EvalFn, n_var: int, lower: int, upper: int,
+              pop_size: int, n_gen: int, seed: int = 0,
+              candidates: Optional[Sequence[Sequence[int]]] = None,
+              runner=None) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Run the compiled NSGA-II loop; returns host (X, F, CV) arrays.
+
+    Population init (including ``candidates`` seeding) matches the NumPy
+    :func:`repro.core.nsga2.nsga2` exactly and stays host-side; everything
+    after the first device transfer is one XLA program.  Pass a prebuilt
+    ``runner`` (from :func:`make_jit_runner`) to reuse a compilation.
+    """
+    rng = np.random.default_rng(seed)
+    X0 = rng.integers(lower, upper + 1, size=(pop_size, n_var))
+    if candidates is not None and len(candidates):
+        cand = np.asarray(list(candidates), dtype=int)
+        k = min(len(cand), pop_size // 2)
+        X0[:k] = cand[rng.permutation(len(cand))[:k]]
+    if runner is None:
+        runner = make_jit_runner(eval_fn, n_var, lower, upper, pop_size)
+    X, F, CV = runner(jax.random.PRNGKey(seed),
+                      jnp.asarray(X0, dtype=jnp.int32), n_gen)
+    return (np.asarray(X, dtype=np.int64), np.asarray(F, dtype=np.float64),
+            np.asarray(CV, dtype=np.float64))

@@ -179,6 +179,7 @@ class PartitionEvaluator:
         self._memtable = (memtable if memtable is not None
                           else SegmentMemoryTable(self.schedule, shared_groups))
         self._cut_elems: Optional[np.ndarray] = None  # lazy, O(L·E) to build
+        self._jax_tables = None                       # lazy EvalTables export
         cache = cost_cache if cost_cache is not None else {}
         for plat in system.platforms:
             key = plat.arch.name
@@ -223,6 +224,20 @@ class PartitionEvaluator:
         """Public view of the per-position link element counts (length
         L-1), used by the candidate filters' feasibility matrices."""
         return self._cut_elems_vec()
+
+    def jax_tables(self):
+        """All precomputed tables as device arrays (cached).
+
+        Returns the :class:`repro.core.partition_jax.EvalTables` feeding the
+        jittable ``evaluate_batch`` fast-path used by ``JitNSGA2Search`` —
+        per-arch prefix sums, link/memory tables and (when the accuracy
+        oracle is a proxy) the accuracy weight prefix.  Import is lazy so
+        NumPy-only callers never pay for JAX.
+        """
+        if self._jax_tables is None:
+            from repro.core.partition_jax import build_eval_tables
+            self._jax_tables = build_eval_tables(self)
+        return self._jax_tables
 
     def evaluate(self, cuts: Sequence[int],
                  constraints: Optional[Constraints] = None) -> PartitionEval:

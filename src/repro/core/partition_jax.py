@@ -1,0 +1,250 @@
+"""Jittable fast-path of :meth:`PartitionEvaluator.evaluate_batch`.
+
+The NumPy batch evaluator already reduces a candidate evaluation to gathers
+over precomputed tables (per-arch latency/energy prefix sums, per-position
+link element counts, the Def.-3 :class:`SegmentMemoryTable` and the proxy
+accuracy weight prefix).  This module exports exactly those tables as device
+arrays (:class:`EvalTables`, built by :func:`build_eval_tables` /
+:meth:`PartitionEvaluator.jax_tables`) and a pure function over them
+(:func:`make_batch_eval_fn`) so the whole NSGA-II generation loop can run
+inside one ``jax.jit`` program (see ``repro.core.nsga2_jax``).
+
+Semantics mirror ``evaluate_batch`` metric-for-metric (tested in
+``tests/test_jit_nsga2.py``); arithmetic is float32 on-device, so agreement
+is to float32 tolerance rather than bit-exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition import Constraints, PartitionEvaluator
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalTables:
+    """Evaluator state as device arrays (leading dims: P platforms, K links,
+    L schedule positions)."""
+
+    L: int                          # schedule length (static)
+    n_cuts: int                     # == K (static)
+    cost_prefix: Array              # (P, 2, L+1) latency/energy prefix sums
+    cut_elems: Array                # (max(L-1, 1),) elements over each cut
+    producer_bpe: Array             # (K,) bytes/element at the producer side
+    link_rate: Array                # (K,) raw line rate, bit/s
+    link_setup: Array               # (K,) per-transfer setup, s
+    link_payload: Array             # (K,) MTU payload bytes
+    link_header: Array              # (K,) per-packet header bytes
+    link_power: Array               # (K,) p_tx + p_rx, W
+    link_e_byte: Array              # (K,) transceiver J/byte
+    mem_base_prefix: Array          # (L+1,) ungrouped-parameter prefix sum
+    mem_groups: Tuple[Tuple[Array, Array], ...]  # per shared group:
+    #                                 (sorted member positions, member params)
+    act_sparse: Array               # (levels, L) range-max sparse table
+    bytes_per_param: Array          # (P,)
+    bytes_per_act: Array            # (P,)
+    capacity: Array                 # (P,)
+    batch: int                      # static
+    acc_weight_prefix: Optional[Array]  # (L+1,) or None (no proxy oracle)
+    acc_noise: Optional[Array]          # (P,) quantization noise per platform
+    acc_base: float
+    acc_scale: float
+
+    @property
+    def supports_accuracy(self) -> bool:
+        return self.acc_weight_prefix is not None
+
+
+def build_eval_tables(evaluator: PartitionEvaluator) -> EvalTables:
+    """Export an evaluator's precomputed tables as device arrays.
+
+    Accuracy tables are present only when the evaluator's oracle exposes the
+    :meth:`~repro.core.accuracy.ProxyAccuracy.proxy_arrays` protocol
+    (measured oracles are host-side by nature and cannot be jitted).
+    """
+    system = evaluator.system
+    plats = system.platforms
+    L = len(evaluator.schedule)
+    f32 = jnp.float32
+
+    cost_prefix = jnp.asarray(
+        np.stack([evaluator._prefix[p.arch.name] for p in plats]), dtype=f32)
+    elems = evaluator.cut_elements() if L > 1 else np.zeros(1, dtype=np.int64)
+    if len(elems) == 0:
+        elems = np.zeros(1, dtype=np.int64)
+
+    links = system.links
+    mt = evaluator._memtable
+    acc = evaluator.accuracy_fn
+    if hasattr(acc, "proxy_arrays"):
+        wpre, noise, base, scale = acc.proxy_arrays()
+        acc_wpre = jnp.asarray(wpre, dtype=f32)
+        acc_noise = jnp.asarray(noise, dtype=f32)
+    else:
+        acc_wpre = acc_noise = None
+        base, scale = 1.0, 0.0
+
+    return EvalTables(
+        L=L, n_cuts=system.n_cuts,
+        cost_prefix=cost_prefix,
+        cut_elems=jnp.asarray(elems, dtype=f32),
+        producer_bpe=jnp.asarray([p.quant.bits / 8.0 for p in plats[:-1]]
+                                 if len(plats) > 1 else [0.0], dtype=f32),
+        link_rate=jnp.asarray([l.rate_bps for l in links] or [1.0], dtype=f32),
+        link_setup=jnp.asarray([l.t_setup_s for l in links] or [0.0],
+                               dtype=f32),
+        link_payload=jnp.asarray([l.payload_bytes for l in links] or [1.0],
+                                 dtype=f32),
+        link_header=jnp.asarray([l.header_bytes for l in links] or [0.0],
+                                dtype=f32),
+        link_power=jnp.asarray([l.p_tx_w + l.p_rx_w for l in links] or [0.0],
+                               dtype=f32),
+        link_e_byte=jnp.asarray([l.e_per_byte_j for l in links] or [0.0],
+                                dtype=f32),
+        mem_base_prefix=jnp.asarray(mt.base_prefix, dtype=f32),
+        mem_groups=tuple(
+            (jnp.asarray(pos, dtype=jnp.int32), jnp.asarray(gpar, dtype=f32))
+            for pos, gpar in mt.groups),
+        act_sparse=jnp.asarray(mt.act_sparse, dtype=f32) if L
+        else jnp.zeros((1, 1), dtype=f32),
+        bytes_per_param=jnp.asarray([p.memory_model.bytes_per_param
+                                     for p in plats], dtype=f32),
+        bytes_per_act=jnp.asarray([p.memory_model.act_bytes for p in plats],
+                                  dtype=f32),
+        capacity=jnp.asarray([p.capacity for p in plats], dtype=f32),
+        batch=evaluator.batch,
+        acc_weight_prefix=acc_wpre, acc_noise=acc_noise,
+        acc_base=float(base), acc_scale=float(scale))
+
+
+def _segment_memory(t: EvalTables, aa: Array, bb: Array,
+                    valid: Array) -> Array:
+    """Def.-3 memory of schedule[aa..bb] per (row, platform), elementwise
+    twin of :meth:`SegmentMemoryTable.batched` (0 where invalid)."""
+    par = t.mem_base_prefix[bb + 1] - t.mem_base_prefix[aa]
+    for pos, gpar in t.mem_groups:          # static group count: unrolled
+        idx = jnp.minimum(jnp.searchsorted(pos, aa), len(pos) - 1)
+        hit = (pos[idx] >= aa) & (pos[idx] <= bb)
+        par = par + jnp.where(hit, gpar[idx], 0.0)
+    length = (bb - aa + 1).astype(jnp.float32)
+    k = jnp.frexp(length)[1] - 1            # floor(log2(len)), exact for ints
+    w = jnp.left_shift(jnp.int32(1), k)
+    peak = jnp.maximum(t.act_sparse[k, aa],
+                       t.act_sparse[k, bb - w + 1]) * t.batch
+    mem = (par * t.bytes_per_param[None, :]
+           + peak * t.bytes_per_act[None, :])
+    return jnp.where(valid, jnp.floor(mem), 0.0)
+
+
+def make_batch_eval_fn(tables: EvalTables, objectives: Sequence[str],
+                       constraints: Optional[Constraints] = None,
+                       ) -> Callable[[Array], Tuple[Array, Array]]:
+    """Build ``eval(C) -> (F, CV)`` over an (N, n_cuts) sorted cut matrix.
+
+    ``objectives``/``constraints`` are baked in statically (one compiled
+    program per search).  Raises if accuracy is needed (as an objective or a
+    ``min_accuracy`` constraint) but the evaluator had no proxy oracle.
+    """
+    t = tables
+    objectives = tuple(objectives)
+    cons = constraints or Constraints()
+    needs_acc = "accuracy" in objectives or bool(cons.min_accuracy)
+    if needs_acc and not t.supports_accuracy:
+        raise ValueError(
+            "accuracy objective/constraint requires a jittable proxy "
+            "accuracy oracle (ProxyAccuracy.proxy_arrays); measured oracles "
+            "must use the NumPy 'nsga2' strategy")
+    L, K = t.L, t.n_cuts
+    n_plat = t.cost_prefix.shape[0]
+
+    def eval_cuts(C: Array) -> Tuple[Array, Array]:
+        C = jnp.maximum(C.astype(jnp.int32), -1)
+        n = C.shape[0]
+        bounds = jnp.concatenate(
+            [jnp.full((n, 1), -1, jnp.int32), C,
+             jnp.full((n, 1), L - 1, jnp.int32)], axis=1)   # (N, P+1)
+        a = bounds[:, :-1] + 1                               # (N, P)
+        b1 = bounds[:, 1:] + 1
+        prow = jnp.arange(n_plat)[None, :]
+        stage_lat = (t.cost_prefix[prow, 0, b1]
+                     - t.cost_prefix[prow, 0, a])            # (N, P)
+        energy = (t.cost_prefix[prow, 1, b1]
+                  - t.cost_prefix[prow, 1, a]).sum(axis=1)   # (N,)
+
+        if K:
+            p = C                                            # (N, K)
+            sent = bounds[:, 1:K + 1] > bounds[:, :K]
+            remaining = bounds[:, -1:] > bounds[:, 1:K + 1]
+            active = (p >= 0) & (p < L - 1) & sent & remaining
+            raw = (jnp.ceil(t.cut_elems[jnp.clip(p, 0, max(L - 2, 0))]
+                            * t.producer_bpe[None, :]) * t.batch)
+            nbytes = jnp.where(active, raw, 0.0)             # (N, K)
+            packets = jnp.ceil(nbytes / t.link_payload[None, :])
+            wire_bits = (nbytes + packets * t.link_header[None, :]) * 8.0
+            link_lat = jnp.where(
+                nbytes > 0,
+                t.link_setup[None, :] + wire_bits / t.link_rate[None, :], 0.0)
+            energy = energy + jnp.where(
+                nbytes > 0, t.link_power[None, :] * link_lat
+                + t.link_e_byte[None, :] * nbytes, 0.0).sum(axis=1)
+            max_link = nbytes.max(axis=1)
+        else:
+            link_lat = jnp.zeros((n, 1))
+            max_link = jnp.zeros(n)
+
+        latency = stage_lat.sum(axis=1) + link_lat.sum(axis=1)
+        mods = jnp.concatenate([stage_lat, link_lat], axis=1)
+        slowest = jnp.max(jnp.where(mods > 0, mods, 0.0), axis=1)
+        throughput = jnp.where(slowest > 0, 1.0 / slowest, 0.0)
+
+        aa_raw, bb_raw = a, bounds[:, 1:]
+        valid = aa_raw <= bb_raw
+        aa = jnp.where(valid, aa_raw, 0)
+        bb = jnp.where(valid, bb_raw, 0)
+        mems = _segment_memory(t, aa, bb, valid)             # (N, P)
+
+        if t.supports_accuracy:
+            wpre = t.acc_weight_prefix
+            loss = (t.acc_noise[None, :]
+                    * (wpre[bounds[:, 1:] + 1] - wpre[bounds[:, :-1] + 1])
+                    ).sum(axis=1)
+            acc = jnp.maximum(0.0, t.acc_base - t.acc_scale * loss)
+        else:
+            acc = jnp.ones(n)
+
+        over = mems - t.capacity[None, :]
+        cv = jnp.where(over > 0, over / t.capacity[None, :], 0.0).sum(axis=1)
+        if cons.max_link_bytes:
+            o = max_link - cons.max_link_bytes
+            cv = cv + jnp.where(o > 0, o / cons.max_link_bytes, 0.0)
+        if cons.min_accuracy:
+            cv = cv + jnp.maximum(0.0, cons.min_accuracy - acc)
+        if cons.max_latency_s:
+            o = latency - cons.max_latency_s
+            cv = cv + jnp.where(o > 0, o / cons.max_latency_s, 0.0)
+        if cons.max_energy_j:
+            o = energy - cons.max_energy_j
+            cv = cv + jnp.where(o > 0, o / cons.max_energy_j, 0.0)
+        if cons.min_throughput:
+            s = cons.min_throughput - throughput
+            cv = cv + jnp.where(s > 0, s / cons.min_throughput, 0.0)
+
+        cols = {
+            "latency": latency,
+            "energy": energy,
+            "throughput": -throughput,
+            "bandwidth": max_link,
+            "memory": mems.max(axis=1),
+            "accuracy": -acc,
+        }
+        F = jnp.stack([cols[k] for k in objectives], axis=1)
+        return F, cv
+
+    return eval_cuts

@@ -15,11 +15,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Iterator, Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig
 
 
 @dataclasses.dataclass

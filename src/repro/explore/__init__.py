@@ -22,7 +22,9 @@ Metric evaluation (Table I)               ``repro.core.partition``
 Search / NSGA-II (§IV)                    :class:`SearchStrategy` protocol —
                                           :class:`ExhaustiveSearch`,
                                           :class:`MultiCutScan`,
-                                          :class:`NSGA2Search`
+                                          :class:`NSGA2Search`,
+                                          :class:`JitNSGA2Search` (the same
+                                          search as one ``jax.jit`` program)
 Pareto front + Def.-2 selection           ``runner.run_search`` →
                                           :class:`ExplorationResult`
 Fleet-level studies (many models/         :class:`Campaign` →
@@ -65,18 +67,20 @@ from repro.explore.runner import (DEFAULT_OBJECTIVES, explore_graph,
                                   run_search, run_spec, select_weighted)
 from repro.explore.spec import (ExplorationSpec, LinkSpec, ModelRef,
                                 PlatformSpec, SearchSettings, SystemSpec)
-from repro.explore.strategies import (ExhaustiveSearch, MultiCutScan,
-                                      NSGA2Search, SearchContext,
-                                      SearchStrategy, StrategyOutput,
-                                      register_strategy, scaled_nsga_defaults)
+from repro.explore.strategies import (ExhaustiveSearch, JitNSGA2Search,
+                                      MultiCutScan, NSGA2Search,
+                                      SearchContext, SearchStrategy,
+                                      StrategyOutput, register_strategy,
+                                      scaled_nsga_defaults)
 
 __all__ = [
     "Campaign", "CampaignEntry", "CampaignReport", "CampaignResult",
     "DEFAULT_OBJECTIVES", "ExhaustiveSearch", "ExplorationResult",
-    "ExplorationSpec", "LinkSpec", "ModelRef", "MultiCutScan", "NSGA2Search",
-    "PlatformSpec", "SearchContext", "SearchSettings", "SearchStrategy",
-    "StrategyOutput", "SystemSpec", "candidate_positions", "eval_from_dict",
-    "eval_to_dict", "explore_graph", "feasible_cut_rows", "link_feasibility",
-    "link_filter", "memory_filter", "register_strategy", "run_search",
-    "run_spec", "scaled_nsga_defaults", "select_weighted",
+    "ExplorationSpec", "JitNSGA2Search", "LinkSpec", "ModelRef",
+    "MultiCutScan", "NSGA2Search", "PlatformSpec", "SearchContext",
+    "SearchSettings", "SearchStrategy", "StrategyOutput", "SystemSpec",
+    "candidate_positions", "eval_from_dict", "eval_to_dict", "explore_graph",
+    "feasible_cut_rows", "link_feasibility", "link_filter", "memory_filter",
+    "register_strategy", "run_search", "run_spec", "scaled_nsga_defaults",
+    "select_weighted",
 ]

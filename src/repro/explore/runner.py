@@ -8,6 +8,12 @@ Three entry points, from most to least declarative:
   (for callers that already hold model objects, e.g. the serving driver).
 * :func:`run_search`    — run over a prebuilt ``PartitionEvaluator``
   (campaigns inject shared cost tables here).
+
+All strategies — including the ``jax.jit``-compiled ``jit_nsga2``, which
+reads the evaluator's tables as device arrays via
+``PartitionEvaluator.jax_tables()`` (built lazily, cached per evaluator) —
+consume the same evaluator, so campaign-level cost-table sharing benefits
+the JIT path too.
 """
 
 from __future__ import annotations

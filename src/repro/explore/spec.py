@@ -21,7 +21,9 @@ from repro.core.quant import QuantSpec
 
 VALID_OBJECTIVES = ("latency", "energy", "throughput", "bandwidth",
                     "memory", "accuracy")
-VALID_STRATEGIES = ("auto", "exhaustive", "multicut", "nsga2")
+# built-in strategy names; names added via strategies.register_strategy are
+# accepted too (SearchSettings falls back to the live registry)
+VALID_STRATEGIES = ("auto", "exhaustive", "multicut", "nsga2", "jit_nsga2")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,9 +150,11 @@ class SearchSettings:
     ``auto`` reproduces the legacy ``Explorer.run`` policy: exhaustive
     single-cut scan when the system has one link, NSGA-II on top when
     ``n_cuts > 1`` or the candidate list is large (override via
-    ``use_nsga``).  ``pop_size``/``n_gen`` of ``None`` scale with the
-    schedule depth and cut count (see ``scaled_nsga_defaults``) — sized for
-    the batched evaluator, not the old scalar loop.
+    ``use_nsga``).  ``jit_nsga2`` runs the same genetic search as one
+    ``jax.jit``-compiled program (see ``JitNSGA2Search``) — pick it for
+    multi-thousand populations.  ``pop_size``/``n_gen`` of ``None`` scale
+    with the schedule depth and cut count (see ``scaled_nsga_defaults``) —
+    sized for the batched evaluator, not the old scalar loop.
     """
 
     strategy: str = "auto"
@@ -163,9 +167,15 @@ class SearchSettings:
     allow_multi_tensor_cuts: bool = False
 
     def __post_init__(self):
-        if self.strategy not in VALID_STRATEGIES:
-            raise ValueError(f"unknown strategy {self.strategy!r}; "
-                             f"expected one of {VALID_STRATEGIES}")
+        if self.strategy in VALID_STRATEGIES:
+            return
+        # names added at runtime via register_strategy are valid too
+        # (lazy import: strategies.py imports this module)
+        from repro.explore.strategies import STRATEGIES
+        if self.strategy not in STRATEGIES:
+            raise ValueError(
+                f"unknown strategy {self.strategy!r}; expected one of "
+                f"{tuple(dict.fromkeys(VALID_STRATEGIES + tuple(STRATEGIES)))}")
 
 
 @dataclasses.dataclass(frozen=True)

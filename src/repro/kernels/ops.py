@@ -8,7 +8,7 @@ Dry-run lowering always uses 'ref' (DESIGN.md §6).
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

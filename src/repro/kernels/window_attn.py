@@ -86,8 +86,8 @@ def window_attn(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     nj = window // bk + 1
     grid = (b, h, t // bq, nj)
 
-    kv_map = lambda bi, hi, qi, j: (
-        bi, jnp.maximum(qi + j - (nj - 1), 0), hi // group, 0)
+    def kv_map(bi, hi, qi, j):
+        return bi, jnp.maximum(qi + j - (nj - 1), 0), hi // group, 0
     scratch = [] if _VMEM is None else [
         _VMEM((bq,), jnp.float32), _VMEM((bq,), jnp.float32),
         _VMEM((bq, hd), jnp.float32)]

@@ -14,7 +14,7 @@ import jax
 
 from repro.configs.base import INPUT_SHAPES
 from repro.launch import rules as R
-from repro.launch.hlo_analysis import analyze_text, top_collectives
+from repro.launch.hlo_analysis import top_collectives
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import analyze
 from repro.launch.steps import build_setup

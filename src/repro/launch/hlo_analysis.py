@@ -97,7 +97,6 @@ def _opcode_of(rest: str) -> Optional[str]:
 
 
 def _dot_flops(line: str, result, symbols) -> float:
-    ops = re.findall(r"\(([^)]*)\)", line)
     # operand names: first parenthesized group after opcode
     m = re.search(r"\bdot\(([^)]*)\)", line)
     if not m:
@@ -134,7 +133,6 @@ def _conv_flops(line: str, result, symbols) -> float:
     if not rhs:
         return 0.0
     kshape = rhs[0][1]
-    dnums = re.search(r"dim_labels=([\w.>]+)", line)
     n_out = 1
     for dt, dims in result:
         for d in dims:

@@ -16,11 +16,11 @@ the embed/final-norm/head which run replicated outside the pipelined stack.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.nn.sharding import shard_map
 
@@ -50,7 +50,6 @@ def pipelined_apply(model: DecoderLM, params: Dict[str, Any], batch: Dict,
     final norm and head run outside the pipelined region (replicated over
     the stage axis, sharded over data/model as usual).
     """
-    cfg = model.cfg
     n_stages = mesh.shape[stage_axis]
     x, positions = model._embed(params, batch)
     b, t, d = x.shape
@@ -67,10 +66,6 @@ def pipelined_apply(model: DecoderLM, params: Dict[str, Any], batch: Dict,
     # everything except the stage axis stays as-is (data/model sharding of
     # microbatches is handled by the outer jit); inside shard_map we only
     # split the stage axis.
-    spec_blocks = jax.tree_util.tree_map(
-        lambda _: P(stage_axis), blocks)
-    other = tuple(a for a in mesh.axis_names if a != stage_axis)
-
     @functools.partial(
         shard_map, mesh=mesh,
         in_specs=(P(stage_axis), P(), P()),

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # B/s / chip
@@ -139,10 +139,6 @@ def active_params(cfg) -> int:
     from repro.models.registry import build_model
     import dataclasses as dc
     if cfg.n_experts:
-        dense_equiv = dc.replace(
-            cfg, n_experts=0, top_k=0, family="dense" if cfg.family == "moe"
-            else cfg.family,
-            d_ff=(cfg.top_k + cfg.n_shared) * cfg.moe_d_ff)
         # keep first_dense layers' real d_ff: approximate by weighting
         n_moe = cfg.n_layers - cfg.first_dense
         moe_ffn_params = 3 * cfg.d_model * (cfg.top_k + cfg.n_shared) * cfg.moe_d_ff
@@ -169,7 +165,6 @@ def analyze(compiled, cfg, shape, n_devices: int) -> Roofline:
     # chains are assumed fused on TPU (documented approximation)
     nbytes = hc.write_bytes
     coll = {k: int(v) for k, v in hc.coll_by_kind.items()}
-    mem = {}
     try:
         ma = compiled.memory_analysis()
         mem_peak = (getattr(ma, "peak_memory_in_bytes", 0) or

@@ -11,12 +11,11 @@ heads are often < 16 so head-sharding the cache is not generally possible.
 from __future__ import annotations
 
 import re
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeConfig
 from repro.nn import sharding as shd
 
 

@@ -15,11 +15,9 @@ two ways and compares:
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import (Platform, QuantSpec, SystemConfig, get_link)
 from repro.core.hwmodel.arch import EYERISS_LIKE, SIMBA_LIKE

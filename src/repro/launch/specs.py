@@ -12,12 +12,12 @@ No device allocation: the dry-run lowers against these stand-ins.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig, ShapeConfig
 
 
 def run_config(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:

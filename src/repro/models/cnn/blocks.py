@@ -8,15 +8,14 @@
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import layers as GL
 from repro.core.graph import LayerGraph
-from repro.nn.layers import (BatchNorm2d, Conv2d, Dense, SqueezeExcite,
-                             avg_pool, global_avg_pool, max_pool)
+from repro.nn.layers import BatchNorm2d, Conv2d, SqueezeExcite, max_pool
 from repro.nn.module import Module
 
 

@@ -12,7 +12,6 @@ from __future__ import annotations
 from typing import List, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.graph import LayerGraph
 from repro.models.cnn.blocks import (Bottleneck, ConvBNAct, Fire, GraphBuilder,

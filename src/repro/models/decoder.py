@@ -15,8 +15,6 @@ Public API (same for every family — the launcher depends only on this):
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -12,7 +12,7 @@ model sees them via ``shared_groups`` (DESIGN.md §4).
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

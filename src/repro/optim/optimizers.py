@@ -11,7 +11,7 @@ the ≥70B configs where full Adam states don't fit HBM (DESIGN.md §5).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -72,7 +72,8 @@ def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
     sched = _to_schedule(lr)
 
     def init(params):
-        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        def zeros(p):
+            return jnp.zeros_like(p, dtype=jnp.float32)
         return {"m": jax.tree_util.tree_map(zeros, params),
                 "v": jax.tree_util.tree_map(zeros, params),
                 "step": jnp.zeros((), jnp.int32)}

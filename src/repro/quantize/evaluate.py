@@ -12,7 +12,7 @@ adapt to the quantization grid — the paper's accuracy-restoration step.
 
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Callable, Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ masked.  Greedy or temperature sampling.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp

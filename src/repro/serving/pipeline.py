@@ -17,7 +17,6 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.quant import QuantSpec, quantize_pytree, quantize_tensor
 
@@ -60,7 +59,6 @@ class PartitionedCNNRunner:
                  cuts: Sequence[int],                 # block indices: stage k
                  quant_specs: Optional[Sequence[Optional[QuantSpec]]] = None,
                  link_quant: bool = True):
-        from repro.models.cnn.zoo import CNNModel
         self.model = model
         self.cuts = list(cuts)
         n_stages = len(self.cuts) + 1

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.launch.hlo_analysis import analyze_text, parse_computations
+from repro.launch.hlo_analysis import analyze_text
 from repro.launch.rules import param_spec, _divides
 from repro.nn.sharding import logical_to_spec, DEFAULT_RULES
 

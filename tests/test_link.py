@@ -1,6 +1,5 @@
 """Link models: latency/energy monotonicity and GigE sanity."""
 
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.link import LINKS, get_link, gigabit_ethernet

@@ -5,7 +5,7 @@ import pytest
 from repro.core import layers as L
 from repro.core.graph import LayerGraph
 from repro.core.hwmodel import EYERISS_LIKE, SIMBA_LIKE
-from repro.core.link import gigabit_ethernet, get_link
+from repro.core.link import gigabit_ethernet
 from repro.core.partition import (Constraints, PartitionEvaluator, Platform,
                                   SystemConfig, single_platform_eval)
 from repro.core.quant import QuantSpec

@@ -2,12 +2,10 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from _hypothesis_compat import given, settings, st
 
-from repro.core.quant import (ActObserver, QuantSpec, calibrate,
-                              compute_scale_zp, fake_quant, quantization_error,
-                              quantize_pytree, quantize_tensor)
+from repro.core.quant import (ActObserver, QuantSpec, fake_quant,
+    quantization_error, quantize_pytree, quantize_tensor)
 
 
 def test_roundtrip_error_bound():

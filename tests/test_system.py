@@ -1,12 +1,10 @@
 """End-to-end system behaviour: the full Fig. 1 flow on a real CNN and the
 paper's headline effects at the system level."""
 
-import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.core import (Constraints, Explorer, Platform, QuantSpec,
-                        SystemConfig, get_link, single_platform_eval)
+    SystemConfig, get_link)
 from repro.core.hwmodel import EYERISS_LIKE, SIMBA_LIKE
 from repro.models.cnn.zoo import build_cnn
 

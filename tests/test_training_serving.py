@@ -13,7 +13,7 @@ from repro.data.synthetic import (SyntheticImages, SyntheticTokens,
                                   batch_iterator, make_batch_for)
 from repro.models.cnn.zoo import reduced_cnn
 from repro.models.registry import build_model, get_config
-from repro.optim.optimizers import adamw, adafactor, get_optimizer
+from repro.optim.optimizers import adamw, adafactor
 from repro.quantize.evaluate import qat_finetune, quantized_eval
 from repro.serving.engine import GenerationEngine
 from repro.serving.pipeline import PartitionedLMRunner

@@ -4,12 +4,11 @@ equivalence, MoE dispatch properties, multi-stage LM pipeline."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import Platform, QuantSpec, SystemConfig, get_link
 from repro.core.hwmodel import EYERISS_LIKE, SIMBA_LIKE
-from repro.core.nsga2 import dominates, fast_non_dominated_sort
+from repro.core.nsga2 import dominates
 from repro.explore import SearchSettings, explore_graph
 from repro.models.cnn.zoo import build_cnn
 from repro.models.registry import build_model, get_config

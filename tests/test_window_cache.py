@@ -23,7 +23,7 @@ def test_ring_cache_matches_full_cache_after_wrap():
     # windowed model with a ring cache of exactly `window` slots
     ring = model.init_caches(1, capacity=n_tokens + 8, dtype=jnp.float32)
     # init_caches clamps capacity to window for windowed configs
-    cap = jax.tree_util.tree_leaves(ring)[0].shape  # sanity handle
+    assert jax.tree_util.tree_leaves(ring)[0].shape
     ring_logits = []
     for i in range(n_tokens):
         lg, ring = model.decode_step(params, ring, {"tokens": toks[:, i:i+1]})
