@@ -9,14 +9,17 @@ when any tracked metric regressed by more than ``--max-regression``
 Tracked keys:
 
 * higher is better: ``batch_evals_per_s``, ``nsga_evals_per_s``,
-  ``jit_nsga_evals_per_s``
+  ``jit_nsga_evals_per_s``, ``jit_nsga_scale_evals_per_s``
 * lower is better:  ``campaign_wall_s``
 
-Baselines are only comparable when their ``bench_schema`` matches the
-current run's (key semantics change across schema bumps — e.g. schema 2
-moved ``nsga_evals_per_s`` to pop 2048); mismatching baselines are skipped.
-The committed fallback baseline is an intentionally conservative floor (CI
-runners are slower than dev machines), not a fresh measurement.
+Baselines are only comparable when both their ``bench_schema`` *and* their
+``mode`` (quick vs full) match the current run's: key semantics change
+across schema bumps (e.g. schema 2 moved ``nsga_evals_per_s`` to pop 2048)
+and quick/full runs measure different workload sizes under the same keys,
+so diffing across either boundary gates on incomparable numbers.
+Mismatching baselines are skipped with a warning.  The committed fallback
+baseline is an intentionally conservative floor (CI runners are slower
+than dev machines), not a fresh measurement.
 
 CI runs the gate twice: tight (20%) against the deterministic committed
 floor, and looser (``--max-regression 0.5``) against the previous run's
@@ -37,7 +40,7 @@ import sys
 from typing import Optional, Tuple
 
 HIGHER_BETTER = ("batch_evals_per_s", "nsga_evals_per_s",
-                 "jit_nsga_evals_per_s")
+                 "jit_nsga_evals_per_s", "jit_nsga_scale_evals_per_s")
 LOWER_BETTER = ("campaign_wall_s",)
 
 
@@ -52,15 +55,22 @@ def load(path: str) -> Optional[dict]:
         return None
 
 
-def pick_baseline(paths, schema) -> Tuple[Optional[dict], Optional[str]]:
-    """First baseline that exists and speaks the current schema."""
+def pick_baseline(paths, schema, mode) -> Tuple[Optional[dict], Optional[str]]:
+    """First baseline that exists and is comparable: same ``bench_schema``
+    AND same ``mode`` — a full-mode artifact diffed against a quick run (or
+    a pre-schema-bump artifact against a current one) would flag workload
+    differences as regressions, so those are skipped with a warning."""
     for p in paths:
         d = load(p)
         if d is None:
             continue
         if d.get("bench_schema") != schema:
-            print(f"note: skipping baseline {p} "
+            print(f"WARNING: skipping incomparable baseline {p} "
                   f"(bench_schema={d.get('bench_schema')!r} != {schema!r})")
+            continue
+        if d.get("mode") != mode:
+            print(f"WARNING: skipping incomparable baseline {p} "
+                  f"(mode={d.get('mode')!r} != {mode!r})")
             continue
         return d, p
     return None, None
@@ -109,7 +119,8 @@ def main() -> int:
               file=sys.stderr)
         return 1
     paths = args.baseline or ["benchmarks/baseline_explorer.json"]
-    base, used = pick_baseline(paths, cur.get("bench_schema"))
+    base, used = pick_baseline(paths, cur.get("bench_schema"),
+                               cur.get("mode"))
     if base is None:
         print("note: no usable baseline — skipping the regression gate "
               f"(tried: {', '.join(paths)})")

@@ -142,6 +142,42 @@ def bench_jit_nsga_run(out: dict, model: str = "squeezenet11",
     return evals / dt
 
 
+def bench_jit_scale(out: dict, model: str = "squeezenet11",
+                    pop_size: int = 32768, n_gen: int = 1):
+    """The tiled-ranking scale point (ROADMAP open item 1): a full
+    ``jit_nsga2`` generation loop at a population the dense (pop, pop)
+    ranking path cannot hold in memory — the blocked
+    ``kernels.pareto_rank`` primitive keeps the ranking working set at
+    O(pop · rank_block).
+
+    Records ``jit_nsga_pop_max`` (the population this bench proves out)
+    and the steady-state ``jit_nsga_scale_evals_per_s``; like the pop-2048
+    bench, the first run pays XLA compilation (reported separately as
+    ``jit_scale_compile_s``) and the second run is the gated rate.
+    """
+    evaluator = make_evaluator(model)
+    settings = SearchSettings(strategy="jit_nsga2", seed=0,
+                              pop_size=pop_size, n_gen=n_gen)
+    from repro.explore import run_search
+    t0 = time.perf_counter()
+    run_search(evaluator, settings=settings)
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = run_search(evaluator, settings=settings)
+    dt = time.perf_counter() - t0
+    evals = pop_size * (n_gen + 1)
+    out["jit_nsga_pop_max"] = pop_size
+    out["jit_nsga_scale_run_s"] = round(dt, 3)
+    out["jit_nsga_scale_evals_per_s"] = round(evals / dt, 1)
+    out["jit_scale_compile_s"] = round(max(cold - dt, 0.0), 3)
+    print(csv_row("explorer_jit_nsga_scale", dt * 1e6,
+                  f"pop={pop_size};gens={n_gen};"
+                  f"evals_per_s={evals / dt:.0f};"
+                  f"compile={max(cold - dt, 0):.1f}s;"
+                  f"pareto={len(res.pareto)}"))
+    return evals / dt
+
+
 def bench_campaign(out: dict, models=("squeezenet11", "regnetx_400mf",
                                       "efficientnet_b0"),
                    in_hw: int = 64):
@@ -176,20 +212,28 @@ def main() -> int:
                          "drops below this")
     ap.add_argument("--json", default="BENCH_explorer.json",
                     help="machine-readable output path")
+    ap.add_argument("--scale-pop", type=int, default=32768,
+                    help="population for the tiled-ranking scale bench "
+                         "(0 skips it)")
     args = ap.parse_args()
 
     # bench_schema guards cross-PR artifact diffs: compare_bench.py refuses
     # to diff files whose schemas (and so key semantics) don't match
-    out = {"mode": "quick" if args.quick else "full", "bench_schema": 2}
+    # (schema 3 added the pop-32768 jit_nsga_scale_* keys)
+    out = {"mode": "quick" if args.quick else "full", "bench_schema": 3}
     if args.quick:
         speedup = bench_eval_paths(out, n_candidates=1024, scalar_cap=128)
         np_rate = bench_nsga_run(out, pop_size=2048, n_gen=3)
         jit_rate = bench_jit_nsga_run(out, pop_size=2048, n_gen=8)
+        if args.scale_pop:
+            bench_jit_scale(out, pop_size=args.scale_pop, n_gen=1)
         bench_campaign(out)
     else:
         speedup = bench_eval_paths(out, n_candidates=8192, scalar_cap=512)
         np_rate = bench_nsga_run(out, pop_size=2048, n_gen=8)
         jit_rate = bench_jit_nsga_run(out, pop_size=2048, n_gen=30)
+        if args.scale_pop:
+            bench_jit_scale(out, pop_size=args.scale_pop, n_gen=2)
         bench_campaign(out)
     out["jit_nsga_speedup"] = round(jit_rate / np_rate, 1)
     print(csv_row("explorer_jit_nsga_speedup", 0.0,

@@ -1,0 +1,103 @@
+"""Bench trend history (ROADMAP open item): accumulate per-run
+``BENCH_explorer.json`` artifacts into one queryable ``BENCH_trend.json``.
+
+Each CI bench run appends its metrics — keyed by commit SHA, stamped with
+the run date, mode and ``bench_schema`` — to the trend file downloaded from
+the previous successful run's artifact, and re-uploads the result.  The
+outcome is a single JSON whose ``runs`` list is the perf trajectory across
+PRs (one dashboard file instead of one artifact per commit).
+
+  python benchmarks/trend.py --current BENCH_explorer.json \
+      --trend BENCH_trend.json [--prev prev/BENCH_trend.json] [--sha SHA]
+
+Re-running a commit (e.g. a re-triggered CI job) replaces that SHA's entry
+instead of duplicating it; runs are kept in append order.
+"""
+
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import subprocess
+import sys
+
+TREND_SCHEMA = 1
+
+
+def git_sha() -> str:
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"],
+                             capture_output=True, text=True, timeout=10)
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
+def load_trend(path: str) -> dict:
+    if path and os.path.exists(path):
+        try:
+            with open(path) as f:
+                d = json.load(f)
+            if isinstance(d, dict) and isinstance(d.get("runs"), list):
+                return d
+            print(f"note: ignoring malformed trend file {path}")
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"note: ignoring unreadable trend file {path}: {e}")
+    return {"trend_schema": TREND_SCHEMA, "runs": []}
+
+
+def append_run(trend: dict, bench: dict, sha: str, date: str) -> dict:
+    entry = {
+        "sha": sha,
+        "date": date,
+        "mode": bench.get("mode"),
+        "bench_schema": bench.get("bench_schema"),
+        "metrics": {k: v for k, v in bench.items()
+                    if isinstance(v, (int, float)) and k != "bench_schema"},
+    }
+    runs = [r for r in trend["runs"] if r.get("sha") != sha]
+    runs.append(entry)
+    return {"trend_schema": TREND_SCHEMA, "runs": runs}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default="BENCH_explorer.json",
+                    help="this run's benchmark artifact")
+    ap.add_argument("--trend", default="BENCH_trend.json",
+                    help="trend file to write")
+    ap.add_argument("--prev", default=None,
+                    help="previous trend file to extend (e.g. the last "
+                         "successful CI run's downloaded artifact)")
+    ap.add_argument("--sha", default=None,
+                    help="commit SHA for this run (default: git HEAD)")
+    ap.add_argument("--date", default=None,
+                    help="ISO date for this run (default: now, UTC)")
+    args = ap.parse_args()
+
+    if not os.path.exists(args.current):
+        print(f"FAIL: current benchmark {args.current} not found",
+              file=sys.stderr)
+        return 1
+    with open(args.current) as f:
+        bench = json.load(f)
+
+    # seed from --prev when given, else extend the output file in place
+    trend = load_trend(args.prev if args.prev else args.trend)
+    sha = args.sha or git_sha()
+    date = args.date or (datetime.datetime.now(datetime.timezone.utc)
+                         .strftime("%Y-%m-%dT%H:%M:%SZ"))
+    trend = append_run(trend, bench, sha, date)
+    with open(args.trend, "w") as f:
+        json.dump(trend, f, indent=1)
+    print(f"wrote {args.trend}: {len(trend['runs'])} run(s), "
+          f"latest {sha[:12]} ({bench.get('mode')})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -59,3 +59,38 @@ jit_spec = dataclasses.replace(
     spec, search=SearchSettings(strategy="jit_nsga2", pop_size=4096,
                                 n_gen=40))
 print("\njit_nsga2:", run_spec(jit_spec).summary())
+
+# 5. scaling the jit search to very large populations — the knobs
+#    (worked example: EfficientNet-B0 across a 4-node chain, 3 cuts)
+#
+#    * rank_block   — row-tile size of the blocked Pareto-ranking kernel
+#      (repro.kernels.pareto_rank).  None auto-selects: dense ranking for
+#      combined populations <= 4096, 2048-row tiles beyond, so peak memory
+#      is O(pop * rank_block) instead of the dense O(pop^2) that capped
+#      populations around 2k.  Set it explicitly to trade tile-loop
+#      overhead against working-set size.
+#    * rank_impl    — 'auto' (blocked jnp on CPU, Pallas kernels on TPU),
+#      'ref', or 'pallas' to pin a branch.
+#    * n_restarts   — >1 vmaps that many independently seeded searches into
+#      ONE compiled program (seeds seed..seed+n-1) and merges their fronts:
+#      restart diversity at roughly the cost of one larger batch.
+#    * rank_devices — shards the ranking tile grid across that many local
+#      devices via shard_map on multi-device hosts.
+#
+#    With these, pop 32768 completes on a CPU host where the dense path
+#    OOMs, and accelerators stay busy at 100k+ (see
+#    benchmarks/explorer_bench.py, which records jit_nsga_pop_max).
+scale_spec = ExplorationSpec(
+    model=ModelRef("cnn", "efficientnet_b0", {"in_hw": 64}),
+    system=SystemSpec(
+        platforms=(PlatformSpec("cam0", "eyr", bits=16),
+                   PlatformSpec("cam1", "eyr", bits=16),
+                   PlatformSpec("edge", "smb", bits=8),
+                   PlatformSpec("central", "smb", bits=8)),
+        links=("gige", "gige", "gige")),
+    objectives=("latency", "energy"),
+    search=SearchSettings(strategy="jit_nsga2", pop_size=2048, n_gen=12,
+                          rank_block=512,      # force the tiled ranking
+                          rank_impl="auto",
+                          n_restarts=2))       # 2 seeds, one compile
+print("\njit_nsga2 scaled:", run_spec(scale_spec).summary())

@@ -275,7 +275,9 @@ def pareto_indices(X: np.ndarray, F: np.ndarray, CV: np.ndarray) -> np.ndarray:
 
 _JAX_TWINS = ("constrained_dominates", "domination_matrix",
               "nondominated_rank", "crowding_by_rank", "tournament",
-              "repair", "make_offspring", "make_jit_runner")
+              "repair", "make_offspring", "make_jit_runner",
+              "make_jit_restart_runner", "pareto_indices_blocked")
+_JAX_DIRECT = ("jit_nsga2", "jit_nsga2_restarts")
 
 
 def __getattr__(name: str):
@@ -285,7 +287,7 @@ def __getattr__(name: str):
     if name.startswith("jit_") and name[4:] in _JAX_TWINS:
         import repro.core.nsga2_jax as _jx
         return getattr(_jx, name[4:])
-    if name == "jit_nsga2":
+    if name in _JAX_DIRECT:
         import repro.core.nsga2_jax as _jx
-        return _jx.jit_nsga2
+        return getattr(_jx, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -65,18 +65,34 @@ def _pack_bits(B: Array) -> Array:
 
 
 def nondominated_rank(F: Array, CV: Array,
-                      cap: Optional[int] = None) -> Array:
+                      cap: Optional[int] = None, *,
+                      rank_block: Optional[int] = None,
+                      rank_impl: str = "auto",
+                      mesh=None) -> Array:
     """Front index per individual (0 = first front), peeled until at least
     ``cap`` individuals are ranked (default: all).  The unpeeled tail keeps
     rank ``n`` — environmental selection never reaches it.
 
-    The domination matrix is bit-packed (32 individuals per uint32 word), so
-    each peel step counts surviving dominators with ``population_count``
-    over a (n/32, n) word matrix — ~n²/8 bytes of traffic per front instead
-    of the 4n² a float mat-vec would read.
+    With ``rank_block`` unset/0 the dense path runs: the full domination
+    matrix is built in one broadcast, bit-packed (32 individuals per uint32
+    word), and each peel step counts surviving dominators with
+    ``population_count`` over a (n/32, n) word matrix — ~n²/8 bytes of
+    traffic per front instead of the 4n² a float mat-vec would read.
+
+    ``rank_block > 0`` switches to the tiled primitive
+    (``repro.kernels.ops.packed_domination``): the packed words are built
+    (rank_block, n)-tile by tile so the dense (n, n[, m]) booleans never
+    exist, and only *feasible* Pareto layers are peeled — Deb domination
+    totally orders infeasible individuals by violation, so their ranks (the
+    equal-CV groups, appended after the feasible layers) come in closed
+    form instead of one O(n²/8) popcount pass per (often singleton) front.
+    Ranks are bit-identical to the dense path; ``mesh`` (1-D) shards the
+    tile rows across devices.
     """
     n = F.shape[0]
     cap = n if cap is None else min(cap, n)
+    if rank_block:
+        return _rank_blocked(F, CV, cap, rank_block, rank_impl, mesh)
     Dp = _pack_bits(domination_matrix(F, CV))       # (W, n) uint32
     state = (jnp.full(n, n, dtype=jnp.int32),       # rank
              jnp.ones(n, dtype=bool),               # alive (unranked)
@@ -98,6 +114,50 @@ def nondominated_rank(F: Array, CV: Array,
 
     rank, _, _, _ = lax.while_loop(cond, body, state)
     return rank
+
+
+def _rank_blocked(F: Array, CV: Array, cap: int, block: int, impl: str,
+                  mesh) -> Array:
+    """Tiled non-dominated ranking; see :func:`nondominated_rank`."""
+    from repro.kernels import ops
+    n = F.shape[0]
+    Dp = ops.packed_domination(F, CV, block=block, impl=impl, mesh=mesh)
+    feas = CV <= 0
+    state = (jnp.full(n, n, dtype=jnp.int32), feas,
+             jnp.int32(0), jnp.int32(0))
+
+    def cond(s):
+        _, alive, _, done = s
+        return alive.any() & (done < cap)
+
+    def body(s):
+        rank, alive, r, done = s
+        alive_p = _pack_bits(alive[:, None])[:, 0]
+        n_dom = lax.population_count(Dp & alive_p[:, None]).sum(axis=0)
+        front = alive & (n_dom == 0)
+        front = jnp.where(front.any(), front, alive)   # numerical safety
+        rank = jnp.where(front, r, rank)
+        return (rank, alive & ~front, r + 1,
+                done + front.sum(dtype=jnp.int32))
+
+    rank, _, n_feas_fronts, done = lax.while_loop(cond, body, state)
+    # infeasible tail: every feasible individual dominates every infeasible
+    # one and infeasible pairs compare by violation alone, so the remaining
+    # fronts are the equal-CV groups in ascending order.  A group is peeled
+    # iff the count ranked before it is still under the cap — exactly the
+    # dense loop's stopping rule.
+    cvs = jnp.where(feas, jnp.inf, CV)
+    order = jnp.argsort(cvs)
+    scv = cvs[order]
+    new_grp = jnp.concatenate([jnp.zeros(1, dtype=bool),
+                               scv[1:] != scv[:-1]])
+    grp_sorted = jnp.cumsum(new_grp.astype(jnp.int32))
+    grp = jnp.zeros(n, jnp.int32).at[order].set(grp_sorted)
+    first_idx = jax.ops.segment_min(jnp.arange(n, dtype=jnp.int32),
+                                    grp_sorted, num_segments=n)
+    before = done + first_idx[grp]                  # ranked before my group
+    include = ~feas & (before < cap)
+    return jnp.where(include, n_feas_fronts + grp, rank)
 
 
 def crowding_by_rank(F: Array, rank: Array) -> Array:
@@ -190,15 +250,25 @@ def make_offspring(key: Array, X: Array, F: Array, CV: Array, crowd: Array,
 
 # -- the compiled generation loop ---------------------------------------------
 
-def make_jit_runner(eval_fn: EvalFn, n_var: int, lower: int, upper: int,
-                    pop_size: int):
-    """Compile the whole NSGA-II run into one XLA program.
+# auto rank_block policy: combined (2·pop) populations at/below the
+# threshold keep the dense packed path (fastest there, memory irrelevant);
+# beyond it the tiled path runs with the default tile rows
+_AUTO_DENSE_MAX = 4096
+_AUTO_RANK_BLOCK = 2048
 
-    Returns ``run(key, X0, n_gen) -> (X, F, CV)``; ``n_gen`` is a traced
-    loop bound, so one compilation serves any generation budget at a given
-    (pop_size, n_var) shape.
-    """
-    lo, hi = lower, upper
+
+def _resolve_rank_block(rank_block: Optional[int], pop_size: int) -> int:
+    """None → auto (dense ≤ ``_AUTO_DENSE_MAX`` combined, else 2048-row
+    tiles); 0 forces dense; a positive int is the tile row count."""
+    if rank_block is None:
+        return 0 if 2 * pop_size <= _AUTO_DENSE_MAX else _AUTO_RANK_BLOCK
+    return rank_block
+
+
+def _make_run(eval_fn: EvalFn, lo: int, hi: int, pop_size: int,
+              rank_block: int, rank_impl: str, mesh):
+    """The whole-search program (unjitted) shared by the single-seed and
+    vmapped multi-restart runners."""
 
     def gen_step(carry):
         key, X, F, CV, crowd = carry
@@ -210,21 +280,76 @@ def make_jit_runner(eval_fn: EvalFn, n_var: int, lower: int, upper: int,
         CVall = jnp.concatenate([CV, CVc])
         # elitist environmental selection: whole fronts in rank order, the
         # boundary front tie-broken by crowding == lexsort by (rank, -crowd)
-        rank = nondominated_rank(Fall, CVall, cap=pop_size)
+        rank = nondominated_rank(Fall, CVall, cap=pop_size,
+                                 rank_block=rank_block, rank_impl=rank_impl,
+                                 mesh=mesh)
         crowd_all = crowding_by_rank(Fall, rank)
         keep = jnp.lexsort((-crowd_all, rank))[:pop_size]
         return key, Xall[keep], Fall[keep], CVall[keep], crowd_all[keep]
 
-    @jax.jit
     def run(key: Array, X0: Array, n_gen) -> Tuple[Array, Array, Array]:
         X0 = repair(X0, lo, hi)
         F0, CV0 = eval_fn(X0)
-        crowd0 = crowding_by_rank(F0, nondominated_rank(F0, CV0))
+        rank0 = nondominated_rank(F0, CV0, rank_block=rank_block,
+                                  rank_impl=rank_impl, mesh=mesh)
+        crowd0 = crowding_by_rank(F0, rank0)
         carry = (key, X0, F0, CV0, crowd0)
         carry = lax.fori_loop(0, n_gen, lambda _, c: gen_step(c), carry)
         return carry[1], carry[2], carry[3]
 
     return run
+
+
+def make_jit_runner(eval_fn: EvalFn, n_var: int, lower: int, upper: int,
+                    pop_size: int, rank_block: Optional[int] = None,
+                    rank_impl: str = "auto", mesh=None):
+    """Compile the whole NSGA-II run into one XLA program.
+
+    Returns ``run(key, X0, n_gen) -> (X, F, CV)``; ``n_gen`` is a traced
+    loop bound, so one compilation serves any generation budget at a given
+    (pop_size, n_var) shape.  ``X0`` is donated — the population buffers
+    live in place across the generation loop.
+
+    ``rank_block``/``rank_impl``/``mesh`` select the ranking primitive (see
+    :func:`nondominated_rank`): the auto policy keeps the dense packed
+    matrix for combined populations ≤ 4096 and tiles beyond, which is what
+    lets pop 32768+ run in O(pop · rank_block) working memory.
+    """
+    run = _make_run(eval_fn, lower, upper, pop_size,
+                    _resolve_rank_block(rank_block, pop_size), rank_impl,
+                    mesh)
+    return jax.jit(run, donate_argnums=(1,))
+
+
+def make_jit_restart_runner(eval_fn: EvalFn, n_var: int, lower: int,
+                            upper: int, pop_size: int,
+                            rank_block: Optional[int] = None,
+                            rank_impl: str = "auto", mesh=None):
+    """The ``vmap``-over-seeds twin of :func:`make_jit_runner`.
+
+    Returns ``run(keys, X0s, n_gen)`` over arrays with a leading restart
+    axis — one compilation covers every generation budget at a given
+    (n_restarts, pop_size, n_var) shape, and all restarts advance in
+    lockstep inside a single XLA program.
+    """
+    run = _make_run(eval_fn, lower, upper, pop_size,
+                    _resolve_rank_block(rank_block, pop_size), rank_impl,
+                    mesh)
+    return jax.jit(jax.vmap(run, in_axes=(0, 0, None)), donate_argnums=(1,))
+
+
+def _init_population(rng: np.random.Generator, pop_size: int, n_var: int,
+                     lower: int, upper: int,
+                     candidates: Optional[Sequence[Sequence[int]]]
+                     ) -> np.ndarray:
+    """Host-side population init — matches the NumPy
+    :func:`repro.core.nsga2.nsga2` draw-for-draw."""
+    X0 = rng.integers(lower, upper + 1, size=(pop_size, n_var))
+    if candidates is not None and len(candidates):
+        cand = np.asarray(list(candidates), dtype=int)
+        k = min(len(cand), pop_size // 2)
+        X0[:k] = cand[rng.permutation(len(cand))[:k]]
+    return X0
 
 
 def jit_nsga2(eval_fn: EvalFn, n_var: int, lower: int, upper: int,
@@ -238,15 +363,62 @@ def jit_nsga2(eval_fn: EvalFn, n_var: int, lower: int, upper: int,
     after the first device transfer is one XLA program.  Pass a prebuilt
     ``runner`` (from :func:`make_jit_runner`) to reuse a compilation.
     """
-    rng = np.random.default_rng(seed)
-    X0 = rng.integers(lower, upper + 1, size=(pop_size, n_var))
-    if candidates is not None and len(candidates):
-        cand = np.asarray(list(candidates), dtype=int)
-        k = min(len(cand), pop_size // 2)
-        X0[:k] = cand[rng.permutation(len(cand))[:k]]
+    X0 = _init_population(np.random.default_rng(seed), pop_size, n_var,
+                          lower, upper, candidates)
     if runner is None:
         runner = make_jit_runner(eval_fn, n_var, lower, upper, pop_size)
     X, F, CV = runner(jax.random.PRNGKey(seed),
                       jnp.asarray(X0, dtype=jnp.int32), n_gen)
     return (np.asarray(X, dtype=np.int64), np.asarray(F, dtype=np.float64),
             np.asarray(CV, dtype=np.float64))
+
+
+def jit_nsga2_restarts(eval_fn: EvalFn, n_var: int, lower: int, upper: int,
+                       pop_size: int, n_gen: int, n_restarts: int,
+                       seed: int = 0,
+                       candidates: Optional[Sequence[Sequence[int]]] = None,
+                       runner=None
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Multi-restart search: ``n_restarts`` independently seeded runs as one
+    vmapped XLA program, compiled once.
+
+    Restart ``i`` reproduces ``jit_nsga2(..., seed=seed + i)`` bit-for-bit
+    (same host init stream, same PRNG key), so the merged output's
+    non-dominated front equals the union of the per-seed sequential fronts
+    after one final non-dominated filter.  Returns host (X, F, CV) with the
+    restart axis flattened to ``n_restarts * pop_size`` rows.
+    """
+    X0s = np.stack([
+        _init_population(np.random.default_rng(seed + i), pop_size, n_var,
+                         lower, upper, candidates)
+        for i in range(n_restarts)])
+    keys = jnp.stack([jax.random.PRNGKey(seed + i)
+                      for i in range(n_restarts)])
+    if runner is None:
+        runner = make_jit_restart_runner(eval_fn, n_var, lower, upper,
+                                         pop_size)
+    X, F, CV = runner(keys, jnp.asarray(X0s, dtype=jnp.int32), n_gen)
+    flat = n_restarts * pop_size
+    return (np.asarray(X, dtype=np.int64).reshape(flat, n_var),
+            np.asarray(F, dtype=np.float64).reshape(flat, -1),
+            np.asarray(CV, dtype=np.float64).reshape(flat))
+
+
+def pareto_indices_blocked(X: np.ndarray, F: np.ndarray, CV: np.ndarray,
+                           block: int = 2048,
+                           impl: str = "auto") -> np.ndarray:
+    """Memory-bounded twin of :func:`repro.core.nsga2.pareto_indices`: the
+    first-front mask comes from the tiled dominator-count primitive
+    (O(n · block) peak) instead of the dense host-side sort, then the same
+    feasible-subset / unique-decision-vector selection applies."""
+    from repro.kernels import ops
+    counts = np.asarray(ops.domination_counts(
+        jnp.asarray(F, jnp.float32), jnp.asarray(CV, jnp.float32),
+        block=block, impl=impl))
+    first = np.flatnonzero(counts == 0)
+    if not len(first):                    # numerical safety, as in the dense
+        first = np.arange(len(F))
+    feas = first[CV[first] <= 0]
+    pareto = feas if len(feas) else first
+    _, uniq = np.unique(X[pareto], axis=0, return_index=True)
+    return pareto[np.sort(uniq)]

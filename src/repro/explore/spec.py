@@ -155,6 +155,20 @@ class SearchSettings:
     multi-thousand populations.  ``pop_size``/``n_gen`` of ``None`` scale
     with the schedule depth and cut count (see ``scaled_nsga_defaults``) —
     sized for the batched evaluator, not the old scalar loop.
+
+    The ``jit_nsga2`` scaling knobs (ignored by the other strategies):
+
+    * ``rank_block`` — row-tile size of the blocked Pareto-ranking
+      primitive.  ``None`` auto-selects (dense packed ranking for combined
+      populations ≤ 4096, 2048-row tiles beyond — what keeps pop 32768+
+      inside O(pop · rank_block) working memory); ``0`` forces dense.
+    * ``rank_impl`` — ``'auto' | 'ref' | 'pallas'`` kernel dispatch for the
+      ranking primitive (``'auto'``: blocked jnp on CPU, Pallas on TPU).
+    * ``n_restarts`` — > 1 runs that many independently seeded searches as
+      one vmapped XLA program (seeds ``seed .. seed+n-1``) and merges the
+      final fronts.
+    * ``rank_devices`` — shard the ranking tile grid across this many local
+      devices (``shard_map``); ``None``/1 keeps it single-device.
     """
 
     strategy: str = "auto"
@@ -165,8 +179,17 @@ class SearchSettings:
     max_scan: int = 1_000_000     # MultiCutScan enumeration cap
     scan_chunk: int = 4096        # rows per evaluate_batch call in scans
     allow_multi_tensor_cuts: bool = False
+    rank_block: Optional[int] = None
+    rank_impl: str = "auto"
+    n_restarts: int = 1
+    rank_devices: Optional[int] = None
 
     def __post_init__(self):
+        if self.rank_impl not in ("auto", "ref", "pallas"):
+            raise ValueError(f"unknown rank_impl {self.rank_impl!r}; "
+                             f"expected 'auto', 'ref' or 'pallas'")
+        if self.n_restarts < 1:
+            raise ValueError(f"n_restarts must be >= 1, got {self.n_restarts}")
         if self.strategy in VALID_STRATEGIES:
             return
         # names added at runtime via register_strategy are valid too

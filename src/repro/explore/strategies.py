@@ -201,6 +201,27 @@ def _gene_seeds(cands: List[int], table: np.ndarray,
     return seeds
 
 
+def _rank_mesh(rank_devices: Optional[int]):
+    """1-D device mesh for sharded Pareto ranking, or None.
+
+    Clamps to the locally visible device count with a warning — a spec
+    written for an 8-device host should still run (slower) on a laptop.
+    """
+    if not rank_devices or rank_devices <= 1:
+        return None
+    import jax
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    if len(devs) < rank_devices:
+        warnings.warn(
+            f"jit_nsga2: rank_devices={rank_devices} but only {len(devs)} "
+            f"device(s) visible; using {len(devs)}", stacklevel=2)
+        rank_devices = len(devs)
+    if rank_devices <= 1:
+        return None
+    return Mesh(np.asarray(devs[:rank_devices]), ("rank",))
+
+
 def _pop_gen(ctx: SearchContext) -> Tuple[int, int]:
     """Population/generation budget: explicit settings, else scaled."""
     pop, n_gen = ctx.settings.pop_size, ctx.settings.n_gen
@@ -262,15 +283,28 @@ class JitNSGA2Search:
     oracle is not jittable (no ``proxy_arrays``), falls back to
     :class:`NSGA2Search` with a warning rather than silently dropping the
     accuracy term.
+
+    Scaling knobs from :class:`~repro.explore.spec.SearchSettings`:
+    ``rank_block``/``rank_impl`` select the tiled Pareto-ranking primitive
+    (``repro.kernels.pareto_rank``) that keeps 10k–100k+ populations inside
+    O(pop · rank_block) working memory, ``n_restarts`` vmaps that many
+    independently seeded searches into one compilation and merges their
+    fronts, and ``rank_devices`` shards the ranking tile grid across local
+    devices with ``shard_map``.
     """
 
     name = "jit_nsga2"
+
+    # above this population the final front mask comes from the tiled
+    # dominator-count primitive instead of the dense host-side sort
+    _DENSE_PARETO_MAX = 8192
 
     def search(self, ctx: SearchContext) -> StrategyOutput:
         cands = ctx.candidates
         if not cands:
             return StrategyOutput([])
         evaluator = ctx.evaluator
+        settings = ctx.settings
         needs_acc = ("accuracy" in ctx.objectives
                      or bool(ctx.constraints.min_accuracy))
         if needs_acc and not hasattr(evaluator.accuracy_fn, "proxy_arrays"):
@@ -282,18 +316,25 @@ class JitNSGA2Search:
 
         import jax.numpy as jnp
 
-        from repro.core.nsga2_jax import jit_nsga2, make_jit_runner
+        from repro.core.nsga2_jax import (jit_nsga2, jit_nsga2_restarts,
+                                          make_jit_restart_runner,
+                                          make_jit_runner,
+                                          pareto_indices_blocked)
         from repro.core.partition_jax import make_batch_eval_fn
 
         table = _gene_table(ctx)
         n_cuts = ctx.n_cuts
         pop, n_gen = _pop_gen(ctx)
+        n_restarts = settings.n_restarts
+        mesh = _rank_mesh(settings.rank_devices)
 
         # compiled-runner cache on the evaluator: repeated searches over the
         # same evaluator (sweeps, benchmarks) pay XLA compilation once —
         # n_gen is a traced loop bound, so budgets can vary freely
         key = (ctx.objectives, ctx.constraints, pop, n_cuts,
-               len(table), ctx.settings.allow_multi_tensor_cuts)
+               len(table), settings.allow_multi_tensor_cuts,
+               settings.rank_block, settings.rank_impl, n_restarts,
+               settings.rank_devices)
         cache = getattr(evaluator, "_jit_runner_cache", None)
         if cache is None:
             cache = evaluator._jit_runner_cache = {}
@@ -306,23 +347,39 @@ class JitNSGA2Search:
             def _eval_genes(G):
                 return eval_cuts(jnp.sort(jtable[G], axis=1))
 
-            runner = make_jit_runner(_eval_genes, n_var=n_cuts, lower=0,
-                                     upper=len(table) - 1, pop_size=pop)
+            make = (make_jit_restart_runner if n_restarts > 1
+                    else make_jit_runner)
+            runner = make(_eval_genes, n_var=n_cuts, lower=0,
+                          upper=len(table) - 1, pop_size=pop,
+                          rank_block=settings.rank_block,
+                          rank_impl=settings.rank_impl, mesh=mesh)
             cache[key] = runner
 
-        X, F, CV = jit_nsga2(
-            None, n_var=n_cuts, lower=0, upper=len(table) - 1,
-            pop_size=pop, n_gen=n_gen, seed=ctx.settings.seed,
-            candidates=_gene_seeds(cands, table, n_cuts), runner=runner)
-        res = NSGA2Result(X=X, F=F, CV=CV,
-                          pareto_idx=pareto_indices(X, F, CV), history=[])
+        seeds = _gene_seeds(cands, table, n_cuts)
+        if n_restarts > 1:
+            X, F, CV = jit_nsga2_restarts(
+                None, n_var=n_cuts, lower=0, upper=len(table) - 1,
+                pop_size=pop, n_gen=n_gen, n_restarts=n_restarts,
+                seed=settings.seed, candidates=seeds, runner=runner)
+        else:
+            X, F, CV = jit_nsga2(
+                None, n_var=n_cuts, lower=0, upper=len(table) - 1,
+                pop_size=pop, n_gen=n_gen, seed=settings.seed,
+                candidates=seeds, runner=runner)
+        if len(X) > self._DENSE_PARETO_MAX:
+            p_idx = pareto_indices_blocked(X, F, CV,
+                                           block=settings.rank_block or 2048,
+                                           impl=settings.rank_impl)
+        else:
+            p_idx = pareto_indices(X, F, CV)
+        res = NSGA2Result(X=X, F=F, CV=CV, pareto_idx=p_idx, history=[])
         evals: List[PartitionEval] = []
         if len(res.pareto_X):
             evals = evaluator.evaluate_batch(
                 np.sort(table[res.pareto_X], axis=1),
                 ctx.constraints).to_evals()
         return StrategyOutput(evals, nsga=res,
-                              n_evaluated=pop * (n_gen + 1))
+                              n_evaluated=n_restarts * pop * (n_gen + 1))
 
 
 STRATEGIES: Dict[str, Type] = {

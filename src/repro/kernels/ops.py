@@ -8,7 +8,8 @@ Dry-run lowering always uses 'ref' (DESIGN.md §6).
 
 from __future__ import annotations
 
-from typing import Tuple
+import os
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +25,95 @@ def resolve_impl(impl: str) -> str:
     if impl == "auto":
         return "pallas" if jax.default_backend() == "tpu" else "ref"
     return impl
+
+
+def resolve_rank_impl(impl: str) -> str:
+    """Like :func:`resolve_impl`, with an env override for 'auto': the CI
+    kernel-interpret leg sets ``REPRO_RANK_IMPL=pallas`` so every 'auto'
+    caller exercises the Pallas branch (interpret=True) on CPU."""
+    if impl == "auto":
+        impl = os.environ.get("REPRO_RANK_IMPL", "auto")
+    if impl not in ("auto", "ref", "pallas"):
+        raise ValueError(f"unknown rank impl {impl!r}; "
+                         f"expected 'auto', 'ref' or 'pallas'")
+    return resolve_impl(impl)
+
+
+# -- pareto_rank ----------------------------------------------------------------
+
+# fixed column tile for the Pallas branch: rows follow the caller's block
+# (the knob trades tile-loop overhead against working-set size) while the
+# column width stays VMEM-friendly at any row count
+_PALLAS_COL_TILE = 256
+
+
+def _row_tile(block: int) -> int:
+    return max(32, block // 32 * 32)
+
+
+def _packed_rows(Fr, cvr, Fq, cvq, block: int, impl: str) -> jnp.ndarray:
+    """(ceil(r/32), n) packed domination rows, shape-legalizing pads."""
+    r, n = Fr.shape[0], Fq.shape[0]
+    if impl == "ref":
+        return _ref.packed_domination(Fr, cvr, Fq, cvq, block)
+    from repro.kernels.pareto_rank import packed_domination as k
+    bp, bq = _row_tile(block), _PALLAS_COL_TILE
+    Fr, cvr = _ref._pad_rows(Fr, cvr, bp)
+    Fq, cvq = _ref._pad_rows(Fq, cvq, bq)
+    out = k(Fr, cvr, Fq, cvq, bp=bp, bq=bq, interpret=_interpret())
+    return out[: (r + 31) // 32, :n]
+
+
+def packed_domination(F, CV, *, block: int = 1024, impl: str = "auto",
+                      mesh=None) -> jnp.ndarray:
+    """Bit-packed constrained-domination matrix, built tile-by-tile.
+
+    Returns (ceil(n/32), n) uint32 in the ``nsga2_jax._pack_bits`` layout —
+    bit-identical to packing the dense ``domination_matrix``, but the dense
+    (n, n[, m]) boolean temporaries never exist: peak working memory is the
+    packed words plus one (block, n) tile.  With a 1-D ``mesh`` the
+    dominator row-tiles are sharded across its devices through the
+    ``repro.nn.sharding`` shard_map shim.
+    """
+    impl = resolve_rank_impl(impl)
+    F = jnp.asarray(F, jnp.float32)
+    CV = jnp.asarray(CV, jnp.float32)
+    n = F.shape[0]
+    W = (n + 31) // 32
+    if mesh is not None and mesh.size > 1:
+        from jax.sharding import PartitionSpec as P
+
+        from repro.nn.sharding import shard_map
+        ax = mesh.axis_names[0]
+        Fr, cvr = _ref._pad_rows(F, CV, 32 * mesh.size)
+        fn = shard_map(
+            lambda fr, cr, fq, cq: _packed_rows(fr, cr, fq, cq, block, impl),
+            mesh=mesh, in_specs=(P(ax, None), P(ax), P(None, None), P(None)),
+            out_specs=P(ax, None), check_rep=False)
+        return fn(Fr, cvr, F, CV)[:W]
+    return _packed_rows(F, CV, F, CV, block, impl)[:W]
+
+
+def domination_counts(F, CV, alive: Optional[jnp.ndarray] = None, *,
+                      block: int = 1024, impl: str = "auto") -> jnp.ndarray:
+    """(n,) int32 count of alive constrained dominators per individual,
+    accumulated tile-by-tile — O(n · block) peak memory.  ``counts == 0``
+    is the first constrained front (used to merge restart fronts without a
+    dense host-side sort)."""
+    impl = resolve_rank_impl(impl)
+    F = jnp.asarray(F, jnp.float32)
+    CV = jnp.asarray(CV, jnp.float32)
+    n = F.shape[0]
+    if alive is None:
+        alive = jnp.ones(n, dtype=bool)
+    if impl == "ref":
+        return _ref.domination_counts(F, CV, alive, block)
+    from repro.kernels.pareto_rank import domination_counts as k
+    bp, bq = _row_tile(block), _PALLAS_COL_TILE
+    Fp, cvp = _ref._pad_rows(F, CV, bp)
+    ap = jnp.pad(alive, (0, Fp.shape[0] - n))
+    Fq, cvq = _ref._pad_rows(F, CV, bq)
+    return k(Fp, cvp, ap, Fq, cvq, bp=bp, bq=bq, interpret=_interpret())[:n]
 
 
 def quant_matmul(x, w_q, w_scale, x_scale, impl: str = "pallas"):

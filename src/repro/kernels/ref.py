@@ -35,6 +35,91 @@ def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
     return ssd_chunked(x, dt, A, B, C, chunk, D=None, init_state=init_state)
 
 
+# -- pareto_rank ---------------------------------------------------------------
+
+def dominates_tile(Fp: jnp.ndarray, cvp: jnp.ndarray,
+                   Fq: jnp.ndarray, cvq: jnp.ndarray) -> jnp.ndarray:
+    """Deb constrained-domination tile: out[i, j] = (Fp[i], cvp[i]) dominates
+    (Fq[j], cvq[j]).  The objective loop is unrolled over the (static, small)
+    objective count so no (rows, cols, m) temporary is ever materialized —
+    the building block every blocked/tiled Pareto primitive shares."""
+    rows, cols = Fp.shape[0], Fq.shape[0]
+    all_le = jnp.ones((rows, cols), dtype=bool)
+    any_lt = jnp.zeros((rows, cols), dtype=bool)
+    for j in range(Fp.shape[1]):
+        a, b = Fp[:, j, None], Fq[None, :, j]
+        all_le &= a <= b
+        any_lt |= a < b
+    feas_p, feas_q = (cvp <= 0)[:, None], (cvq <= 0)[None, :]
+    cv_lt = cvp[:, None] < cvq[None, :]
+    return jnp.where(feas_p & ~feas_q, True,
+                     jnp.where(feas_q & ~feas_p, False,
+                               jnp.where(~feas_p & ~feas_q, cv_lt,
+                                         all_le & any_lt)))
+
+
+def _pack_rows(B: jnp.ndarray) -> jnp.ndarray:
+    """Pack a (rows, n) bool tile into (rows // 32, n) uint32 words (bit j of
+    word w = B[32w + j] — the ``nsga2_jax._pack_bits`` layout)."""
+    rows, n = B.shape
+    W = B.reshape(rows // 32, 32, n).astype(jnp.uint32)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return (W * weights[None, :, None]).sum(axis=1, dtype=jnp.uint32)
+
+
+def _pad_rows(Fr, cvr, rows):
+    pad = (-Fr.shape[0]) % rows
+    if pad:
+        # +inf violation: padding rows dominate nothing, so their bits are 0
+        Fr = jnp.pad(Fr, ((0, pad), (0, 0)))
+        cvr = jnp.pad(cvr, (0, pad), constant_values=jnp.inf)
+    return Fr, cvr
+
+
+def packed_domination(Fr: jnp.ndarray, cvr: jnp.ndarray,
+                      Fq: jnp.ndarray, cvq: jnp.ndarray,
+                      block: int = 1024) -> jnp.ndarray:
+    """Bit-packed constrained-domination rows, built tile-by-tile.
+
+    Returns (ceil(len(Fr)/32), len(Fq)) uint32 — bit-for-bit the packing of
+    the dense ``domination_matrix`` rows, but peak working memory is
+    O(len(Fq) * block) instead of O(rows * cols * m): a ``lax.map`` walks
+    row tiles of dominators against the full column set.
+    """
+    r = Fr.shape[0]
+    rows = max(32, min(block, r + (-r) % 32) // 32 * 32)
+    Fr, cvr = _pad_rows(Fr, cvr, rows)
+    def tile(args):
+        fp, cp = args
+        return _pack_rows(dominates_tile(fp, cp, Fq, cvq))
+    words = jax.lax.map(tile, (Fr.reshape(-1, rows, Fr.shape[1]),
+                               cvr.reshape(-1, rows)))
+    return words.reshape(-1, Fq.shape[0])[: (r + 31) // 32]
+
+
+def domination_counts(F: jnp.ndarray, CV: jnp.ndarray,
+                      alive: Optional[jnp.ndarray] = None,
+                      block: int = 1024) -> jnp.ndarray:
+    """Per-individual count of (alive) constrained dominators, accumulated
+    tile-by-tile over dominator row blocks — O(n * block) peak memory, the
+    streaming twin of ``domination_matrix(...).sum(axis=0)``."""
+    n = F.shape[0]
+    if alive is None:
+        alive = jnp.ones(n, dtype=bool)
+    rows = max(32, min(block, n + (-n) % 32) // 32 * 32)
+    Fp, cvp = _pad_rows(F, CV, rows)
+    ap = jnp.pad(alive, (0, Fp.shape[0] - n))
+    def step(acc, args):
+        fp, cp, al = args
+        d = dominates_tile(fp, cp, F, CV) & al[:, None]
+        return acc + jnp.sum(d, axis=0, dtype=jnp.int32), None
+    acc, _ = jax.lax.scan(
+        step, jnp.zeros(n, dtype=jnp.int32),
+        (Fp.reshape(-1, rows, F.shape[1]), cvp.reshape(-1, rows),
+         ap.reshape(-1, rows)))
+    return acc
+
+
 # -- window_attn ----------------------------------------------------------------
 
 def window_attn(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

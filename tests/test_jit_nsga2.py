@@ -234,6 +234,44 @@ def test_spec_json_roundtrip_selects_jit_strategy():
     assert res.n_evaluated == 64 * 9
 
 
+def test_spec_roundtrip_scaling_knobs():
+    """rank_block / rank_impl / n_restarts / rank_devices survive the JSON
+    round-trip and are validated at construction."""
+    spec = ExplorationSpec(
+        model=ModelRef("cnn", "squeezenet11", {"in_hw": 64}),
+        system=FOUR_PLATFORM,
+        search=SearchSettings(strategy="jit_nsga2", pop_size=64, n_gen=4,
+                              rank_block=512, rank_impl="ref",
+                              n_restarts=3, rank_devices=2))
+    spec2 = ExplorationSpec.from_json(spec.to_json())
+    assert spec2 == spec
+    assert spec2.search.rank_block == 512
+    assert spec2.search.n_restarts == 3
+    with pytest.raises(ValueError, match="rank_impl"):
+        SearchSettings(rank_impl="mosaic")
+    with pytest.raises(ValueError, match="n_restarts"):
+        SearchSettings(n_restarts=0)
+
+
+def test_jit_strategy_restarts_front_superset(evaluator):
+    """n_restarts=2 merges both seeds' fronts: every single-seed front
+    point is matched or dominated, and n_evaluated counts both runs."""
+    from repro.explore import run_search
+    base = SearchSettings(strategy="jit_nsga2", seed=5, pop_size=64,
+                          n_gen=8, rank_block=64)
+    res1 = run_search(evaluator, settings=base)
+    res2 = run_search(evaluator,
+                      settings=dataclasses.replace(base, n_restarts=2))
+    assert res2.n_evaluated == 2 * 64 * 9
+    # seed 5 is restart 0 of the merged run, so its front can only be
+    # equalled or improved by the union
+    F1 = np.array([e.as_objectives(("latency", "energy")) for e in res1.pareto])
+    F2 = np.array([e.as_objectives(("latency", "energy")) for e in res2.pareto])
+    for f in F2:
+        assert not (F1 < f - 1e-12).all(axis=1).any(), \
+            "merged front point dominated by a single-seed point"
+
+
 # -- strategy registry --------------------------------------------------------
 
 def test_register_strategy_collision_and_override():
