@@ -10,7 +10,7 @@ Tracked keys:
 
 * higher is better: ``batch_evals_per_s``, ``nsga_evals_per_s``,
   ``jit_nsga_evals_per_s``, ``jit_nsga_scale_evals_per_s``
-* lower is better:  ``campaign_wall_s``
+* lower is better:  ``campaign_wall_s``, ``fleet_sweep_wall_s``
 
 Baselines are only comparable when both their ``bench_schema`` *and* their
 ``mode`` (quick vs full) match the current run's: key semantics change
@@ -41,7 +41,7 @@ from typing import Optional, Tuple
 
 HIGHER_BETTER = ("batch_evals_per_s", "nsga_evals_per_s",
                  "jit_nsga_evals_per_s", "jit_nsga_scale_evals_per_s")
-LOWER_BETTER = ("campaign_wall_s",)
+LOWER_BETTER = ("campaign_wall_s", "fleet_sweep_wall_s")
 
 
 def load(path: str) -> Optional[dict]:

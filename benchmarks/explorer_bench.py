@@ -178,16 +178,20 @@ def bench_jit_scale(out: dict, model: str = "squeezenet11",
     return evals / dt
 
 
+def _bench_campaign_spec(models, in_hw: int) -> ExplorationSpec:
+    return ExplorationSpec(
+        model=ModelRef("cnn", models[0], {"in_hw": in_hw}),
+        system=chain_system_spec(),
+        objectives=("latency", "energy", "throughput"),
+        search=SearchSettings(strategy="nsga2"))
+
+
 def bench_campaign(out: dict, models=("squeezenet11", "regnetx_400mf",
                                       "efficientnet_b0"),
                    in_hw: int = 64):
     """Multi-model fan-out through the Campaign runner (shared cost
     tables), the ROADMAP's fleet-level-study shape."""
-    spec = ExplorationSpec(
-        model=ModelRef("cnn", models[0], {"in_hw": in_hw}),
-        system=chain_system_spec(),
-        objectives=("latency", "energy", "throughput"),
-        search=SearchSettings(strategy="nsga2"))
+    spec = _bench_campaign_spec(models, in_hw)
     t0 = time.perf_counter()
     camp = Campaign(spec, models=[ModelRef("cnn", n, {"in_hw": in_hw})
                                   for n in models]).run()
@@ -198,6 +202,45 @@ def bench_campaign(out: dict, models=("squeezenet11", "regnetx_400mf",
                                     for e in camp.entries]
     print(csv_row("explorer_campaign", dt * 1e6,
                   f"models={len(models)};wall={dt:.2f}s"))
+    return dt
+
+
+def bench_fleet(out: dict, models=("squeezenet11", "regnetx_400mf",
+                                   "efficientnet_b0"),
+                in_hw: int = 64, workers: int = 2):
+    """The same campaign through the ``repro.fleet`` runtime with local
+    worker processes: manifest init + claim/shard orchestration + merge.
+
+    ``fleet_sweep_wall_s`` is the end-to-end sweep wall-clock (gated,
+    lower-better): it prices the whole distribution overhead — per-worker
+    interpreter start-up and cost-table builds included — against the
+    serial ``campaign_wall_s`` above, so a regression in the claim/merge
+    path (or an orchestration stall) fails CI even when the search
+    strategies themselves are healthy.
+    """
+    import shutil
+    import tempfile
+
+    from repro.fleet import report_fingerprint, run_fleet
+
+    spec = _bench_campaign_spec(models, in_hw)
+    camp = Campaign(spec, models=[ModelRef("cnn", n, {"in_hw": in_hw})
+                                  for n in models])
+    d = tempfile.mkdtemp(prefix="bench-fleet-")
+    try:
+        t0 = time.perf_counter()
+        camp.to_manifest(d)
+        report = run_fleet(d, workers=workers)
+        dt = time.perf_counter() - t0
+        # the merged report must be the serial report (fingerprint parity
+        # is tested in tier-1; here we just guard the bench itself)
+        assert len(report_fingerprint(report)["entries"]) == len(models)
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    out["fleet_sweep_wall_s"] = round(dt, 3)
+    out["fleet_workers"] = workers
+    print(csv_row("explorer_fleet_sweep", dt * 1e6,
+                  f"workers={workers};models={len(models)};wall={dt:.2f}s"))
     return dt
 
 
@@ -219,8 +262,9 @@ def main() -> int:
 
     # bench_schema guards cross-PR artifact diffs: compare_bench.py refuses
     # to diff files whose schemas (and so key semantics) don't match
-    # (schema 3 added the pop-32768 jit_nsga_scale_* keys)
-    out = {"mode": "quick" if args.quick else "full", "bench_schema": 3}
+    # (schema 3 added the pop-32768 jit_nsga_scale_* keys; schema 4 the
+    # 2-worker fleet_sweep_wall_s)
+    out = {"mode": "quick" if args.quick else "full", "bench_schema": 4}
     if args.quick:
         speedup = bench_eval_paths(out, n_candidates=1024, scalar_cap=128)
         np_rate = bench_nsga_run(out, pop_size=2048, n_gen=3)
@@ -228,6 +272,7 @@ def main() -> int:
         if args.scale_pop:
             bench_jit_scale(out, pop_size=args.scale_pop, n_gen=1)
         bench_campaign(out)
+        bench_fleet(out)
     else:
         speedup = bench_eval_paths(out, n_candidates=8192, scalar_cap=512)
         np_rate = bench_nsga_run(out, pop_size=2048, n_gen=8)
@@ -235,6 +280,7 @@ def main() -> int:
         if args.scale_pop:
             bench_jit_scale(out, pop_size=args.scale_pop, n_gen=2)
         bench_campaign(out)
+        bench_fleet(out)
     out["jit_nsga_speedup"] = round(jit_rate / np_rate, 1)
     print(csv_row("explorer_jit_nsga_speedup", 0.0,
                   f"x{jit_rate / np_rate:.1f}"))

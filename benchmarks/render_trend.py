@@ -1,0 +1,125 @@
+"""Render ``BENCH_trend.json`` into a markdown sparkline table (the ROADMAP
+"Trend dashboard" item): one row per tracked metric with a unicode
+sparkline over the run history, first/last values and the net drift — the
+slow-drift view the per-run ±20% gate cannot see.
+
+  python benchmarks/render_trend.py --trend BENCH_trend.json \
+      --out BENCH_trend.md [--last 30]
+
+CI commits the output to the benchmark artifact next to the JSON, so every
+run carries a human-readable perf trajectory.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# the gate's tracked-metric split is the single source of truth: a metric
+# added to compare_bench.py shows up here automatically
+try:
+    from compare_bench import HIGHER_BETTER, LOWER_BETTER
+except ImportError:    # invoked as a module (python -m benchmarks.render_trend)
+    from benchmarks.compare_bench import HIGHER_BETTER, LOWER_BETTER
+
+SPARK_BARS = "▁▂▃▄▅▆▇█"
+
+
+def sparkline(values: list) -> str:
+    """Unicode sparkline; constant series render mid-bar, not flat-bottom."""
+    if not values:
+        return ""
+    lo, hi = min(values), max(values)
+    if hi - lo <= 0:
+        return SPARK_BARS[3] * len(values)
+    span = hi - lo
+    return "".join(
+        SPARK_BARS[min(int((v - lo) / span * len(SPARK_BARS)),
+                       len(SPARK_BARS) - 1)]
+        for v in values)
+
+
+def fmt(v: float) -> str:
+    if abs(v) >= 1000:
+        return f"{v:,.0f}"
+    return f"{v:.3g}"
+
+
+def render(trend: dict, last: int = 0) -> str:
+    all_runs = trend.get("runs", [])
+    if not all_runs:
+        return "# Benchmark trend\n\n_No runs recorded yet._\n"
+    # only runs comparable to the latest one: same bench_schema AND mode —
+    # the same incomparability rule the compare_bench.py gate applies (key
+    # semantics change across schema bumps; quick/full measure different
+    # workloads under the same keys)
+    schema = all_runs[-1].get("bench_schema")
+    mode = all_runs[-1].get("mode")
+    runs = [r for r in all_runs if r.get("bench_schema") == schema
+            and r.get("mode") == mode]
+    excluded = len(all_runs) - len(runs)
+    if last > 0:
+        runs = runs[-last:]
+
+    lines = [
+        "# Benchmark trend",
+        "",
+        f"{len(runs)} run(s)"
+        + (f" ({excluded} older run(s) hidden: different bench_schema/mode)"
+           if excluded else "") + ", "
+        f"{runs[0].get('sha', '?')[:9]} → {runs[-1].get('sha', '?')[:9]} "
+        f"({runs[0].get('date', '?')[:10]} → {runs[-1].get('date', '?')[:10]}"
+        f", mode={mode}, bench_schema={schema})",
+        "",
+        "| metric | trend | first | last | drift | |",
+        "|---|---|---:|---:|---:|---|",
+    ]
+    for key, sign in ([(k, +1) for k in HIGHER_BETTER]
+                      + [(k, -1) for k in LOWER_BETTER]):
+        series = [(r["metrics"][key]) for r in runs
+                  if isinstance(r.get("metrics", {}).get(key), (int, float))]
+        if not series:
+            continue
+        first, latest = series[0], series[-1]
+        drift = (latest - first) / first if first else 0.0
+        better = drift * sign
+        verdict = ("improved" if better > 0.02
+                   else "regressed" if better < -0.02 else "flat")
+        lines.append(
+            f"| `{key}` | `{sparkline(series)}` | {fmt(first)} "
+            f"| {fmt(latest)} | {drift:+.1%} | {verdict} |")
+    lines += [
+        "",
+        "_Sparklines are min–max scaled per metric over the shown window; "
+        "`drift` is last vs first. Gate thresholds live in "
+        "`benchmarks/compare_bench.py`._",
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trend", default="BENCH_trend.json")
+    ap.add_argument("--out", default="BENCH_trend.md")
+    ap.add_argument("--last", type=int, default=0,
+                    help="only render the last N runs (0 = all)")
+    args = ap.parse_args()
+
+    if not os.path.exists(args.trend):
+        print(f"FAIL: trend file {args.trend} not found", file=sys.stderr)
+        return 1
+    with open(args.trend) as f:
+        trend = json.load(f)
+    md = render(trend, last=args.last)
+    with open(args.out, "w") as f:
+        f.write(md)
+    print(f"wrote {args.out} ({len(trend.get('runs', []))} run(s))")
+    print(md)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

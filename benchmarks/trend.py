@@ -11,7 +11,11 @@ PRs (one dashboard file instead of one artifact per commit).
       --trend BENCH_trend.json [--prev prev/BENCH_trend.json] [--sha SHA]
 
 Re-running a commit (e.g. a re-triggered CI job) replaces that SHA's entry
-instead of duplicating it; runs are kept in append order.
+instead of duplicating it; runs are kept in append order.  Trend files that
+already contain same-SHA duplicates (accumulated by pre-dedupe versions or
+hand-merged artifacts) are cleaned on load — the latest entry per SHA wins.
+Render the result into a markdown sparkline table with
+``benchmarks/render_trend.py``.
 """
 
 from __future__ import annotations
@@ -37,12 +41,25 @@ def git_sha() -> str:
     return "unknown"
 
 
+def dedupe_runs(runs: list) -> list:
+    """Collapse same-SHA reruns, keeping the *latest* entry per SHA at the
+    position of its last occurrence (append order preserved).  Runs without
+    a real SHA (missing key, or the ``git_sha()`` "unknown" fallback) are
+    distinct runs, not reruns — they are never collapsed."""
+    def key(r, i):
+        sha = r.get("sha")
+        return (sha, -1) if sha and sha != "unknown" else (None, i)
+    latest = {key(r, i): i for i, r in enumerate(runs)}
+    return [r for i, r in enumerate(runs) if latest[key(r, i)] == i]
+
+
 def load_trend(path: str) -> dict:
     if path and os.path.exists(path):
         try:
             with open(path) as f:
                 d = json.load(f)
             if isinstance(d, dict) and isinstance(d.get("runs"), list):
+                d["runs"] = dedupe_runs(d["runs"])
                 return d
             print(f"note: ignoring malformed trend file {path}")
         except (OSError, json.JSONDecodeError) as e:
@@ -59,7 +76,9 @@ def append_run(trend: dict, bench: dict, sha: str, date: str) -> dict:
         "metrics": {k: v for k, v in bench.items()
                     if isinstance(v, (int, float)) and k != "bench_schema"},
     }
-    runs = [r for r in trend["runs"] if r.get("sha") != sha]
+    runs = dedupe_runs(trend["runs"])
+    if sha and sha != "unknown":      # a real SHA replaces its old entry
+        runs = [r for r in runs if r.get("sha") != sha]
     runs.append(entry)
     return {"trend_schema": TREND_SCHEMA, "runs": runs}
 

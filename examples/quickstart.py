@@ -94,3 +94,37 @@ scale_spec = ExplorationSpec(
                           rank_impl="auto",
                           n_restarts=2))       # 2 seeds, one compile
 print("\njit_nsga2 scaled:", run_spec(scale_spec).summary())
+
+# 6. fleet mode at zoo scale: the same Campaign, distributed.  A sweep
+#    materializes as a durable work manifest (one JSON cell per
+#    model x system, states driven by atomic claim/shard files), any number
+#    of worker processes -- on this host or on many hosts sharing the
+#    directory -- claim cells and publish report shards, and the merge is
+#    report-identical to the serial Campaign.run above (same seeds, same
+#    entries, serial entry order).  Equivalent shell workflow:
+#
+#      python -m repro.fleet init --spec spec.json --manifest sweep.manifest
+#      python -m repro.fleet run  --manifest sweep.manifest --workers 2
+#
+#    Fault tolerance is the point: kill a worker mid-cell (or the whole
+#    host) and re-run the SAME command -- done cells are never recomputed,
+#    the dead worker's claim is reclaimed automatically, and only pending
+#    work executes.  `python -m repro.fleet status --manifest ...` shows
+#    per-cell state; `... hosts --hosts a,b,c` prints the per-host commands
+#    for a multi-host run.  Failed cells retry within a bounded budget and
+#    can be merged as placeholders with --allow-failed.
+import tempfile  # noqa: E402
+
+from repro.fleet import run_fleet  # noqa: E402
+
+with tempfile.TemporaryDirectory() as mdir:
+    fleet.to_manifest(mdir)                   # the Campaign from step 3
+    fleet_report = run_fleet(mdir, workers=2, verbose=True)
+print("\nfleet sweep (2 workers):")
+print(fleet_report.summary())
+
+from repro.fleet import report_fingerprint  # noqa: E402
+
+assert report_fingerprint(fleet_report) == report_fingerprint(report), \
+    "fleet merge must be report-identical to the serial Campaign"
+print("fleet merged report == serial campaign report (modulo wall-clock)")

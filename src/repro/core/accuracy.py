@@ -101,3 +101,91 @@ class MeasuredAccuracy:
         """Batch protocol shared with :class:`ProxyAccuracy`; measurements
         are inherently per-assignment, so this is a cached scalar loop."""
         return np.array([self(row) for row in np.asarray(cuts)])
+
+
+# -- measured-oracle registry (declarative path) ------------------------------
+#
+# A spec is pure data, so ``accuracy: {kind: "measured", measure: <name>}``
+# references a factory registered here.  A factory is called as
+# ``factory(graph=..., schedule=..., system=..., **options)`` and returns the
+# ``measure(cuts) -> float`` callable that MeasuredAccuracy wraps (so every
+# declarative measured oracle gets per-cut caching for free).
+
+ACCURACY_MEASURES: Dict[str, Callable] = {}
+
+
+def register_accuracy_measure(name: str, factory: Callable,
+                              override: bool = False) -> None:
+    """Register a measured-accuracy factory under ``name``.
+
+    Name collisions raise unless ``override=True`` — silently re-registering
+    would reroute every spec that selects the name.
+    """
+    if name in ACCURACY_MEASURES and not override:
+        raise ValueError(
+            f"accuracy measure {name!r} is already registered; "
+            f"pass override=True to replace it")
+    ACCURACY_MEASURES[name] = factory
+
+
+def get_accuracy_measure(name: str) -> Callable:
+    try:
+        return ACCURACY_MEASURES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown accuracy measure {name!r}; registered: "
+            f"{sorted(ACCURACY_MEASURES)} "
+            f"(see repro.core.accuracy.register_accuracy_measure)")
+
+
+def _cnn_fakequant_measure(graph=None, schedule=None, system=None, *,
+                           name: str, steps: int = 200, eval_size: int = 256,
+                           **build_opts):
+    """Built-in measured oracle: trains a CNN-zoo model on the synthetic
+    task and scores real partitioned fake-quant inference per cut vector
+    (``repro.quantize.evaluate.cnn_measured_accuracy``), weights at each
+    platform's bit width.  ``build_opts`` must mirror the spec's
+    ``ModelRef`` options (e.g. ``in_hw``/``w``/``n_classes``) so the trained
+    model's graph matches the explorer schedule the cut indices refer to.
+    Heavy — meant for §IV-C-style studies, not the search inner loop
+    (MeasuredAccuracy caches per cut vector on top)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data.synthetic import SyntheticImages
+    from repro.models.cnn.zoo import build_cnn
+    from repro.optim.optimizers import adamw
+    from repro.optim.schedules import warmup_cosine
+    from repro.quantize.evaluate import cnn_measured_accuracy
+    from repro.training.train_lib import make_classifier_train_step
+
+    m = build_cnn(name, **build_opts)
+    p, s = m.init(jax.random.PRNGKey(0))
+    ds = SyntheticImages(noise=0.2)
+    opt = adamw(warmup_cosine(2e-3, max(steps // 10, 1), steps))
+    os_ = opt.init(p)
+    step = jax.jit(make_classifier_train_step(m, opt))
+    for i in range(steps):
+        x, y = ds.batch(64, i)
+        p, os_, s, _ = step(p, os_, s, jnp.asarray(x), jnp.asarray(y))
+    vx, vy = ds.eval_set(eval_size)
+    sched = schedule if schedule is not None else m.to_graph().topo_sort()
+    specs = [plat.quant for plat in system.platforms]
+    return cnn_measured_accuracy(m, p, s, sched, vx, vy, specs)
+
+
+def _table_measure(graph=None, schedule=None, system=None, *,
+                   table: Dict[str, float], default: float = 0.0):
+    """Measured oracle backed by an explicit ``{"c0,c1": acc}`` table —
+    pre-recorded measurements (e.g. a lab sweep) replayed declaratively."""
+    lut = {tuple(int(t) for t in k.split(",")): float(v)
+           for k, v in table.items()}
+
+    def measure(cuts):
+        return lut.get(tuple(int(c) for c in cuts), float(default))
+
+    return measure
+
+
+register_accuracy_measure("cnn_fakequant", _cnn_fakequant_measure)
+register_accuracy_measure("table", _table_measure)

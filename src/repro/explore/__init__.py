@@ -57,7 +57,7 @@ and strategies are drop-in interchangeable through
 """
 
 from repro.explore.campaign import (Campaign, CampaignEntry, CampaignReport,
-                                    CampaignResult)
+                                    CampaignResult, campaign_entry_dict)
 from repro.explore.filters import (candidate_positions, feasible_cut_rows,
                                    link_feasibility, link_filter,
                                    memory_filter)
@@ -65,8 +65,9 @@ from repro.explore.result import (ExplorationResult, eval_from_dict,
                                   eval_to_dict)
 from repro.explore.runner import (DEFAULT_OBJECTIVES, explore_graph,
                                   run_search, run_spec, select_weighted)
-from repro.explore.spec import (ExplorationSpec, LinkSpec, ModelRef,
-                                PlatformSpec, SearchSettings, SystemSpec)
+from repro.explore.spec import (AccuracySpec, ExplorationSpec, LinkSpec,
+                                ModelRef, PlatformSpec, SearchSettings,
+                                SweepSpec, SystemSpec)
 from repro.explore.strategies import (ExhaustiveSearch, JitNSGA2Search,
                                       MultiCutScan, NSGA2Search,
                                       SearchContext, SearchStrategy,
@@ -74,13 +75,13 @@ from repro.explore.strategies import (ExhaustiveSearch, JitNSGA2Search,
                                       scaled_nsga_defaults)
 
 __all__ = [
-    "Campaign", "CampaignEntry", "CampaignReport", "CampaignResult",
-    "DEFAULT_OBJECTIVES", "ExhaustiveSearch", "ExplorationResult",
-    "ExplorationSpec", "JitNSGA2Search", "LinkSpec", "ModelRef",
-    "MultiCutScan", "NSGA2Search", "PlatformSpec", "SearchContext",
-    "SearchSettings", "SearchStrategy", "StrategyOutput", "SystemSpec",
-    "candidate_positions", "eval_from_dict", "eval_to_dict", "explore_graph",
-    "feasible_cut_rows", "link_feasibility", "link_filter", "memory_filter",
-    "register_strategy", "run_search", "run_spec", "scaled_nsga_defaults",
-    "select_weighted",
+    "AccuracySpec", "Campaign", "CampaignEntry", "CampaignReport",
+    "CampaignResult", "DEFAULT_OBJECTIVES", "ExhaustiveSearch",
+    "ExplorationResult", "ExplorationSpec", "JitNSGA2Search", "LinkSpec",
+    "ModelRef", "MultiCutScan", "NSGA2Search", "PlatformSpec",
+    "SearchContext", "SearchSettings", "SearchStrategy", "StrategyOutput",
+    "SweepSpec", "SystemSpec", "campaign_entry_dict", "candidate_positions",
+    "eval_from_dict", "eval_to_dict", "explore_graph", "feasible_cut_rows",
+    "link_feasibility", "link_filter", "memory_filter", "register_strategy",
+    "run_search", "run_spec", "scaled_nsga_defaults", "select_weighted",
 ]

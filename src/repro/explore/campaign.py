@@ -20,7 +20,8 @@ from typing import Any, Dict, List, Optional, Sequence
 from repro.core.graph import linearize
 from repro.core.memory import SegmentMemoryTable
 from repro.explore.result import ExplorationResult
-from repro.explore.spec import ExplorationSpec, ModelRef, SystemSpec
+from repro.explore.spec import (ExplorationSpec, ModelRef, SweepSpec,
+                                SystemSpec)
 
 
 @dataclasses.dataclass
@@ -31,6 +32,15 @@ class CampaignEntry:
     system: str
     result: ExplorationResult
     wall_s: float
+
+
+def campaign_entry_dict(model: str, system: str, result: ExplorationResult,
+                        wall_s: float) -> Dict[str, Any]:
+    """The canonical report-entry dict for one (model, system) cell — shared
+    by the serial runner and the fleet workers so a merged fleet report is
+    entry-identical to a serial run."""
+    return {"model": model, "system": system, "wall_s": round(wall_s, 4),
+            **result.to_report()}
 
 
 @dataclasses.dataclass
@@ -107,6 +117,26 @@ class Campaign:
         self.systems = (list(systems) if systems is not None
                         else [template.system])
 
+    # -- fleet glue ----------------------------------------------------------
+    def to_sweep(self) -> SweepSpec:
+        """The campaign as durable data (template × models × systems)."""
+        return SweepSpec(template=self.template, models=tuple(self.models),
+                         systems=tuple(self.systems))
+
+    @classmethod
+    def from_sweep(cls, sweep: SweepSpec) -> "Campaign":
+        return cls(sweep.template, models=sweep.models,
+                   systems=sweep.systems)
+
+    def to_manifest(self, manifest_dir: str, max_retries: int = 2):
+        """Materialize this campaign as a durable fleet work manifest;
+        run it with ``python -m repro.fleet run --manifest <dir>`` (see
+        :mod:`repro.fleet`).  Returns the created
+        :class:`repro.fleet.manifest.Manifest`."""
+        from repro.fleet.manifest import Manifest
+        return Manifest.create(manifest_dir, self.to_sweep(),
+                               max_retries=max_retries)
+
     def run(self, verbose: bool = False) -> CampaignResult:
         from repro.explore.runner import explore_graph
         t_start = time.perf_counter()
@@ -123,6 +153,7 @@ class Campaign:
                     graph, sspec.build(), objectives=tpl.objectives,
                     weights=tpl.weights, constraints=tpl.constraints,
                     search=tpl.search, batch=tpl.batch,
+                    accuracy=tpl.accuracy,
                     shared_groups=shared, schedule=schedule,
                     cost_cache=cost_cache, memtable=memtable)
                 wall = time.perf_counter() - t0
@@ -137,8 +168,7 @@ class Campaign:
                           f"({wall:.2f}s)")
         report = CampaignReport(
             template=tpl.to_dict(),
-            entries=[{"model": e.model, "system": e.system,
-                      "wall_s": round(e.wall_s, 4), **e.result.to_report()}
-                     for e in entries],
+            entries=[campaign_entry_dict(e.model, e.system, e.result,
+                                         e.wall_s) for e in entries],
             wall_s=round(time.perf_counter() - t_start, 4))
         return CampaignResult(entries=entries, report=report)

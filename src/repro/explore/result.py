@@ -88,6 +88,15 @@ class ExplorationResult:
                 f"mem={tuple(int(m/1024) for m in s.memory_bytes)} KiB")
         return "\n".join(lines)
 
+    @classmethod
+    def empty_report(cls, strategy: str = "-") -> Dict[str, Any]:
+        """A neutral ``to_report()``-shaped dict (no schedule, no points) —
+        in sync with real reports by construction; used for failed-cell
+        placeholders in fleet merges."""
+        return cls(schedule=[], candidates=[], all_evals=[], pareto=[],
+                   selected=None, baselines=[], objectives=(),
+                   strategy=strategy).to_report()
+
     def to_report(self) -> Dict[str, Any]:
         """JSON-safe flattened form (Pareto front + selection + baselines);
         the full ``all_evals`` scan is intentionally not serialized."""

@@ -32,7 +32,7 @@ from repro.core.partition import (Constraints, PartitionEval,
                                   single_platform_eval)
 from repro.explore.filters import candidate_positions, link_feasibility
 from repro.explore.result import ExplorationResult
-from repro.explore.spec import ExplorationSpec, SearchSettings
+from repro.explore.spec import AccuracySpec, ExplorationSpec, SearchSettings
 from repro.explore.strategies import (SearchContext, resolve_strategies)
 
 DEFAULT_OBJECTIVES = ("latency", "energy")
@@ -120,6 +120,7 @@ def explore_graph(graph: LayerGraph, system: SystemConfig, *,
                   schedule_policy: str = "min_memory",
                   batch: int = 1,
                   accuracy_fn: Optional[Callable] = None,
+                  accuracy: Optional[AccuracySpec] = None,
                   shared_groups: Optional[Dict[str, str]] = None,
                   schedule: Optional[Sequence[LayerInfo]] = None,
                   cost_cache: Optional[Dict] = None,
@@ -128,11 +129,19 @@ def explore_graph(graph: LayerGraph, system: SystemConfig, *,
     """Run one exploration over live graph/system objects.
 
     ``schedule`` / ``cost_cache`` / ``memtable`` let campaign runners share
-    per-model scheduling and per-arch cost tables across systems.
+    per-model scheduling and per-arch cost tables across systems.  The
+    accuracy oracle resolves in precedence order: a live ``accuracy_fn``
+    object, then a declarative ``accuracy`` :class:`AccuracySpec` (proxy
+    knobs or a registered measured oracle), then the default
+    :class:`ProxyAccuracy`.
     """
     if schedule is None:
         schedule = linearize(graph, schedule_policy)
-    acc = accuracy_fn or ProxyAccuracy(schedule, system)
+    acc = accuracy_fn
+    if acc is None and accuracy is not None:
+        acc = accuracy.build(graph, schedule, system)
+    if acc is None:
+        acc = ProxyAccuracy(schedule, system)
     evaluator = PartitionEvaluator(
         graph, schedule, system, accuracy_fn=acc, batch=batch,
         shared_groups=shared_groups, cost_cache=cost_cache,
@@ -150,4 +159,4 @@ def run_spec(spec: ExplorationSpec) -> ExplorationResult:
         graph, system, objectives=spec.objectives, weights=spec.weights,
         constraints=spec.constraints, search=spec.search,
         schedule_policy=spec.schedule_policy, batch=spec.batch,
-        shared_groups=shared)
+        accuracy=spec.accuracy, shared_groups=shared)

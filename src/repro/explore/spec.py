@@ -142,6 +142,62 @@ class SystemSpec:
         return SystemConfig([p.build() for p in self.platforms],
                             [l.build() for l in self.links])
 
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "SystemSpec":
+        return cls(
+            platforms=tuple(PlatformSpec(**p) for p in d["platforms"]),
+            links=tuple(LinkSpec(**l) if isinstance(l, dict) else l
+                        for l in d["links"]),
+            name=d.get("name"))
+
+
+@dataclasses.dataclass(frozen=True)
+class AccuracySpec:
+    """Declarative accuracy oracle selection.
+
+    ``kind='proxy'`` (the default when the field is omitted) is the analytic
+    :class:`~repro.core.accuracy.ProxyAccuracy` noise model with its
+    ``base_accuracy``/``noise_scale`` knobs.  ``kind='measured'`` wraps a
+    factory registered via
+    :func:`repro.core.accuracy.register_accuracy_measure` — called as
+    ``factory(graph=..., schedule=..., system=..., **options)`` — in a
+    caching :class:`~repro.core.accuracy.MeasuredAccuracy`.  Measured
+    oracles run on the NumPy strategies; ``jit_nsga2`` keeps its documented
+    fallback (it needs a jittable ``proxy_arrays`` oracle and downgrades to
+    ``nsga2`` with a warning when accuracy is searched without one).
+    """
+
+    kind: str = "proxy"
+    base_accuracy: float = 1.0        # proxy knobs
+    noise_scale: float = 4.0
+    measure: Optional[str] = None     # registered factory name (measured)
+    options: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.kind not in ("proxy", "measured"):
+            raise ValueError(f"unknown accuracy kind {self.kind!r}; "
+                             f"expected 'proxy' or 'measured'")
+        if self.kind == "measured" and not self.measure:
+            raise ValueError("accuracy kind 'measured' requires a 'measure' "
+                             "name registered via "
+                             "repro.core.accuracy.register_accuracy_measure")
+        if self.kind == "proxy" and (self.measure or self.options):
+            raise ValueError(
+                "accuracy kind 'proxy' takes no 'measure'/'options' — did "
+                "you mean kind='measured'?")
+
+    def build(self, graph, schedule, system):
+        """Resolve to a live ``accuracy_fn(cuts) -> float`` oracle."""
+        from repro.core.accuracy import (MeasuredAccuracy, ProxyAccuracy,
+                                         get_accuracy_measure)
+        if self.kind == "proxy":
+            return ProxyAccuracy(schedule, system,
+                                 base_accuracy=self.base_accuracy,
+                                 noise_scale=self.noise_scale)
+        factory = get_accuracy_measure(self.measure)
+        return MeasuredAccuracy(factory(graph=graph, schedule=schedule,
+                                        system=system, **self.options))
+
 
 @dataclasses.dataclass(frozen=True)
 class SearchSettings:
@@ -217,6 +273,7 @@ class ExplorationSpec:
     search: SearchSettings = dataclasses.field(default_factory=SearchSettings)
     schedule_policy: str = "min_memory"
     batch: int = 1
+    accuracy: Optional[AccuracySpec] = None   # None -> default proxy oracle
 
     def __post_init__(self):
         object.__setattr__(self, "objectives", tuple(self.objectives))
@@ -238,13 +295,9 @@ class ExplorationSpec:
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "ExplorationSpec":
-        sys_d = d["system"]
-        system = SystemSpec(
-            platforms=tuple(PlatformSpec(**p) for p in sys_d["platforms"]),
-            links=tuple(LinkSpec(**l) if isinstance(l, dict) else l
-                        for l in sys_d["links"]),
-            name=sys_d.get("name"))
+        system = SystemSpec.from_dict(d["system"])
         weights = d.get("weights")
+        acc = d.get("accuracy")
         return cls(
             model=ModelRef(**d["model"]),
             system=system,
@@ -253,8 +306,63 @@ class ExplorationSpec:
             constraints=Constraints(**d.get("constraints", {})),
             search=SearchSettings(**d.get("search", {})),
             schedule_policy=d.get("schedule_policy", "min_memory"),
-            batch=d.get("batch", 1))
+            batch=d.get("batch", 1),
+            accuracy=AccuracySpec(**acc) if acc is not None else None)
 
     @classmethod
     def from_json(cls, s: str) -> "ExplorationSpec":
         return cls.from_dict(json.loads(s))
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """A whole campaign as data: one spec template fanned across
+    ``models`` × ``systems`` (defaulting to the template's own).
+
+    This is the durable form a fleet manifest is built from
+    (:meth:`repro.explore.campaign.Campaign.to_manifest`): cell order is
+    model-major / system-minor — exactly the serial
+    :meth:`~repro.explore.campaign.Campaign.run` iteration order — and
+    :meth:`spec_hash` fingerprints the canonical JSON so workers refuse to
+    execute against a manifest built from a different sweep.
+    """
+
+    template: ExplorationSpec
+    models: Tuple[ModelRef, ...] = ()
+    systems: Tuple[SystemSpec, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "models",
+                           tuple(self.models) or (self.template.model,))
+        object.__setattr__(self, "systems",
+                           tuple(self.systems) or (self.template.system,))
+
+    def cells(self) -> Tuple[Tuple[str, str], ...]:
+        """(model label, system label) pairs in serial-run order."""
+        return tuple((m.label, s.label)
+                     for m in self.models for s in self.systems)
+
+    # -- serialization -------------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return json.loads(json.dumps(dataclasses.asdict(self)))
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "SweepSpec":
+        return cls(
+            template=ExplorationSpec.from_dict(d["template"]),
+            models=tuple(ModelRef(**m) for m in d.get("models", [])),
+            systems=tuple(SystemSpec.from_dict(s)
+                          for s in d.get("systems", [])))
+
+    @classmethod
+    def from_json(cls, s: str) -> "SweepSpec":
+        return cls.from_dict(json.loads(s))
+
+    def spec_hash(self) -> str:
+        import hashlib
+        canon = json.dumps(self.to_dict(), sort_keys=True,
+                           separators=(",", ":"))
+        return hashlib.sha256(canon.encode()).hexdigest()

@@ -1,0 +1,127 @@
+"""Fleet worker: claim cells from a manifest, run the search, publish
+shards.
+
+One worker is one process (``python -m repro.fleet worker``); any number of
+them may point at the same manifest directory, on one host or many.  The
+loop is coordinator-free:
+
+1. list pending cells in serial-run order, try to claim each (atomic
+   exclusive create) until one sticks;
+2. run the cell through the exact serial-campaign code path
+   (:func:`repro.explore.runner.explore_graph` with the template's
+   objectives/constraints/strategy — including ``jit_nsga2``), reusing
+   per-model graph/schedule/Def.-3-memory caches and the per-arch
+   ``cost_cache`` across every cell of the same model this worker executes,
+   so cost tables are built once per (worker, model) like the serial
+   ``Campaign`` builds them once per model;
+3. publish the report entry as an atomic shard and release the claim; on
+   an exception, record the failed attempt and release — the cell returns
+   to pending until the manifest's bounded retry budget is spent.
+
+A worker exits when the manifest is complete (all cells done or terminally
+failed).  While cells are claimed by *other* workers it polls, reclaiming
+claims whose owner died on this host, so killing a worker mid-cell never
+wedges the sweep.
+"""
+
+from __future__ import annotations
+
+import os
+import socket
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+from repro.fleet.manifest import CellInfo, Manifest
+
+
+def default_worker_id() -> str:
+    return f"{socket.gethostname()}-{os.getpid()}"
+
+
+class _ModelCache:
+    """Per-worker shared state for one model: built graph, schedule, memory
+    table and the per-arch cost-table cache (shared across systems, exactly
+    like the serial Campaign loop)."""
+
+    def __init__(self, sweep, model_idx: int):
+        from repro.core.graph import linearize
+        from repro.core.memory import SegmentMemoryTable
+        mref = sweep.models[model_idx]
+        self.graph, self.shared = mref.build()
+        self.schedule = linearize(self.graph, sweep.template.schedule_policy)
+        self.memtable = SegmentMemoryTable(self.schedule, self.shared)
+        self.cost_cache: Dict = {}
+
+
+def run_cell(manifest: Manifest, cell: CellInfo,
+             model_caches: Optional[Dict[int, _ModelCache]] = None
+             ) -> Dict[str, Any]:
+    """Execute one claimed cell; returns its report entry dict."""
+    from repro.explore.campaign import campaign_entry_dict
+    from repro.explore.runner import explore_graph
+    sweep = manifest.sweep
+    tpl = sweep.template
+    caches = model_caches if model_caches is not None else {}
+    mc = caches.get(cell.model_idx)
+    if mc is None:
+        mc = caches[cell.model_idx] = _ModelCache(sweep, cell.model_idx)
+    system = sweep.systems[cell.system_idx].build()
+    t0 = time.perf_counter()
+    res = explore_graph(
+        mc.graph, system, objectives=tpl.objectives, weights=tpl.weights,
+        constraints=tpl.constraints, search=tpl.search, batch=tpl.batch,
+        accuracy=tpl.accuracy, shared_groups=mc.shared,
+        schedule=mc.schedule, cost_cache=mc.cost_cache,
+        memtable=mc.memtable)
+    wall = time.perf_counter() - t0
+    return campaign_entry_dict(cell.model, cell.system, res, wall)
+
+
+def run_worker(manifest_dir: str, worker_id: Optional[str] = None,
+               poll_s: float = 0.5, verbose: bool = False
+               ) -> Dict[str, int]:
+    """The worker loop; returns ``{"done": n, "failed": n}`` attempt counts
+    for this worker's own work."""
+    manifest = Manifest.load(manifest_dir)
+    wid = worker_id or default_worker_id()
+    stats = {"done": 0, "failed": 0}
+    caches: Dict[int, _ModelCache] = {}
+
+    def say(msg: str) -> None:
+        if verbose:
+            print(f"[fleet:{wid}] {msg}", flush=True)
+
+    while True:
+        claimed = None
+        for cell in manifest.pending_cells():
+            if manifest.claim(cell.id, wid):
+                claimed = cell
+                break
+        if claimed is None:
+            if manifest.complete():
+                say(f"manifest complete; exiting "
+                    f"(done={stats['done']} failed={stats['failed']})")
+                return stats
+            # other workers hold the remaining cells: recover any whose
+            # owner died on this host, then wait for live ones
+            if manifest.reclaim_stale():
+                continue
+            time.sleep(poll_s)
+            continue
+        say(f"claimed {claimed.id}")
+        try:
+            entry = run_cell(manifest, claimed, caches)
+        except KeyboardInterrupt:
+            manifest.release(claimed.id)
+            raise
+        except Exception:
+            n = manifest.record_failure(claimed.id, wid,
+                                        traceback.format_exc())
+            stats["failed"] += 1
+            say(f"FAILED {claimed.id} (attempt {n}/"
+                f"{manifest.max_retries + 1})")
+            continue
+        manifest.write_shard(claimed.id, entry, wid)
+        stats["done"] += 1
+        say(f"done {claimed.id} ({entry['wall_s']:.2f}s)")
