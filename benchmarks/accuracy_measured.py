@@ -9,7 +9,6 @@ quantization."""
 
 from __future__ import annotations
 
-import json
 import os
 
 import jax
@@ -17,6 +16,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import csv_row, timed
 from repro.core import QuantSpec
+from repro.utils.atomicio import atomic_write_json
 from repro.data.synthetic import SyntheticImages, batch_iterator
 from repro.models.cnn.zoo import reduced_cnn
 from repro.optim.optimizers import adamw
@@ -79,8 +79,7 @@ def run(out_dir: str = "experiments", models=("resnet50", "efficientnet_b0"),
             f"fp={acc_fp:.3f};first_cut={accs[0]:.3f};"
             f"last_cut={accs[-1]:.3f};allB4={acc_all_b:.3f};"
             f"qat={acc_qat:.3f}"))
-    with open(os.path.join(out_dir, "accuracy_measured.json"), "w") as f:
-        json.dump(out, f, indent=1)
+    atomic_write_json(os.path.join(out_dir, "accuracy_measured.json"), out)
     return rows
 
 

@@ -26,9 +26,19 @@ floor, and looser (``--max-regression 0.5``) against the previous run's
 artifact — absolute evals/s vary across heterogeneous hosted runners, so a
 tight threshold there would flag runner lottery, not code.
 
+``--trend BENCH_trend.json`` additionally fits a least-squares slope over
+the last ``--trend-window`` comparable runs of each tracked metric (same
+``bench_schema`` and ``mode`` as the current run): per-run noise averages
+out over the window, so a sustained drift each individual ±20%/±50% gate
+waves through — e.g. −4% per run for eight runs — is caught here.  The
+fitted end-to-end drift (slope × window span, as a fraction of the window
+mean) failing ``--max-trend-regression`` (default 0.15) exits non-zero;
+fewer than 3 comparable points skips the check.
+
   python benchmarks/compare_bench.py --current BENCH_explorer.json \
       --baseline prev/BENCH_explorer.json \
-      --baseline benchmarks/baseline_explorer.json
+      --baseline benchmarks/baseline_explorer.json \
+      --trend BENCH_trend.json
 """
 
 from __future__ import annotations
@@ -102,6 +112,54 @@ def diff(base: dict, cur: dict, max_regression: float) -> int:
     return failures
 
 
+def trend_series(trend: dict, key: str, schema, mode, window: int) -> list:
+    """The last ``window`` comparable values of one metric, oldest first."""
+    runs = [r for r in trend.get("runs", [])
+            if r.get("bench_schema") == schema and r.get("mode") == mode
+            and isinstance(r.get("metrics", {}).get(key), (int, float))]
+    return [r["metrics"][key] for r in runs[-window:]]
+
+
+def fit_drift(series: list) -> float:
+    """Fractional end-to-end drift of the least-squares fit line: slope ×
+    span, normalized by the series mean.  The fit (not last-vs-first)
+    keeps one noisy endpoint from dominating the verdict."""
+    n = len(series)
+    xs = range(n)
+    mean_x = (n - 1) / 2.0
+    mean_y = sum(series) / n
+    sxx = sum((x - mean_x) ** 2 for x in xs)
+    sxy = sum((x - mean_x) * (y - mean_y) for x, y in zip(xs, series))
+    slope = sxy / sxx if sxx else 0.0
+    return (slope * (n - 1)) / mean_y if mean_y else 0.0
+
+
+def check_trend(trend: dict, cur: dict, window: int,
+                max_trend_regression: float) -> int:
+    """Print the per-key sustained-drift table; return regression count."""
+    schema, mode = cur.get("bench_schema"), cur.get("mode")
+    failures = 0
+    rows = [(k, +1) for k in HIGHER_BETTER] + [(k, -1) for k in LOWER_BETTER]
+    print(f"\ntrend over last {window} comparable run(s) "
+          f"(bench_schema={schema}, mode={mode}):")
+    print(f"{'metric':26s} {'runs':>5s} {'fit drift':>10s}  verdict")
+    for key, sign in rows:
+        series = trend_series(trend, key, schema, mode, window)
+        if len(series) < 3:
+            print(f"{key:26s} {len(series):5d} {'-':>10s}  skipped "
+                  "(<3 comparable points)")
+            continue
+        drift = fit_drift(series)
+        regression = -drift * sign                # >0 = sustained worsening
+        verdict = "ok"
+        if regression > max_trend_regression:
+            verdict = (f"SUSTAINED REGRESSION "
+                       f"(>{max_trend_regression:.0%} over window)")
+            failures += 1
+        print(f"{key:26s} {len(series):5d} {drift:+10.1%}  {verdict}")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--current", default="BENCH_explorer.json")
@@ -111,6 +169,16 @@ def main() -> int:
     ap.add_argument("--max-regression", type=float, default=0.20,
                     help="fail when a metric regresses by more than this "
                          "fraction (default 0.20)")
+    ap.add_argument("--trend", default=None, metavar="FILE",
+                    help="BENCH_trend.json run history; enables the "
+                         "sustained-drift check")
+    ap.add_argument("--trend-window", type=int, default=8,
+                    help="number of most recent comparable runs the drift "
+                         "is fitted over (default 8)")
+    ap.add_argument("--max-trend-regression", type=float, default=0.15,
+                    help="fail when the fitted drift over the window "
+                         "regresses by more than this fraction "
+                         "(default 0.15)")
     args = ap.parse_args()
 
     cur = load(args.current)
@@ -124,14 +192,30 @@ def main() -> int:
     if base is None:
         print("note: no usable baseline — skipping the regression gate "
               f"(tried: {', '.join(paths)})")
-        return 0
+        failures = 0
+    else:
+        print(f"baseline: {used} (mode={base.get('mode')}) vs "
+              f"current: {args.current} (mode={cur.get('mode')})")
+        failures = diff(base, cur, args.max_regression)
 
-    print(f"baseline: {used} (mode={base.get('mode')}) vs "
-          f"current: {args.current} (mode={cur.get('mode')})")
-    failures = diff(base, cur, args.max_regression)
+    trend_failures = 0
+    if args.trend:
+        trend = load(args.trend)
+        if trend is None:
+            print(f"note: trend file {args.trend} not found/unreadable — "
+                  "skipping the sustained-drift check")
+        else:
+            trend_failures = check_trend(trend, cur, args.trend_window,
+                                         args.max_trend_regression)
+
     if failures:
         print(f"FAIL: {failures} metric(s) regressed more than "
               f"{args.max_regression:.0%}", file=sys.stderr)
+    if trend_failures:
+        print(f"FAIL: {trend_failures} metric(s) show a sustained trend "
+              f"regression beyond {args.max_trend_regression:.0%} over "
+              f"the last {args.trend_window} run(s)", file=sys.stderr)
+    if failures or trend_failures:
         return 1
     print("perf gate: ok")
     return 0

@@ -22,7 +22,6 @@ CI can track the perf trajectory across PRs and gate regressions with
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -32,6 +31,7 @@ import numpy as np
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks.common import chain_system, chain_system_spec, csv_row
+from repro.utils.atomicio import atomic_write_json
 from repro.core.accuracy import ProxyAccuracy
 from repro.core.graph import linearize
 from repro.core.partition import Constraints, PartitionEvaluator
@@ -285,8 +285,7 @@ def main() -> int:
     print(csv_row("explorer_jit_nsga_speedup", 0.0,
                   f"x{jit_rate / np_rate:.1f}"))
 
-    with open(args.json, "w") as f:
-        json.dump(out, f, indent=1)
+    atomic_write_json(args.json, out)
     print(f"wrote {args.json}")
 
     if args.min_speedup is not None and speedup < args.min_speedup:

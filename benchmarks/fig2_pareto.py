@@ -6,12 +6,12 @@ cuts).  Runs as one ``Campaign`` over the CNN zoo."""
 
 from __future__ import annotations
 
-import json
 import os
 from typing import Dict
 
 from benchmarks.common import PAPER_CNNS, csv_row, paper_system_spec
 from repro.explore import Campaign, ExplorationSpec, ModelRef
+from repro.utils.atomicio import atomic_write_json
 
 OBJECTIVES = ("latency", "energy", "throughput", "accuracy")
 
@@ -93,8 +93,7 @@ def run(out_dir: str = "experiments") -> Dict[str, str]:
             f"fig2_{name}", dt * 1e6,
             f"th_gain={th_gain:.1f}%;dual_win={dual};"
             f"acc_monotone={monotone_frac:.2f}"))
-    with open(os.path.join(out_dir, "fig2_pareto.json"), "w") as f:
-        json.dump(results, f, indent=1)
+    atomic_write_json(os.path.join(out_dir, "fig2_pareto.json"), results)
     # the serializable fleet report, straight from the campaign
     camp.report.save(os.path.join(out_dir, "fig2_campaign_report.json"))
     return rows

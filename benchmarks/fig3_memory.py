@@ -6,10 +6,10 @@ Conv_56) or late (after Conv_79)."""
 
 from __future__ import annotations
 
-import json
 import os
 
 from benchmarks.common import csv_row, timed
+from repro.utils.atomicio import atomic_write_json
 from repro.explore import (ExplorationSpec, ModelRef, PlatformSpec,
                            SystemSpec, run_spec)
 
@@ -38,8 +38,7 @@ def run(out_dir: str = "experiments"):
     worst = points_sorted[-5:]
     out = {"points": points, "best5": best, "worst5": worst,
            "explore_s": round(dt, 2)}
-    with open(os.path.join(out_dir, "fig3_memory.json"), "w") as f:
-        json.dump(out, f, indent=1)
+    atomic_write_json(os.path.join(out_dir, "fig3_memory.json"), out)
     best_names = ",".join(p["layer"] for p in best[:3])
     return [csv_row("fig3_efficientnet_memory", dt * 1e6,
                     f"best_cuts={best_names};"

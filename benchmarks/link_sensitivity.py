@@ -11,10 +11,10 @@ link model is essential for partitioning decisions."""
 
 from __future__ import annotations
 
-import json
 import os
 
 from benchmarks.common import csv_row
+from repro.utils.atomicio import atomic_write_json
 from repro.explore import (Campaign, ExplorationSpec, LinkSpec, ModelRef,
                            PlatformSpec, SystemSpec)
 
@@ -61,8 +61,7 @@ def run(out_dir: str = "experiments"):
         rows.append(csv_row(
             f"link_{model_name}_{link_name}", entry.wall_s * 1e6,
             f"th_gain={gain:.1f}%;useful_cuts={n_useful}"))
-    with open(os.path.join(out_dir, "link_sensitivity.json"), "w") as f:
-        json.dump(out, f, indent=1)
+    atomic_write_json(os.path.join(out_dir, "link_sensitivity.json"), out)
     return rows
 
 

@@ -9,10 +9,10 @@ effect on pods: transmission overhead can make fewer stages optimal)."""
 
 from __future__ import annotations
 
-import json
 import os
 
 from benchmarks.common import csv_row
+from repro.utils.atomicio import atomic_write_json
 from repro.explore import (Campaign, ExplorationSpec, ModelRef, PlatformSpec,
                            SystemSpec)
 from repro.models.registry import ARCH_IDS
@@ -54,8 +54,7 @@ def run(out_dir: str = "experiments"):
             f"stages={s.n_partitions if s else 0}/{len(res.baselines)};"
             f"th_gain={gain:.2f}x"))
     camp.report.save(os.path.join(out_dir, "llm_pod_campaign_report.json"))
-    with open(os.path.join(out_dir, "llm_pod_partition.json"), "w") as f:
-        json.dump(out, f, indent=1)
+    atomic_write_json(os.path.join(out_dir, "llm_pod_partition.json"), out)
     return rows
 
 

@@ -17,6 +17,13 @@ import json
 import os
 import sys
 
+# CI invokes this without PYTHONPATH=src; the atomic-write helper lives in
+# the repro package, so bootstrap the path relative to this file
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+from repro.utils.atomicio import atomic_write_text  # noqa: E402
+
 # the gate's tracked-metric split is the single source of truth: a metric
 # added to compare_bench.py shows up here automatically
 try:
@@ -114,8 +121,7 @@ def main() -> int:
     with open(args.trend) as f:
         trend = json.load(f)
     md = render(trend, last=args.last)
-    with open(args.out, "w") as f:
-        f.write(md)
+    atomic_write_text(args.out, md)
     print(f"wrote {args.out} ({len(trend.get('runs', []))} run(s))")
     print(md)
     return 0

@@ -9,6 +9,7 @@ import os
 from typing import List
 
 from benchmarks.common import csv_row
+from repro.utils.atomicio import atomic_write_text
 
 RECOMMEND = {
     "compute": "increase per-chip work (bigger microbatch) or cut redundant"
@@ -60,8 +61,8 @@ def run(out_dir: str = "experiments"):
                         " run python -m repro.launch.dryrun --all --out ...")]
     ok = [r for r in rows if "error" not in r and not r.get("skipped")]
     table = format_table(rows)
-    with open(os.path.join(out_dir, "roofline_table.md"), "w") as f:
-        f.write(table + "\n")
+    atomic_write_text(os.path.join(out_dir, "roofline_table.md"),
+                      table + "\n")
     by_dom = {}
     for r in ok:
         by_dom.setdefault(r["dominant"], []).append(r)

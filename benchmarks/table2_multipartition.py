@@ -11,11 +11,11 @@ partitions; large ones (RegNetX, EfficientNet-B0) do."""
 
 from __future__ import annotations
 
-import json
 import os
 from collections import Counter
 
 from benchmarks.common import PAPER_CNNS, chain_system_spec, csv_row
+from repro.utils.atomicio import atomic_write_json
 from repro.explore import (Campaign, ExplorationSpec, ModelRef,
                            SearchSettings)
 
@@ -52,8 +52,8 @@ def run(out_dir: str = "experiments"):
                 f"table2_{name}_{oname}", dt * 1e6,
                 "partitions=" + "/".join(str(counts.get(k, 0))
                                          for k in (1, 2, 3, 4))))
-    with open(os.path.join(out_dir, "table2_multipartition.json"), "w") as f:
-        json.dump(table, f, indent=1)
+    atomic_write_json(os.path.join(out_dir, "table2_multipartition.json"),
+                      table)
     return rows
 
 

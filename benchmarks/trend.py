@@ -27,6 +27,13 @@ import os
 import subprocess
 import sys
 
+# CI invokes this without PYTHONPATH=src; the atomic-write helper lives in
+# the repro package, so bootstrap the path relative to this file
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+from repro.utils.atomicio import atomic_write_json  # noqa: E402
+
 TREND_SCHEMA = 1
 
 
@@ -110,9 +117,10 @@ def main() -> int:
     sha = args.sha or git_sha()
     date = args.date or (datetime.datetime.now(datetime.timezone.utc)
                          .strftime("%Y-%m-%dT%H:%M:%SZ"))
+    # atomic publish: a CI job killed mid-write must not leave a truncated
+    # BENCH_trend.json for the next run to extend
     trend = append_run(trend, bench, sha, date)
-    with open(args.trend, "w") as f:
-        json.dump(trend, f, indent=1)
+    atomic_write_json(args.trend, trend)
     print(f"wrote {args.trend}: {len(trend['runs'])} run(s), "
           f"latest {sha[:12]} ({bench.get('mode')})")
     return 0

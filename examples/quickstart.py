@@ -128,3 +128,31 @@ from repro.fleet import report_fingerprint  # noqa: E402
 assert report_fingerprint(fleet_report) == report_fingerprint(report), \
     "fleet merge must be report-identical to the serial Campaign"
 print("fleet merged report == serial campaign report (modulo wall-clock)")
+
+# 7. keep it correct: the repo's own static analyzer.  Three rule families
+#    guard the contracts everything above depends on -- RPR1xx trace-safety
+#    (no Python branches/host syncs on traced values inside the jitted
+#    search path), RPR2xx Pallas kernel call contracts (block/grid
+#    divisibility, index_map arity, no hardcoded interpret= flags), RPR3xx
+#    fleet atomicity (no plain open(...,'w') bypassing the atomic-publish
+#    helpers that make the fleet runtime crash-safe).  CI gates on it; run
+#    it locally before pushing:
+#
+#      PYTHONPATH=src python -m repro.analysis src benchmarks
+#      PYTHONPATH=src python -m repro.analysis --list-rules
+#      PYTHONPATH=src python -m repro.analysis src --select RPR3 --format json
+#
+#    Suppressions live in .analysis-baseline.json and every entry must
+#    carry a written justification (see CONTRIBUTING.md).
+import os  # noqa: E402
+import subprocess  # noqa: E402
+import sys  # noqa: E402
+
+repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+env = dict(os.environ, PYTHONPATH=os.path.join(repo, "src"))
+gate = subprocess.run(
+    [sys.executable, "-m", "repro.analysis", "src", "benchmarks"],
+    cwd=repo, env=env, capture_output=True, text=True)
+print("\nstatic analysis gate:")
+print(gate.stdout.strip())
+assert gate.returncode == 0, gate.stdout + gate.stderr

@@ -1,0 +1,28 @@
+"""Repo-specific static analyzer (stdlib ``ast`` only, no jax import).
+
+Three rule families, one per contract surface whose breakage is silent
+or runtime-only:
+
+* **RPR1xx trace-safety** — Python control flow / host syncs on traced
+  values inside jit regions, jit-in-loop, missing buffer donation.
+* **RPR2xx Pallas kernel contracts** — block/grid divisibility,
+  index_map arity, hardcoded ``interpret=`` flags, ``pallas_call``
+  outside ``repro/kernels/``.
+* **RPR3xx fleet atomicity** — truncating writes bypassing
+  ``repro.utils.atomicio``, cross-filesystem tmp+replace, claim files
+  without O_EXCL semantics.
+
+CLI: ``python -m repro.analysis [paths...] [--baseline FILE]``.
+"""
+
+from repro.analysis.baseline import (Baseline, BaselineError,
+                                     apply_baseline, load_baseline,
+                                     write_baseline)
+from repro.analysis.core import (Finding, ModuleContext, Rule, all_rules,
+                                 analyze_file, analyze_paths, rule)
+
+__all__ = [
+    "Baseline", "BaselineError", "Finding", "ModuleContext", "Rule",
+    "all_rules", "analyze_file", "analyze_paths", "apply_baseline",
+    "load_baseline", "rule", "write_baseline",
+]

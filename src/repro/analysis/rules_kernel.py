@@ -1,0 +1,196 @@
+"""RPR2xx — Pallas kernel call-contract rules.
+
+``pl.pallas_call`` failures are the worst kind: a block shape that does
+not divide the output, or an index_map whose arity disagrees with the
+grid, compiles fine under ``interpret=True`` on CPU and only explodes (or
+silently reads garbage) on the Mosaic path.  These rules check the parts
+of the contract that are statically visible at the call site.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Tuple
+
+from repro.analysis.core import Finding, ModuleContext, rule
+
+PALLAS_CALL_NAMES = (
+    "jax.experimental.pallas.pallas_call",
+    "pallas.pallas_call",
+    "pl.pallas_call",
+)
+SHAPE_STRUCT_NAMES = (
+    "jax.ShapeDtypeStruct",
+    "jax.core.ShapeDtypeStruct",
+)
+BLOCKSPEC_NAMES = (
+    "jax.experimental.pallas.BlockSpec",
+    "pallas.BlockSpec",
+    "pl.BlockSpec",
+)
+
+
+def _is_pallas_call(ctx: ModuleContext, node: ast.Call) -> bool:
+    name = ctx.resolve(node.func)
+    return bool(name) and (name in PALLAS_CALL_NAMES
+                           or name.endswith(".pallas_call"))
+
+
+def _kw(node: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in node.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _literal_int_tuple(node: Optional[ast.expr]
+                       ) -> Optional[Tuple[int, ...]]:
+    """(1, 2, 3) as a tuple of ints, or None when any element is dynamic."""
+    if not isinstance(node, (ast.Tuple, ast.List)):
+        return None
+    out = []
+    for e in node.elts:
+        if isinstance(e, ast.Constant) and isinstance(e.value, int):
+            out.append(e.value)
+        else:
+            return None
+    return tuple(out)
+
+
+def _resolve_local_tuple(ctx: ModuleContext, node: Optional[ast.expr],
+                         scope: ast.AST) -> Optional[ast.expr]:
+    """Follow ``grid=grid`` one assignment back inside the enclosing
+    function: the last ``grid = (<tuple>)`` before use wins."""
+    if not isinstance(node, ast.Name):
+        return node
+    found: Optional[ast.expr] = None
+    for n in ast.walk(scope):
+        if isinstance(n, ast.Assign) \
+                and any(isinstance(t, ast.Name) and t.id == node.id
+                        for t in n.targets) \
+                and getattr(n, "lineno", 0) <= getattr(node, "lineno", 0):
+            found = n.value
+    return found
+
+
+def _blockspecs(ctx: ModuleContext, node: Optional[ast.expr]
+                ) -> List[ast.Call]:
+    """All BlockSpec(...) constructor calls inside an in_specs/out_specs
+    expression (a single spec, a list/tuple, or nested pytrees)."""
+    if node is None:
+        return []
+    out = []
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call) and ctx.resolves_to(n.func,
+                                                       BLOCKSPEC_NAMES):
+            out.append(n)
+    return out
+
+
+@rule("RPR201", "BlockSpec block shape does not divide the output shape")
+def block_shape_divisibility(ctx: ModuleContext) -> Iterable[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call) and _is_pallas_call(ctx, node)):
+            continue
+        shape_node = _kw(node, "out_shape")
+        if isinstance(shape_node, ast.Call) \
+                and ctx.resolves_to(shape_node.func, SHAPE_STRUCT_NAMES) \
+                and shape_node.args:
+            out_dims = _literal_int_tuple(shape_node.args[0])
+        else:
+            out_dims = None
+        if out_dims is None:
+            continue        # dynamic shapes: nothing statically checkable
+        for spec in _blockspecs(ctx, _kw(node, "out_specs")):
+            if not spec.args:
+                continue
+            block = _literal_int_tuple(spec.args[0])
+            if block is None or len(block) != len(out_dims):
+                continue
+            bad = [d for d, (dim, blk) in enumerate(zip(out_dims, block))
+                   if blk > 0 and dim % blk != 0]
+            if bad:
+                out.append(ctx.finding(
+                    "RPR201", spec,
+                    f"out_specs block shape {block} does not divide "
+                    f"out_shape {out_dims} on axis(es) {bad}; Mosaic "
+                    "requires whole blocks — pad the array or pick a "
+                    "divisor block"))
+    return out
+
+
+@rule("RPR202", "BlockSpec index_map arity disagrees with the grid rank")
+def index_map_arity(ctx: ModuleContext) -> Iterable[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call) and _is_pallas_call(ctx, node)):
+            continue
+        scope = ctx.enclosing_function(node) or ctx.tree
+        grid = _literal_int_tuple(
+            _resolve_local_tuple(ctx, _kw(node, "grid"), scope))
+        if grid is None:
+            # shape unknown but rank may still be known: grid=(a, b)
+            g = _resolve_local_tuple(ctx, _kw(node, "grid"), scope)
+            if isinstance(g, (ast.Tuple, ast.List)):
+                rank = len(g.elts)
+            else:
+                continue
+        else:
+            rank = len(grid)
+        specs = (_blockspecs(ctx, _kw(node, "in_specs"))
+                 + _blockspecs(ctx, _kw(node, "out_specs")))
+        for spec in specs:
+            imap = spec.args[1] if len(spec.args) > 1 \
+                else _kw(spec, "index_map")
+            if not isinstance(imap, ast.Lambda):
+                continue
+            a = imap.args
+            n_params = len(a.posonlyargs) + len(a.args)
+            if a.vararg is None and n_params != rank:
+                out.append(ctx.finding(
+                    "RPR202", imap,
+                    f"index_map takes {n_params} grid indices but the "
+                    f"grid has rank {rank}; every index_map must accept "
+                    "one argument per grid axis"))
+    return out
+
+
+@rule("RPR203", "hardcoded interpret= flag bypasses the impl dispatch")
+def hardcoded_interpret(ctx: ModuleContext) -> Iterable[Finding]:
+    """Call sites must thread ``interpret`` from the ``impl='auto'``
+    dispatch (``repro.kernels.ops``), never pin it: a literal
+    ``interpret=True`` silently runs the emulator on TPU, a literal
+    ``False`` breaks every CPU environment."""
+    out: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if kw.arg == "interpret" \
+                    and isinstance(kw.value, ast.Constant) \
+                    and isinstance(kw.value.value, bool):
+                out.append(ctx.finding(
+                    "RPR203", kw.value,
+                    f"interpret={kw.value.value} is hardcoded at the call "
+                    "site; thread it from the impl='auto' dispatch "
+                    "(repro.kernels.ops.resolve_impl) so CPU/TPU pick "
+                    "the right path"))
+    return out
+
+
+@rule("RPR204", "pl.pallas_call used outside repro/kernels/")
+def pallas_call_outside_kernels(ctx: ModuleContext) -> Iterable[Finding]:
+    """All Pallas entry points live behind ``repro.kernels`` so the
+    impl dispatch, padding and interpret threading happen exactly once."""
+    if ctx.in_package_dir("repro/kernels/"):
+        return []
+    out: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call) and _is_pallas_call(ctx, node):
+            out.append(ctx.finding(
+                "RPR204", node,
+                "direct pl.pallas_call outside repro/kernels/; wrap the "
+                "kernel there and expose it through repro.kernels.ops "
+                "so dispatch/padding stay centralized"))
+    return out

@@ -1,0 +1,180 @@
+"""RPR1xx — jit trace-safety rules.
+
+These guard the single-XLA-program property of the compiled search path
+(``core/nsga2_jax.py``, ``core/partition_jax.py``): one stray Python
+branch on a tracer or one host sync inside a jitted region silently
+splits the program (or raises ``TracerBoolConversionError`` only at run
+time), undoing the PR-3 speedup.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from repro.analysis.core import Finding, ModuleContext, rule
+from repro.analysis.taint import (HOST_CASTS, HOST_SYNC_METHODS, TaintEngine,
+                                  jit_regions, region_expressions,
+                                  region_statements, walk_expr)
+
+LARGE_BUFFER_PARAMS = {"X0", "X0s", "state", "population"}
+
+
+@rule("RPR101", "Python control flow on a traced value inside a jit region")
+def python_branch_on_tracer(ctx: ModuleContext) -> Iterable[Finding]:
+    out: List[Finding] = []
+    for region in jit_regions(ctx):
+        eng = TaintEngine(ctx, region)
+        eng.propagate()
+        for stmt in region_statements(region):
+            if isinstance(stmt, ast.If) and eng.is_tainted(stmt.test):
+                out.append(ctx.finding(
+                    "RPR101", stmt,
+                    "Python `if` on a traced value inside a jit region "
+                    f"({region.reason}); use jnp.where/lax.cond"))
+            elif isinstance(stmt, ast.While) and eng.is_tainted(stmt.test):
+                out.append(ctx.finding(
+                    "RPR101", stmt,
+                    "Python `while` on a traced value inside a jit region "
+                    f"({region.reason}); use lax.while_loop"))
+            elif isinstance(stmt, ast.For) and eng.is_tainted(stmt.iter):
+                out.append(ctx.finding(
+                    "RPR101", stmt,
+                    "Python `for` over a traced value inside a jit region "
+                    f"({region.reason}); use lax.fori_loop/lax.scan"))
+            elif isinstance(stmt, ast.Assert) and eng.is_tainted(stmt.test):
+                out.append(ctx.finding(
+                    "RPR101", stmt,
+                    "`assert` on a traced value inside a jit region "
+                    f"({region.reason}); use checkify or move the check "
+                    "outside the jit"))
+        for e in region_expressions(region):
+            for sub in walk_expr(e):
+                if isinstance(sub, ast.IfExp) and eng.is_tainted(sub.test):
+                    out.append(ctx.finding(
+                        "RPR101", sub,
+                        "conditional expression on a traced value inside "
+                        f"a jit region ({region.reason}); use jnp.where"))
+    return out
+
+
+@rule("RPR102", "host sync on a device value inside a jit region")
+def host_sync_in_jit(ctx: ModuleContext) -> Iterable[Finding]:
+    out: List[Finding] = []
+    for region in jit_regions(ctx):
+        eng = TaintEngine(ctx, region)
+        eng.propagate()
+        for e in region_expressions(region):
+            for sub in walk_expr(e):
+                if not isinstance(sub, ast.Call):
+                    continue
+                fname = ctx.resolve(sub.func)
+                args_tainted = any(eng.is_tainted(a) for a in sub.args)
+                if fname in HOST_CASTS and args_tainted:
+                    out.append(ctx.finding(
+                        "RPR102", sub,
+                        f"`{fname}()` on a traced value inside a jit "
+                        f"region ({region.reason}) forces a host sync "
+                        "and breaks the trace; keep it as a jnp array"))
+                elif fname and fname.startswith("numpy.") \
+                        and args_tainted:
+                    out.append(ctx.finding(
+                        "RPR102", sub,
+                        f"`{fname}` on a traced value inside a jit "
+                        f"region ({region.reason}) pulls the buffer to "
+                        "host; use jax.numpy instead"))
+                elif isinstance(sub.func, ast.Attribute) \
+                        and sub.func.attr in HOST_SYNC_METHODS \
+                        and eng.is_tainted(sub.func.value):
+                    out.append(ctx.finding(
+                        "RPR102", sub,
+                        f"`.{sub.func.attr}()` on a traced value inside "
+                        f"a jit region ({region.reason}) forces a "
+                        "device->host sync"))
+    return out
+
+
+@rule("RPR103", "jax.jit constructed inside a loop (no compilation cache)")
+def jit_in_loop(ctx: ModuleContext) -> Iterable[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call)
+                and ctx.resolves_to(node.func, ("jax.jit", "jax.pmap"))):
+            continue
+        for anc in ctx.ancestors(node):
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                break               # loops outside the def don't re-run it
+            if isinstance(anc, (ast.For, ast.While)):
+                out.append(ctx.finding(
+                    "RPR103", node,
+                    "jax.jit(...) constructed inside a loop recompiles "
+                    "every iteration; hoist it (or cache the jitted "
+                    "callable) outside the loop"))
+                break
+    return out
+
+
+@rule("RPR104", "large-buffer runner jitted without donate_argnums")
+def missing_donation(ctx: ModuleContext) -> Iterable[Finding]:
+    """Entry points that thread a population/state buffer through a jitted
+    runner must donate it (``donate_argnums``) or every call holds two
+    copies of the largest array in the program (the PR-4 pop-32768 RSS
+    win depends on this)."""
+    from repro.analysis.taint import _local_def
+    out: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call)
+                and ctx.resolves_to(node.func, ("jax.jit",))):
+            continue
+        if any(kw.arg in ("donate_argnums", "donate_argnames")
+               for kw in node.keywords):
+            continue
+        if not node.args:
+            continue
+        target = node.args[0]
+        fn = None
+        if isinstance(target, ast.Name):
+            fn = _local_def(ctx, target.id)
+        elif isinstance(target, ast.Lambda):
+            fn = target
+        if fn is None:
+            continue
+        a = fn.args
+        params = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+        hit = sorted(params & LARGE_BUFFER_PARAMS)
+        if hit:
+            out.append(ctx.finding(
+                "RPR104", node,
+                f"jit of a runner taking large buffer(s) {hit} without "
+                "donate_argnums/donate_argnames; the caller's copy stays "
+                "live for the whole run — donate it"))
+    # decorator form: @jax.jit on a def with a large-buffer param
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for dec in fn.decorator_list:
+            is_plain = ctx.resolves_to(dec, ("jax.jit",))
+            is_call = (isinstance(dec, ast.Call)
+                       and (ctx.resolves_to(dec.func, ("jax.jit",))
+                            or (ctx.resolves_to(dec.func,
+                                                ("functools.partial",))
+                                and dec.args
+                                and ctx.resolves_to(dec.args[0],
+                                                    ("jax.jit",)))))
+            if not (is_plain or is_call):
+                continue
+            if is_call and any(kw.arg in ("donate_argnums",
+                                          "donate_argnames")
+                               for kw in dec.keywords):
+                continue
+            a = fn.args
+            params = {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+            hit = sorted(params & LARGE_BUFFER_PARAMS)
+            if hit:
+                out.append(ctx.finding(
+                    "RPR104", dec,
+                    f"jitted `{fn.name}` takes large buffer(s) {hit} "
+                    "without donate_argnums/donate_argnames; donate the "
+                    "buffer so it can be reused in place"))
+    return out

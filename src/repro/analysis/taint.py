@@ -1,0 +1,322 @@
+"""Jit-region discovery and traced-value taint propagation (RPR1xx engine).
+
+A *jit region* is a function whose arguments are JAX tracers when it runs:
+a def decorated with ``jax.jit`` (directly or through
+``functools.partial``), or a function/lambda passed into one of the
+tracing combinators (``jax.jit``, ``jax.vmap``, ``lax.fori_loop``,
+``lax.scan``, ``lax.while_loop``, ...).  Inside a region, the parameters
+(minus ``static_argnums``/``static_argnames``) are *tainted*; taint flows
+through assignments and arbitrary calls, and is killed by the things that
+are static at trace time — ``.shape``/``.ndim``/``.dtype``/``.size``,
+``len()``, ``isinstance()``, and ``is``/``is not`` comparisons (the
+``x is None`` default-argument idiom is trace-safe).
+
+The analysis is intraprocedural on purpose: a helper *called from* a
+region is not analyzed as traced (its config params — ``cap``, ``block`` —
+are legitimately branched on at trace time), so precision beats recall.
+The whole-repo clean test keeps the false-positive rate at zero.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Set, Tuple, Union
+
+from repro.analysis.core import ModuleContext
+
+FunctionNode = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+
+# combinator -> positional indices whose argument is traced when called
+TRACE_WRAPPERS: Dict[str, Tuple[int, ...]] = {
+    "jax.jit": (0,),
+    "jax.pmap": (0,),
+    "jax.vmap": (0,),
+    "jax.grad": (0,),
+    "jax.value_and_grad": (0,),
+    "jax.checkpoint": (0,),
+    "jax.remat": (0,),
+    "jax.lax.fori_loop": (2,),
+    "jax.lax.while_loop": (0, 1),
+    "jax.lax.scan": (0,),
+    "jax.lax.map": (0,),
+    "jax.lax.cond": (1, 2),
+}
+
+# attribute reads that are static at trace time (never carry taint)
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size"}
+
+# calls whose result is static at trace time
+STATIC_CALLS = {"len", "isinstance", "type", "hasattr", "callable", "id"}
+
+# Python casts that force a host sync / concretization on a tracer
+HOST_CASTS = {"float", "int", "bool", "complex"}
+
+# methods that force a device->host sync
+HOST_SYNC_METHODS = {"item", "tolist", "block_until_ready",
+                     "copy_to_host_async"}
+
+
+@dataclasses.dataclass
+class Region:
+    """One traced function: its node, why it is traced, and which params
+    are static (excluded from taint)."""
+
+    node: FunctionNode
+    reason: str                  # e.g. "@jax.jit" or "jax.lax.fori_loop arg"
+    static_params: Set[str]
+
+    def param_names(self) -> List[str]:
+        a = self.node.args
+        names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+        if a.vararg:
+            names.append(a.vararg.arg)
+        if a.kwarg:
+            names.append(a.kwarg.arg)
+        return [n for n in names if n not in self.static_params]
+
+
+def _static_params_from_call(call: ast.Call,
+                             fn: Optional[FunctionNode]) -> Set[str]:
+    """static_argnames / static_argnums of a jax.jit(...) call mapped to
+    parameter names (best effort: literal str/int tuples only)."""
+    out: Set[str] = set()
+    pos_names: List[str] = []
+    if fn is not None:
+        a = fn.args
+        pos_names = [p.arg for p in a.posonlyargs + a.args]
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    out.add(n.value)
+        elif kw.arg == "static_argnums":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int):
+                    if 0 <= n.value < len(pos_names):
+                        out.add(pos_names[n.value])
+    return out
+
+
+def _local_def(ctx: ModuleContext, name: str) -> Optional[ast.FunctionDef]:
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name == name:
+            return node
+    return None
+
+
+def _jit_decorator_regions(ctx: ModuleContext) -> Iterable[Region]:
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for dec in node.decorator_list:
+            # @jax.jit
+            if ctx.resolves_to(dec, ("jax.jit", "jax.pmap")):
+                yield Region(node, f"@{ctx.resolve(dec)}", set())
+            elif isinstance(dec, ast.Call):
+                # @functools.partial(jax.jit, static_argnames=...)
+                if ctx.resolves_to(dec.func, ("functools.partial",)) \
+                        and dec.args \
+                        and ctx.resolves_to(dec.args[0],
+                                            ("jax.jit", "jax.pmap")):
+                    yield Region(node, f"@partial({ctx.resolve(dec.args[0])})",
+                                 _static_params_from_call(dec, node))
+                # @jax.jit(static_argnames=...)
+                elif ctx.resolves_to(dec.func, ("jax.jit", "jax.pmap")):
+                    yield Region(node, f"@{ctx.resolve(dec.func)}(...)",
+                                 _static_params_from_call(dec, node))
+
+
+def _wrapper_call_regions(ctx: ModuleContext) -> Iterable[Region]:
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        target = ctx.resolve(node.func)
+        if target not in TRACE_WRAPPERS:
+            continue
+        for idx in TRACE_WRAPPERS[target]:
+            if idx >= len(node.args):
+                continue
+            arg = node.args[idx]
+            static = (_static_params_from_call(node, None)
+                      if target == "jax.jit" else set())
+            if isinstance(arg, ast.Lambda):
+                yield Region(arg, f"{target} arg", static)
+            elif isinstance(arg, ast.Name):
+                fn = _local_def(ctx, arg.id)
+                if fn is not None:
+                    if target == "jax.jit":
+                        static = _static_params_from_call(node, fn)
+                    yield Region(fn, f"{target} arg", static)
+
+
+def jit_regions(ctx: ModuleContext) -> List[Region]:
+    """All jit regions of a module, deduplicated by function node."""
+    seen: Set[int] = set()
+    out: List[Region] = []
+    for reg in list(_jit_decorator_regions(ctx)) \
+            + list(_wrapper_call_regions(ctx)):
+        if id(reg.node) not in seen:
+            seen.add(id(reg.node))
+            out.append(reg)
+    return out
+
+
+class TaintEngine:
+    """Forward taint propagation over one region's body.
+
+    Two passes: the first only propagates (so loop-carried taint settles),
+    the second reports.  Nested function/class definitions are separate
+    scopes and are skipped (they become their own regions if traced).
+    """
+
+    def __init__(self, ctx: ModuleContext, region: Region):
+        self.ctx = ctx
+        self.region = region
+        self.tainted: Set[str] = set(region.param_names())
+
+    # -- expression taint ----------------------------------------------------
+    def is_tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Attribute):
+            if node.attr in STATIC_ATTRS:
+                return False
+            return self.is_tainted(node.value)
+        if isinstance(node, ast.Call):
+            fname = self.ctx.resolve(node.func)
+            if fname in STATIC_CALLS:
+                return False
+            parts = [a for a in node.args if not isinstance(a, ast.Starred)]
+            parts += [a.value for a in node.args if isinstance(a, ast.Starred)]
+            parts += [kw.value for kw in node.keywords]
+            if isinstance(node.func, ast.Attribute):
+                parts.append(node.func.value)   # method call on tainted obj
+            return any(self.is_tainted(p) for p in parts)
+        if isinstance(node, ast.Compare):
+            # `x is None` / `x is not y` are identity checks on the Python
+            # object (tracer vs None), static at trace time
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False
+            return any(self.is_tainted(c)
+                       for c in [node.left] + list(node.comparators))
+        if isinstance(node, (ast.Lambda, ast.FunctionDef,
+                             ast.AsyncFunctionDef)):
+            return False
+        return any(self.is_tainted(c) for c in ast.iter_child_nodes(node)
+                   if isinstance(c, ast.expr))
+
+    # -- statement walk ------------------------------------------------------
+    def _target_names(self, node: ast.AST) -> List[str]:
+        out = []
+        for n in ast.walk(node):
+            if isinstance(n, ast.Name):
+                out.append(n.id)
+        return out
+
+    def _propagate_stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return
+        if isinstance(stmt, ast.Assign):
+            t = self.is_tainted(stmt.value)
+            for target in stmt.targets:
+                if t:
+                    self.tainted.update(self._target_names(target))
+                elif isinstance(target, ast.Name):
+                    self.tainted.discard(target.id)
+            return
+        if isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            if self.is_tainted(stmt.value):
+                self.tainted.update(self._target_names(stmt.target))
+            elif isinstance(stmt.target, ast.Name):
+                self.tainted.discard(stmt.target.id)
+            return
+        if isinstance(stmt, ast.AugAssign):
+            if self.is_tainted(stmt.value):
+                self.tainted.update(self._target_names(stmt.target))
+            return
+        if isinstance(stmt, ast.For):
+            if self.is_tainted(stmt.iter):
+                self.tainted.update(self._target_names(stmt.target))
+        # walrus targets anywhere in the statement's expressions
+        for n in ast.walk(stmt):
+            if isinstance(n, ast.NamedExpr) and self.is_tainted(n.value):
+                self.tainted.update(self._target_names(n.target))
+        for body in _sub_bodies(stmt):
+            for s in body:
+                self._propagate_stmt(s)
+
+    def propagate(self, passes: int = 2) -> None:
+        body = self.region.node.body
+        if isinstance(self.region.node, ast.Lambda):
+            return                       # lambdas: expression only, no stmts
+        for _ in range(passes):
+            for stmt in body:
+                self._propagate_stmt(stmt)
+
+
+def _sub_bodies(stmt: ast.stmt) -> List[List[ast.stmt]]:
+    out = []
+    for attr in ("body", "orelse", "finalbody"):
+        b = getattr(stmt, attr, None)
+        if b and isinstance(b, list) \
+                and all(isinstance(s, ast.stmt) for s in b):
+            out.append(b)
+    for h in getattr(stmt, "handlers", []) or []:
+        out.append(h.body)
+    return out
+
+
+def region_statements(region: Region) -> Iterable[ast.stmt]:
+    """Every statement in the region body, skipping nested defs/classes
+    (they are separate scopes)."""
+    if isinstance(region.node, ast.Lambda):
+        return
+    stack = list(region.node.body)
+    while stack:
+        stmt = stack.pop(0)
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        yield stmt
+        for body in _sub_bodies(stmt):
+            stack.extend(body)
+
+
+def region_expressions(region: Region) -> Iterable[ast.expr]:
+    """Every expression evaluated in the region body: the lambda body for
+    lambda regions, each statement's own expressions otherwise."""
+    if isinstance(region.node, ast.Lambda):
+        yield region.node.body
+        return
+    for stmt in region_statements(region):
+        yield from statement_expressions(stmt)
+
+
+def statement_expressions(stmt: ast.stmt) -> Iterable[ast.expr]:
+    """The statement's own expressions (not those of nested statements or
+    nested function bodies)."""
+    for field, value in ast.iter_fields(stmt):
+        vals = value if isinstance(value, list) else [value]
+        for v in vals:
+            if isinstance(v, ast.expr):
+                yield v
+
+
+def walk_expr(e: ast.expr) -> Iterable[ast.expr]:
+    """Walk an expression tree without descending into lambda bodies."""
+    yield e
+    if isinstance(e, ast.Lambda):
+        return
+    for c in ast.iter_child_nodes(e):
+        if isinstance(c, ast.expr):
+            yield from walk_expr(c)
+        elif isinstance(c, (ast.comprehension,)):
+            for sub in [c.iter, c.target] + list(c.ifs):
+                yield from walk_expr(sub)
+        elif isinstance(c, ast.keyword):
+            yield from walk_expr(c.value)

@@ -22,6 +22,7 @@ from repro.core.memory import SegmentMemoryTable
 from repro.explore.result import ExplorationResult
 from repro.explore.spec import (ExplorationSpec, ModelRef, SweepSpec,
                                 SystemSpec)
+from repro.utils.atomicio import atomic_write_text
 
 
 @dataclasses.dataclass
@@ -69,8 +70,7 @@ class CampaignReport:
         return cls.from_dict(json.loads(s))
 
     def save(self, path: str, indent: int = 1) -> None:
-        with open(path, "w") as f:
-            f.write(self.to_json(indent=indent))
+        atomic_write_text(path, self.to_json(indent=indent))
 
     def summary(self) -> str:
         lines = [f"campaign: {len(self.entries)} (model × system) runs "

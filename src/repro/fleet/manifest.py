@@ -36,6 +36,7 @@ import time
 from typing import Any, Dict, List, Optional
 
 from repro.explore.spec import SweepSpec
+from repro.utils.atomicio import atomic_write_json
 
 FLEET_SCHEMA = 1
 
@@ -84,13 +85,10 @@ def _writer_uniq() -> str:
     return f"{_sanitize(socket.gethostname())}-{os.getpid()}"
 
 
-def _write_atomic(path: str, payload: Dict[str, Any]) -> None:
-    tmp = f"{path}.tmp.{_writer_uniq()}"
-    with open(tmp, "w") as f:
-        json.dump(payload, f, indent=1)
-        f.flush()
-        os.fsync(f.fileno())
-    os.replace(tmp, path)
+# manifest/shard/failure records publish through the shared write-temp-
+# then-replace helper (repro.utils.atomicio); claims are the one artifact
+# with a different discipline (content-first O_EXCL link, see claim())
+_write_atomic = atomic_write_json
 
 
 def _pid_alive(pid: int) -> bool:

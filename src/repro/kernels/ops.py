@@ -21,7 +21,13 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+_IMPLS = ("auto", "ref", "pallas")
+
+
 def resolve_impl(impl: str) -> str:
+    if impl not in _IMPLS:
+        raise ValueError(f"unknown impl {impl!r}; valid choices: "
+                         f"{', '.join(_IMPLS)}")
     if impl == "auto":
         return "pallas" if jax.default_backend() == "tpu" else "ref"
     return impl
@@ -31,11 +37,17 @@ def resolve_rank_impl(impl: str) -> str:
     """Like :func:`resolve_impl`, with an env override for 'auto': the CI
     kernel-interpret leg sets ``REPRO_RANK_IMPL=pallas`` so every 'auto'
     caller exercises the Pallas branch (interpret=True) on CPU."""
+    if impl not in _IMPLS:
+        raise ValueError(f"unknown rank impl {impl!r}; valid choices: "
+                         f"{', '.join(_IMPLS)}")
     if impl == "auto":
-        impl = os.environ.get("REPRO_RANK_IMPL", "auto")
-    if impl not in ("auto", "ref", "pallas"):
-        raise ValueError(f"unknown rank impl {impl!r}; "
-                         f"expected 'auto', 'ref' or 'pallas'")
+        env = os.environ.get("REPRO_RANK_IMPL", "auto")
+        if env not in _IMPLS:
+            raise ValueError(
+                f"invalid REPRO_RANK_IMPL={env!r}; valid choices: "
+                f"{', '.join(_IMPLS)} (unset the variable for backend "
+                "auto-detection)")
+        impl = env
     return resolve_impl(impl)
 
 

@@ -16,7 +16,6 @@ Usage:
 """
 
 import argparse
-import json
 import time
 import traceback
 
@@ -28,6 +27,7 @@ from repro.launch.roofline import analyze
 from repro.launch.steps import build_setup
 from repro.models.registry import ARCH_IDS, get_config, supports_shape
 from repro.nn import sharding as shd
+from repro.utils.atomicio import atomic_write_json
 from repro.launch import rules as R
 
 
@@ -121,8 +121,7 @@ def main():
         rows.append(dryrun_one(arch, shape, args.multi_pod,
                                opts=tuple(args.opt)))
     if args.out:
-        with open(args.out, "w") as f:
-            json.dump(rows, f, indent=1)
+        atomic_write_json(args.out, rows)
         print(f"wrote {len(rows)} rows to {args.out}")
     n_err = sum(1 for r in rows if "error" in r)
     n_skip = sum(1 for r in rows if r.get("skipped"))

@@ -8,9 +8,9 @@ for the three selected pairs, written to experiments/hillclimb_optimized.json.
   PYTHONPATH=src python -m repro.launch.hillclimb_capture
 """
 
-import json
 
 from repro.launch.dryrun import dryrun_one
+from repro.utils.atomicio import atomic_write_json
 
 PAIRS = [
     # (arch, shape, final opts)
@@ -34,8 +34,7 @@ def main():
             print(f"{arch} × {shape}: bound {b:.3f}s -> {o:.3f}s "
                   f"({row['speedup_on_bound']}x) opts={list(opts)}")
         out.append(row)
-    with open("experiments/hillclimb_optimized.json", "w") as f:
-        json.dump(out, f, indent=1)
+    atomic_write_json("experiments/hillclimb_optimized.json", out)
     print("wrote experiments/hillclimb_optimized.json")
 
 

@@ -1,0 +1,628 @@
+"""repro.analysis rule suite: every rule fires on a seeded-violation
+fixture AND stays silent on a clean twin (the zero-false-positive
+contract), plus the baseline workflow, CLI exit codes, and the gate the
+CI job enforces — the repo's own src/ + benchmarks/ are clean under the
+committed baseline."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import (BaselineError, all_rules, analyze_paths,
+                            apply_baseline, load_baseline, write_baseline)
+from repro.analysis.cli import main as cli_main
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_rules(tmp_path, source, select, relpath="mod.py"):
+    p = tmp_path / relpath
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(source)
+    findings, n = analyze_paths([str(tmp_path)], root=str(tmp_path),
+                                select=[select])
+    return findings
+
+
+def rule_ids(findings):
+    return sorted({f.rule for f in findings})
+
+
+# -- registry -----------------------------------------------------------------
+
+def test_rule_catalog():
+    rules = all_rules()
+    ids = [r.id for r in rules]
+    assert len(ids) == len(set(ids))
+    for family in ("RPR1", "RPR2", "RPR3"):
+        assert any(i.startswith(family) for i in ids), family
+    assert ids == sorted(ids)
+
+
+def test_select_unknown_prefix_raises():
+    with pytest.raises(ValueError, match="matches no rule"):
+        analyze_paths([REPO_ROOT + "/src/repro/analysis"], select=["RPR9"])
+
+
+# -- RPR101: python control flow on tracers -----------------------------------
+
+RPR101_BAD = """
+import jax
+
+@jax.jit
+def f(x, y):
+    if x > 0:
+        y = y + 1
+    while y > 0:
+        y = y - 1
+    z = x if x > 0 else -x
+    return y + z
+
+def outer(n, x):
+    return jax.lax.fori_loop(0, n, lambda i, c: c + 1 if c > 0 else c, x)
+"""
+
+RPR101_CLEAN = """
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def f(x, y=None):
+    if y is None:                      # identity check: trace-safe
+        y = jnp.zeros_like(x)
+    if x.ndim == 2:                    # shape attr: static at trace time
+        x = x[None]
+    for i in range(len(y)):            # len(): static
+        x = x + y[i]
+    return jnp.where(x > 0, x, -x)     # the traced branch, done right
+
+@jax.jit
+def g(flag: bool, x):
+    # params can be python config too; only *uses* that branch are flagged
+    n, m = x.shape
+    for j in range(m):
+        x = x + j
+    return x
+"""
+
+
+def test_rpr101_fires(tmp_path):
+    findings = run_rules(tmp_path, RPR101_BAD, "RPR101")
+    assert rule_ids(findings) == ["RPR101"]
+    msgs = " ".join(f.message for f in findings)
+    assert "`if`" in msgs and "`while`" in msgs
+    assert "conditional expression" in msgs
+    assert any("fori_loop" in f.message for f in findings)
+
+
+def test_rpr101_clean_twin_silent(tmp_path):
+    assert run_rules(tmp_path, RPR101_CLEAN, "RPR101") == []
+
+
+# -- RPR102: host syncs -------------------------------------------------------
+
+RPR102_BAD = """
+import jax
+import numpy as np
+
+@jax.jit
+def f(x):
+    a = np.asarray(x)        # device->host
+    b = float(x)             # concretizes the tracer
+    c = x.item()
+    return a, b, c
+"""
+
+RPR102_CLEAN = """
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TABLE = np.arange(16)        # module-level host data: fine
+
+@jax.jit
+def f(x):
+    t = jnp.asarray(TABLE)   # host constant closed over, not synced
+    n = float(x.shape[0])    # shape is static
+    return x * n + t[0]
+
+def host_side(x):
+    return np.asarray(x)     # not a jit region at all
+"""
+
+
+def test_rpr102_fires(tmp_path):
+    findings = run_rules(tmp_path, RPR102_BAD, "RPR102")
+    assert rule_ids(findings) == ["RPR102"]
+    msgs = " ".join(f.message for f in findings)
+    assert "numpy.asarray" in msgs and "float()" in msgs \
+        and ".item()" in msgs
+
+
+def test_rpr102_clean_twin_silent(tmp_path):
+    assert run_rules(tmp_path, RPR102_CLEAN, "RPR102") == []
+
+
+# -- RPR103: jit-in-loop ------------------------------------------------------
+
+RPR103_BAD = """
+import jax
+
+def run_all(fns, x):
+    outs = []
+    for fn in fns:
+        outs.append(jax.jit(fn)(x))    # recompiles every iteration
+    return outs
+"""
+
+RPR103_CLEAN = """
+import jax
+
+def run_all(fns, x):
+    jitted = [jax.jit(fn) for fn in fns]   # hoisted: compiled once each
+    step = jax.jit(lambda y: y + 1)
+    out = x
+    for fn in jitted:
+        out = fn(out)                       # *calling* in a loop is fine
+    return step(out)
+"""
+
+
+def test_rpr103_fires(tmp_path):
+    findings = run_rules(tmp_path, RPR103_BAD, "RPR103")
+    assert rule_ids(findings) == ["RPR103"]
+
+
+def test_rpr103_clean_twin_silent(tmp_path):
+    assert run_rules(tmp_path, RPR103_CLEAN, "RPR103") == []
+
+
+# -- RPR104: missing donation -------------------------------------------------
+
+RPR104_BAD = """
+import jax
+
+def make_runner(step):
+    def run(key, X0, n_gen):
+        return step(key, X0, n_gen)
+    return jax.jit(run)                 # X0 not donated
+
+@jax.jit
+def advance(state, dt):
+    return state + dt
+"""
+
+RPR104_CLEAN = """
+import functools
+
+import jax
+
+def make_runner(step):
+    def run(key, X0, n_gen):
+        return step(key, X0, n_gen)
+    return jax.jit(run, donate_argnums=(1,))
+
+@functools.partial(jax.jit, donate_argnames=("state",))
+def advance(state, dt):
+    return state + dt
+
+@jax.jit
+def small(x, y):                        # no large-buffer param names
+    return x + y
+"""
+
+
+def test_rpr104_fires(tmp_path):
+    findings = run_rules(tmp_path, RPR104_BAD, "RPR104")
+    assert rule_ids(findings) == ["RPR104"]
+    assert len(findings) == 2           # jit() call form + decorator form
+
+
+def test_rpr104_clean_twin_silent(tmp_path):
+    assert run_rules(tmp_path, RPR104_CLEAN, "RPR104") == []
+
+
+# -- RPR201: block/shape divisibility -----------------------------------------
+
+RPR201_BAD = """
+import jax
+from jax.experimental import pallas as pl
+
+def k(kernel, x):
+    return pl.pallas_call(
+        kernel,
+        grid=(2,),
+        out_shape=jax.ShapeDtypeStruct((100, 64), x.dtype),
+        out_specs=pl.BlockSpec((48, 64), lambda i: (i, 0)),
+    )(x)
+"""
+
+RPR201_CLEAN = """
+import jax
+from jax.experimental import pallas as pl
+
+def k(kernel, x, bm):
+    return pl.pallas_call(
+        kernel,
+        grid=(2,),
+        out_shape=jax.ShapeDtypeStruct((100, 64), x.dtype),
+        out_specs=pl.BlockSpec((50, 64), lambda i: (i, 0)),
+    )(x)
+
+def k_dynamic(kernel, x, bm):
+    # dynamic block sizes: nothing statically checkable, stays silent
+    return pl.pallas_call(
+        kernel,
+        grid=(2,),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        out_specs=pl.BlockSpec((bm, 64), lambda i: (i, 0)),
+    )(x)
+"""
+
+
+def test_rpr201_fires(tmp_path):
+    findings = run_rules(tmp_path, RPR201_BAD, "RPR201")
+    assert rule_ids(findings) == ["RPR201"]
+    assert "does not divide" in findings[0].message
+
+
+def test_rpr201_clean_twin_silent(tmp_path):
+    assert run_rules(tmp_path, RPR201_CLEAN, "RPR201") == []
+
+
+# -- RPR202: index_map arity --------------------------------------------------
+
+RPR202_BAD = """
+from jax.experimental import pallas as pl
+
+def k(kernel, x, bm, bn):
+    grid = (4, 4)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+    )(x)
+"""
+
+RPR202_CLEAN = """
+from jax.experimental import pallas as pl
+
+def k(kernel, x, bm, bn, m, n):
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, 0))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+    )(x)
+"""
+
+
+def test_rpr202_fires(tmp_path):
+    findings = run_rules(tmp_path, RPR202_BAD, "RPR202")
+    assert rule_ids(findings) == ["RPR202"]
+    assert len(findings) == 1           # only the 1-arg lambda
+    assert "rank 2" in findings[0].message
+
+
+def test_rpr202_clean_twin_silent(tmp_path):
+    assert run_rules(tmp_path, RPR202_CLEAN, "RPR202") == []
+
+
+# -- RPR203: hardcoded interpret= ---------------------------------------------
+
+RPR203_BAD = """
+from repro.kernels.pareto_rank import packed_domination as k
+
+def rows(Fr, cvr, Fq, cvq):
+    return k(Fr, cvr, Fq, cvq, bp=32, bq=256, interpret=True)
+"""
+
+RPR203_CLEAN = """
+import jax
+
+from repro.kernels.pareto_rank import packed_domination as k
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+def rows(Fr, cvr, Fq, cvq, interp):
+    return k(Fr, cvr, Fq, cvq, bp=32, bq=256, interpret=_interpret())
+
+def rows2(Fr, cvr, Fq, cvq, interp):
+    return k(Fr, cvr, Fq, cvq, bp=32, bq=256, interpret=interp)
+"""
+
+
+def test_rpr203_fires(tmp_path):
+    findings = run_rules(tmp_path, RPR203_BAD, "RPR203")
+    assert rule_ids(findings) == ["RPR203"]
+    assert "interpret=True is hardcoded" in findings[0].message
+
+
+def test_rpr203_clean_twin_silent(tmp_path):
+    assert run_rules(tmp_path, RPR203_CLEAN, "RPR203") == []
+
+
+# -- RPR204: pallas_call outside kernels/ -------------------------------------
+
+PALLAS_CALL_SRC = """
+from jax.experimental import pallas as pl
+
+def op(kernel, x):
+    return pl.pallas_call(kernel, grid=(1,))(x)
+"""
+
+
+def test_rpr204_fires_outside_kernels(tmp_path):
+    findings = run_rules(tmp_path, PALLAS_CALL_SRC, "RPR204",
+                         relpath="src/repro/explore/fast.py")
+    assert rule_ids(findings) == ["RPR204"]
+    assert "outside repro/kernels/" in findings[0].message
+
+
+def test_rpr204_silent_inside_kernels(tmp_path):
+    assert run_rules(tmp_path, PALLAS_CALL_SRC, "RPR204",
+                     relpath="src/repro/kernels/fast.py") == []
+
+
+# -- RPR301: raw truncating writes --------------------------------------------
+
+RPR301_BAD = """
+import json
+from pathlib import Path
+
+def save(path, obj):
+    with open(path, "w") as f:
+        json.dump(obj, f)
+
+def save_text(path, text):
+    Path(path).write_text(text)
+"""
+
+RPR301_CLEAN = """
+import os
+
+def publish(path, text):
+    # an atomic publisher: the tmp write IS the implementation
+    tmp = f"{path}.tmp"
+    try:
+        with open(tmp, "w") as f:
+            f.write(text)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        raise
+
+def read(path):
+    with open(path) as f:           # reads are never flagged
+        return f.read()
+
+def append_log(path, line):
+    with open(path, "a") as f:      # appends are not truncating
+        f.write(line)
+"""
+
+
+def test_rpr301_fires(tmp_path):
+    findings = run_rules(tmp_path, RPR301_BAD, "RPR301")
+    assert rule_ids(findings) == ["RPR301"]
+    assert len(findings) == 2
+    msgs = " ".join(f.message for f in findings)
+    assert "atomic_write" in msgs
+
+
+def test_rpr301_clean_twin_silent(tmp_path):
+    assert run_rules(tmp_path, RPR301_CLEAN, "RPR301") == []
+
+
+# -- RPR302: /tmp tempfile feeding os.replace ---------------------------------
+
+RPR302_BAD = """
+import os
+import tempfile
+
+def publish(path, data):
+    fd, tmp = tempfile.mkstemp()            # defaults to /tmp
+    with os.fdopen(fd, "w") as f:
+        f.write(data)
+    os.replace(tmp, path)                   # may cross filesystems
+"""
+
+RPR302_CLEAN = """
+import os
+import tempfile
+
+def publish(path, data):
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".")
+    with os.fdopen(fd, "w") as f:
+        f.write(data)
+    os.replace(tmp, path)
+
+def scratch():
+    return tempfile.mkstemp()               # no replace in scope: fine
+"""
+
+
+def test_rpr302_fires(tmp_path):
+    findings = run_rules(tmp_path, RPR302_BAD, "RPR302")
+    assert rule_ids(findings) == ["RPR302"]
+    assert "dir=" in findings[0].message
+
+
+def test_rpr302_clean_twin_silent(tmp_path):
+    assert run_rules(tmp_path, RPR302_CLEAN, "RPR302") == []
+
+
+# -- RPR303: claims without O_EXCL --------------------------------------------
+
+RPR303_BAD = """
+def claim(shard_dir, shard_id, worker):
+    path = f"{shard_dir}/{shard_id}.claim"
+    with open(path, "w") as f:              # both racers think they won
+        f.write(worker)
+    return True
+"""
+
+RPR303_CLEAN = """
+import json
+import os
+
+def claim(shard_dir, shard_id, worker):
+    cpath = f"{shard_dir}/{shard_id}.claim"
+    tmp = f"{cpath}.{worker}.tmp"
+    with open(tmp, "w") as f:
+        json.dump({"worker": worker}, f)
+    try:
+        os.link(tmp, cpath)                 # atomic-exclusive create
+        return True
+    except FileExistsError:
+        return False
+    finally:
+        os.unlink(tmp)
+
+def claim_x(shard_dir, shard_id, worker):
+    with open(f"{shard_dir}/{shard_id}.claim", "x") as f:
+        f.write(worker)
+"""
+
+
+def test_rpr303_fires(tmp_path):
+    findings = run_rules(tmp_path, RPR303_BAD, "RPR303")
+    assert rule_ids(findings) == ["RPR303"]
+    assert "O_CREAT|O_EXCL" in findings[0].message
+
+
+def test_rpr303_clean_twin_silent(tmp_path):
+    assert run_rules(tmp_path, RPR303_CLEAN, "RPR303") == []
+
+
+# -- syntax errors ------------------------------------------------------------
+
+def test_syntax_error_becomes_rpr000(tmp_path):
+    (tmp_path / "broken.py").write_text("def f(:\n")
+    findings, n = analyze_paths([str(tmp_path)], root=str(tmp_path))
+    assert n == 1
+    assert rule_ids(findings) == ["RPR000"]
+
+
+# -- baseline workflow --------------------------------------------------------
+
+def test_baseline_roundtrip_suppresses(tmp_path):
+    (tmp_path / "bad.py").write_text(RPR301_BAD)
+    findings, _ = analyze_paths([str(tmp_path)], root=str(tmp_path),
+                                select=["RPR301"])
+    assert findings
+    bpath = str(tmp_path / "baseline.json")
+    n = write_baseline(bpath, findings)
+    assert n == 2
+    bl = load_baseline(bpath)
+    kept, suppressed, stale = apply_baseline(findings, bl)
+    assert kept == [] and len(suppressed) == 2 and stale == []
+
+
+def test_baseline_stale_entries_reported(tmp_path):
+    bpath = tmp_path / "baseline.json"
+    bpath.write_text(json.dumps({
+        "baseline_schema": 1,
+        "entries": [{"rule": "RPR301", "file": "gone.py",
+                     "context": "f", "reason": "was fixed"}]}))
+    bl = load_baseline(str(bpath))
+    kept, suppressed, stale = apply_baseline([], bl)
+    assert stale == [("RPR301", "gone.py", "f")]
+
+
+def test_baseline_empty_reason_rejected(tmp_path):
+    bpath = tmp_path / "baseline.json"
+    bpath.write_text(json.dumps({
+        "baseline_schema": 1,
+        "entries": [{"rule": "RPR301", "file": "x.py",
+                     "context": "f", "reason": "  "}]}))
+    with pytest.raises(BaselineError, match="empty reason"):
+        load_baseline(str(bpath))
+
+
+def test_baseline_bad_schema_rejected(tmp_path):
+    bpath = tmp_path / "baseline.json"
+    bpath.write_text(json.dumps({"baseline_schema": 99, "entries": []}))
+    with pytest.raises(BaselineError, match="baseline_schema"):
+        load_baseline(str(bpath))
+
+
+# -- CLI ----------------------------------------------------------------------
+
+def test_cli_exit_codes(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text(RPR301_BAD)
+    clean = tmp_path / "clean.py"
+    clean.write_text(RPR301_CLEAN)
+
+    assert cli_main([str(clean), "--no-baseline",
+                     "--root", str(tmp_path)]) == 0
+    assert cli_main([str(bad), "--no-baseline",
+                     "--root", str(tmp_path)]) == 1
+    assert cli_main([str(bad), "--select", "NOPE",
+                     "--root", str(tmp_path)]) == 2
+
+    mal = tmp_path / "mal.json"
+    mal.write_text("{not json")
+    assert cli_main([str(bad), "--baseline", str(mal),
+                     "--root", str(tmp_path)]) == 2
+    capsys.readouterr()
+
+
+def test_cli_write_baseline_then_clean(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text(RPR301_BAD)
+    bpath = str(tmp_path / "bl.json")
+    assert cli_main([str(bad), "--write-baseline", bpath,
+                     "--root", str(tmp_path)]) == 0
+    # TODO reasons are accepted (non-empty) and suppress the findings
+    assert cli_main([str(bad), "--baseline", bpath,
+                     "--root", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "suppressed by baseline" in out
+
+
+def test_cli_json_format(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text(RPR301_BAD)
+    assert cli_main([str(bad), "--no-baseline", "--format", "json",
+                     "--root", str(tmp_path)]) == 1
+    report = json.loads(capsys.readouterr().out)
+    assert report["files"] == 1
+    assert {f["rule"] for f in report["findings"]} == {"RPR301"}
+
+
+def test_cli_module_entrypoint():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--list-rules"],
+        capture_output=True, text=True, env=env, cwd=REPO_ROOT, timeout=60)
+    assert r.returncode == 0
+    assert "RPR101" in r.stdout and "RPR303" in r.stdout
+
+
+# -- the repo gate ------------------------------------------------------------
+
+def test_repo_is_clean_under_committed_baseline():
+    """The CI gate: src/ + benchmarks/ produce zero unsuppressed findings,
+    and every committed baseline entry carries a real justification."""
+    findings, n_files = analyze_paths(
+        [os.path.join(REPO_ROOT, "src"),
+         os.path.join(REPO_ROOT, "benchmarks")], root=REPO_ROOT)
+    assert n_files > 50
+    bl = load_baseline(os.path.join(REPO_ROOT, ".analysis-baseline.json"))
+    for e in bl.entries:
+        assert len(e["reason"]) > 20, f"flimsy justification: {e}"
+        assert "TODO" not in e["reason"], f"unfilled justification: {e}"
+    kept, suppressed, stale = apply_baseline(findings, bl)
+    assert kept == [], "new findings:\n" + "\n".join(
+        f.render() for f in kept)
+    assert stale == [], f"stale baseline entries: {stale}"

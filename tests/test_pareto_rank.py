@@ -143,6 +143,33 @@ def test_rank_impl_env_override(monkeypatch):
         ops.resolve_rank_impl("mosaic")
 
 
+def test_rank_impl_invalid_env_raises(monkeypatch):
+    """A typo'd REPRO_RANK_IMPL must fail loudly at dispatch, naming the
+    variable and the valid choices — not silently fall through to some
+    branch (the CI kernel-interpret leg depends on the env actually
+    taking effect)."""
+    monkeypatch.setenv("REPRO_RANK_IMPL", "palas")
+    with pytest.raises(ValueError) as ei:
+        ops.resolve_rank_impl("auto")
+    msg = str(ei.value)
+    assert "REPRO_RANK_IMPL" in msg and "'palas'" in msg
+    for choice in ("auto", "ref", "pallas"):
+        assert choice in msg
+    # explicit non-auto impls bypass the env entirely, even a broken one
+    assert ops.resolve_rank_impl("ref") == "ref"
+
+
+def test_resolve_impl_rejects_unknown():
+    """resolve_impl used to return unknown impl strings unchanged, sending
+    e.g. quant_matmul(impl='bogus') down the Pallas branch; it must raise
+    and list the valid choices instead."""
+    with pytest.raises(ValueError, match="valid choices"):
+        ops.resolve_impl("bogus")
+    assert ops.resolve_impl("ref") == "ref"
+    assert ops.resolve_impl("pallas") == "pallas"
+    assert ops.resolve_impl("auto") in ("ref", "pallas")
+
+
 # -- multi-restart runner -----------------------------------------------------
 
 def _toy_eval(X):

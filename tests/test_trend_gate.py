@@ -1,0 +1,127 @@
+"""compare_bench.py sustained-drift gate: the least-squares slope over the
+last-K comparable trend runs catches slow regressions the per-run ±20%
+gate waves through, skips incomparable/short series, and credits
+improvements."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+
+from compare_bench import fit_drift, trend_series  # noqa: E402
+
+BENCH = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                     "compare_bench.py")
+
+
+def make_runs(values, key="batch_evals_per_s", schema=3, mode="quick"):
+    return [{"sha": f"s{i}", "date": "2026-08-01", "mode": mode,
+             "bench_schema": schema, "metrics": {key: v}}
+            for i, v in enumerate(values)]
+
+
+# -- pure pieces --------------------------------------------------------------
+
+def test_fit_drift_linear_series():
+    # 100 -> 130 linearly: fit drift = +30 / mean(115) ≈ +26%
+    series = [100 + 5 * i for i in range(7)]
+    assert fit_drift(series) == pytest.approx(30 / 115, rel=1e-6)
+
+
+def test_fit_drift_flat_and_noisy_endpoint():
+    assert fit_drift([50.0] * 6) == 0.0
+    # one crashed last point barely moves the fit (last-vs-first would
+    # report -50%)
+    series = [100.0] * 9 + [50.0]
+    assert abs(fit_drift(series)) < 0.35
+    assert (series[-1] - series[0]) / series[0] == -0.5
+
+
+def test_trend_series_filters_incomparable_runs():
+    runs = (make_runs([1, 2], schema=2)            # old schema: excluded
+            + make_runs([3], mode="full")          # other mode: excluded
+            + make_runs([10, 11, 12, 13]))
+    trend = {"runs": runs}
+    assert trend_series(trend, "batch_evals_per_s", 3, "quick",
+                        window=8) == [10, 11, 12, 13]
+    assert trend_series(trend, "batch_evals_per_s", 3, "quick",
+                        window=2) == [12, 13]
+    assert trend_series(trend, "missing_key", 3, "quick", window=8) == []
+
+
+# -- the gate end-to-end ------------------------------------------------------
+
+def run_gate(tmp_path, runs, extra_args=(), cur_metrics=None):
+    cur = {"bench_schema": 3, "mode": "quick"}
+    cur.update(cur_metrics or {})
+    cp = tmp_path / "cur.json"
+    tp = tmp_path / "trend.json"
+    cp.write_text(json.dumps(cur))
+    tp.write_text(json.dumps({"trend_schema": 1, "runs": runs}))
+    return subprocess.run(
+        [sys.executable, BENCH, "--current", str(cp),
+         "--baseline", str(tmp_path / "missing.json"),
+         "--trend", str(tp), *extra_args],
+        capture_output=True, text=True, timeout=60)
+
+
+def test_sustained_regression_fails(tmp_path):
+    # -5%/run for 8 runs: each step passes a 20% gate, the trend must not
+    runs = make_runs([100 * 0.95 ** i for i in range(8)])
+    r = run_gate(tmp_path, runs)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "SUSTAINED REGRESSION" in r.stdout
+    assert "sustained trend regression" in r.stderr
+
+
+def test_flat_and_improving_trends_pass(tmp_path):
+    r = run_gate(tmp_path, make_runs([100.0] * 8))
+    assert r.returncode == 0, r.stdout + r.stderr
+    # improvement in a lower-is-better metric must not be flagged either
+    runs = make_runs([10 * 0.9 ** i for i in range(8)],
+                     key="campaign_wall_s")
+    r = run_gate(tmp_path, runs)
+    assert r.returncode == 0, r.stdout + r.stderr
+    # but a *rising* wall time is a regression
+    runs = make_runs([10 * 1.06 ** i for i in range(8)],
+                     key="campaign_wall_s")
+    r = run_gate(tmp_path, runs)
+    assert r.returncode == 1
+    assert "campaign_wall_s" in r.stdout
+
+
+def test_short_series_skipped(tmp_path):
+    r = run_gate(tmp_path, make_runs([100, 50]))   # 2 points: no verdict
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "<3 comparable points" in r.stdout
+
+
+def test_window_and_threshold_flags(tmp_path):
+    # old cliff followed by a flat recent window: a tight window passes,
+    # a wide one sees the cliff
+    runs = make_runs([200.0] * 4 + [100.0] * 4)
+    r = run_gate(tmp_path, runs, ["--trend-window", "4"])
+    assert r.returncode == 0, r.stdout + r.stderr
+    r = run_gate(tmp_path, runs, ["--trend-window", "8"])
+    assert r.returncode == 1
+    # threshold is adjustable
+    r = run_gate(tmp_path, runs, ["--trend-window", "8",
+                                  "--max-trend-regression", "0.95"])
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_missing_trend_file_is_not_fatal(tmp_path):
+    cur = tmp_path / "cur.json"
+    cur.write_text(json.dumps({"bench_schema": 3, "mode": "quick"}))
+    r = subprocess.run(
+        [sys.executable, BENCH, "--current", str(cur),
+         "--baseline", str(tmp_path / "missing.json"),
+         "--trend", str(tmp_path / "no_trend.json")],
+        capture_output=True, text=True, timeout=60)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "skipping the sustained-drift check" in r.stdout
