@@ -9,7 +9,8 @@ when any tracked metric regressed by more than ``--max-regression``
 Tracked keys:
 
 * higher is better: ``batch_evals_per_s``, ``nsga_evals_per_s``,
-  ``jit_nsga_evals_per_s``, ``jit_nsga_scale_evals_per_s``
+  ``jit_nsga_evals_per_s``, ``jit_nsga_scale_evals_per_s``,
+  ``serve_tokens_per_s``
 * lower is better:  ``campaign_wall_s``, ``fleet_sweep_wall_s``
 
 Baselines are only comparable when both their ``bench_schema`` *and* their
@@ -50,7 +51,8 @@ import sys
 from typing import Optional, Tuple
 
 HIGHER_BETTER = ("batch_evals_per_s", "nsga_evals_per_s",
-                 "jit_nsga_evals_per_s", "jit_nsga_scale_evals_per_s")
+                 "jit_nsga_evals_per_s", "jit_nsga_scale_evals_per_s",
+                 "serve_tokens_per_s")
 LOWER_BETTER = ("campaign_wall_s", "fleet_sweep_wall_s")
 
 

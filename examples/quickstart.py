@@ -156,3 +156,61 @@ gate = subprocess.run(
 print("\nstatic analysis gate:")
 print(gate.stdout.strip())
 assert gate.returncode == 0, gate.stdout + gate.stderr
+
+# 8. serve the partition for real: repro.serve.  Everything above picks
+#    cuts from *models* of latency/energy; the serving runtime executes
+#    them — continuous batching over partitioned LM stages with per-slot
+#    admission/eviction (no lockstep waves), thread-per-stage async
+#    workers that overlap emulated link wire time with compute (Def. 4:
+#    steady-state throughput ~ 1/max(stage, link)), and a
+#    least-outstanding-slots router over N replicas.  The walkthrough:
+#    pick a cut with explore_graph on the reduced LM's graph, snap it to
+#    a decoder-block boundary with lm_block_cuts, launch 2 async
+#    replicas, read the merged TTFT/throughput report.  (CI's
+#    benchmarks/serve_smoke.py asserts byte-identical greedy tokens vs
+#    the monolithic engine; benchmarks/serve_bench.py gates the
+#    async-vs-serial speedup and the Def.-4 prediction gap.)
+import jax  # noqa: E402
+
+from repro.core import Platform, QuantSpec, SystemConfig, get_link  # noqa: E402
+from repro.core.hwmodel import EYERISS_LIKE, SIMBA_LIKE  # noqa: E402
+from repro.explore import explore_graph, lm_block_cuts  # noqa: E402
+from repro.models.registry import build_model, get_config  # noqa: E402
+from repro.serve import (PipelineServeEngine, ReplicaRouter,  # noqa: E402
+                         ServeLink, poisson_traffic)
+from repro.serving.pipeline import PartitionedLMRunner  # noqa: E402
+
+lm_cfg = get_config("smollm-360m").reduced()
+lm = build_model(lm_cfg)
+lm_params, _ = lm.init(jax.random.PRNGKey(0))
+
+lm_system = SystemConfig(
+    [Platform("A", EYERISS_LIKE, QuantSpec(bits=16)),
+     Platform("B", SIMBA_LIKE, QuantSpec(bits=8))],
+    [get_link("eth10")])                       # embedded 10 Mbit/s Ethernet
+lm_result = explore_graph(lm.to_graph(8), lm_system,
+                          objectives=("latency", "energy", "throughput"))
+sel = lm_result.selected.cuts if lm_result.selected is not None else (1,)
+cuts = lm_block_cuts(sel, lm_cfg.n_layers)     # schedule cut -> block cut
+print(f"\nserve: explorer cuts {tuple(sel)} -> block cuts {cuts}")
+
+lm_runner = PartitionedLMRunner(lm, lm_params, cuts=cuts)
+replicas = []
+for i in range(2):
+    eng = PipelineServeEngine(
+        lm_runner, n_slots=8, n_groups=4, mode="async", capacity=32,
+        links=[ServeLink(model=get_link("eth10"))
+               for _ in range(lm_runner.n_stages - 1)],
+        name=f"replica{i}")
+    eng.warmup(prompt_len=8)
+    replicas.append(eng)
+
+traffic = poisson_traffic(8, rate_rps=200.0, vocab=lm_cfg.vocab,
+                          prompt_len=8, max_new=6, seed=0)
+served = ReplicaRouter(replicas).serve(list(traffic), realtime=False)
+summary = served.summary()
+print(f"serve: {served.n_done} request(s), "
+      f"{summary['tokens_per_s']:.0f} tok/s over 2 replicas, "
+      f"TTFT p95 {summary.get('ttft_p95_ms', 0):.0f} ms, "
+      f"routed {served.extra['routed_per_replica']}")
+assert served.n_done == len(traffic), "serve dropped requests"

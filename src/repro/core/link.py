@@ -94,11 +94,30 @@ def inter_pod_dci() -> LinkModel:
                      e_per_byte_j=30e-12)
 
 
+def embedded_ethernet_10() -> LinkModel:
+    """10BASE-T-class industrial/embedded Ethernet: 10 Mbit/s, ~300 µs
+    stack setup, small MTU — the low end of the distributed-embedded links
+    the partitioner targets."""
+    return LinkModel("eth10", rate_bps=10e6, t_setup_s=300e-6,
+                     payload_bytes=1460, header_bytes=58,
+                     p_tx_w=0.3, p_rx_w=0.25, e_per_byte_j=20e-9)
+
+
+def can_fd() -> LinkModel:
+    """CAN-FD automotive bus: 5 Mbit/s data phase, 64-byte frames with
+    ~8 bytes framing overhead, ~200 µs arbitration/setup per transfer."""
+    return LinkModel("canfd", rate_bps=5e6, t_setup_s=200e-6,
+                     payload_bytes=64, header_bytes=8,
+                     p_tx_w=0.1, p_rx_w=0.1, e_per_byte_j=50e-9)
+
+
 LINKS = {
     "gige": gigabit_ethernet,
     "pcie4x4": pcie_gen4_x4,
     "ici": tpu_ici,
     "dci": inter_pod_dci,
+    "eth10": embedded_ethernet_10,
+    "canfd": can_fd,
 }
 
 

@@ -56,6 +56,7 @@ and strategies are drop-in interchangeable through
 ``SearchSettings.strategy``.
 """
 
+from repro.explore.deploy import lm_block_cuts
 from repro.explore.campaign import (Campaign, CampaignEntry, CampaignReport,
                                     CampaignResult, campaign_entry_dict)
 from repro.explore.filters import (candidate_positions, feasible_cut_rows,
@@ -82,6 +83,7 @@ __all__ = [
     "SearchContext", "SearchSettings", "SearchStrategy", "StrategyOutput",
     "SweepSpec", "SystemSpec", "campaign_entry_dict", "candidate_positions",
     "eval_from_dict", "eval_to_dict", "explore_graph", "feasible_cut_rows",
-    "link_feasibility", "link_filter", "memory_filter", "register_strategy",
-    "run_search", "run_spec", "scaled_nsga_defaults", "select_weighted",
+    "link_feasibility", "link_filter", "lm_block_cuts", "memory_filter",
+    "register_strategy", "run_search", "run_spec", "scaled_nsga_defaults",
+    "select_weighted",
 ]

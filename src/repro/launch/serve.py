@@ -1,15 +1,21 @@
-"""Serving driver — the paper-kind end-to-end example.
+"""Serving driver — the paper-kind end-to-end example, now on the
+``repro.serve`` runtime.
 
-Trains (briefly) a reduced model, then serves batched generation requests
-two ways and compares:
+Trains (briefly) a reduced model, lets the explorer pick the Def.-2 cut
+for an embedded two-platform system, then serves a synthetic Poisson
+traffic stream over partitioned stages with continuous batching:
 
-  1. monolithic  — the whole model on one platform;
-  2. partitioned — the explorer picks the Def.-2 cut for a two-platform
-     system, the PartitionedLMRunner executes the stages, and Def. 4
-     estimates pipelined throughput from the measured stage latencies.
+  1. the explorer's schedule cut is snapped onto a decoder-block boundary
+     (``repro.explore.lm_block_cuts``) and feeds the serving config;
+  2. N replicas of the async stage pipeline (thread-per-stage workers,
+     emulated link wire time overlapped with compute) serve the stream
+     behind a least-outstanding-slots router;
+  3. the same burst through the lockstep serial-handoff baseline shows
+     what pipelining buys (Def. 4), with per-request TTFT/latency
+     percentiles from the router's merged report.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
-      --requests 8 --prompt-len 32 --max-new 16
+      --requests 16 --prompt-len 8 --max-new 12 --replicas 2
 """
 
 from __future__ import annotations
@@ -19,27 +25,35 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from repro.core import (Platform, QuantSpec, SystemConfig, get_link)
+from repro.core import Platform, QuantSpec, SystemConfig, get_link
 from repro.core.hwmodel.arch import EYERISS_LIKE, SIMBA_LIKE
-from repro.explore import SearchSettings, explore_graph
-from repro.data.synthetic import SyntheticTokens, make_batch_for
-from repro.models.registry import ARCH_IDS, get_config, build_model
+from repro.data.synthetic import make_batch_for
+from repro.explore import SearchSettings, explore_graph, lm_block_cuts
+from repro.models.registry import ARCH_IDS, build_model, get_config
 from repro.optim.optimizers import get_optimizer
-from repro.serving.engine import GenerationEngine
-from repro.serving.pipeline import PartitionedLMRunner, pipeline_report
+from repro.serve import (PipelineServeEngine, ReplicaRouter, ServeLink,
+                         poisson_traffic)
+from repro.serving.pipeline import PartitionedLMRunner
 from repro.training.train_lib import make_train_step
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m", choices=ARCH_IDS)
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--rate-rps", type=float, default=200.0)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--link", default="eth10",
+                    help="emulated inter-stage link (see repro.core.link)")
     ap.add_argument("--warm-steps", type=int, default=30)
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
+    if cfg.family not in ("dense",):
+        raise SystemExit(f"--arch {args.arch}: partitioned serving needs a "
+                         "dense decoder (block-boundary stage cuts)")
     model = build_model(cfg)
     key = jax.random.PRNGKey(0)
     params, state = model.init(key)
@@ -51,46 +65,64 @@ def main():
     for i in range(args.warm_steps):
         b = make_batch_for(cfg, 8, 64, seed=i)
         b = {k: jnp.asarray(v) for k, v in b.items()}
-        params, opt_state, state, metrics = step_fn(params, opt_state, state, b)
+        params, opt_state, state, metrics = step_fn(params, opt_state,
+                                                    state, b)
     print(f"[serve] warm-trained {cfg.arch_id} reduced to "
           f"loss={float(metrics['loss']):.3f}")
 
-    # batched generation (monolithic)
-    ds = SyntheticTokens(cfg.vocab)
-    prompts = ds.batch(args.requests, args.prompt_len, seed=123)[:, :-1]
-    engine = GenerationEngine(model, params,
-                              max_seq=args.prompt_len + args.max_new + 8)
-    res = engine.generate(prompts, max_new=args.max_new)
-    print(f"[serve] monolithic: {args.requests} reqs × {args.max_new} new "
-          f"tokens; prefill {res.prefill_s*1e3:.1f} ms, "
-          f"decode {res.decode_s*1e3:.1f} ms "
-          f"({res.tokens_per_s:.0f} tok/s)")
+    # 1. the explorer picks the cut for a two-platform embedded system
+    graph = model.to_graph(args.prompt_len)
+    system = SystemConfig(
+        [Platform("A", EYERISS_LIKE, QuantSpec(bits=16)),
+         Platform("B", SIMBA_LIKE, QuantSpec(bits=8))],
+        [get_link(args.link)])
+    er = explore_graph(graph, system,
+                       objectives=("latency", "energy", "throughput"),
+                       search=SearchSettings(seed=0))
+    sel = er.selected.cuts if er.selected is not None else (1,)
+    cuts = lm_block_cuts(sel, cfg.n_layers)
+    print(f"[serve] explorer selected schedule cuts {tuple(sel)} "
+          f"-> block cuts {cuts}")
 
-    # explorer-selected partitioning (two-platform system, Def. 2 + Def. 4)
-    if cfg.family in ("dense", "vlm", "audio"):
-        graph = model.to_graph(args.prompt_len)
-        system = SystemConfig(
-            [Platform("A", EYERISS_LIKE, QuantSpec(bits=16)),
-             Platform("B", SIMBA_LIKE, QuantSpec(bits=8))],
-            [get_link("gige")])
-        er = explore_graph(graph, system,
-                           objectives=("latency", "energy", "throughput"),
-                           search=SearchSettings(seed=0))
-        print("[serve] explorer:")
-        print(er.summary())
-        cut = er.selected.cuts[0] if er.selected is not None else 0
-        layer_cut = max(0, min(cfg.n_layers - 2, (cut - 1) // 2))
-        runner = PartitionedLMRunner(model, params, [layer_cut])
-        batch = {"tokens": jnp.asarray(prompts)}
-        logits, rep = runner.forward(batch)
-        mono_logits, _ = model.apply(params, state, batch, train=False)
-        err = float(jnp.abs(logits - mono_logits).max())
-        link_lat = [get_link("gige").latency_s(b) for b in rep.link_bytes]
-        info = pipeline_report(rep.latency_s, link_lat)
-        print(f"[serve] partitioned after layer {layer_cut}: max |Δlogits| "
-              f"= {err:.2e} vs monolithic; stage lat "
-              f"{[f'{t*1e3:.1f}ms' for t in rep.latency_s]}, Def.4 "
-              f"throughput {info['throughput']:.1f} batches/s")
+    # 2. traffic + N async replicas behind the least-outstanding router
+    runner = PartitionedLMRunner(model, params, cuts=cuts)
+    reqs = poisson_traffic(args.requests, rate_rps=args.rate_rps,
+                           vocab=cfg.vocab, prompt_len=args.prompt_len,
+                           max_new=args.max_new, seed=123)
+
+    def make_replicas(mode):
+        reps = []
+        for i in range(args.replicas):
+            links = [ServeLink(model=get_link(args.link))
+                     for _ in range(runner.n_stages - 1)]
+            eng = PipelineServeEngine(runner, n_slots=8, n_groups=4,
+                                      eos=None, mode=mode, capacity=64,
+                                      links=links, name=f"replica{i}")
+            eng.warmup(prompt_len=args.prompt_len)
+            reps.append(eng)
+        return reps
+
+    rep_async = ReplicaRouter(make_replicas("async")).serve(
+        list(reqs), realtime=False)
+    rep_serial = ReplicaRouter(make_replicas("serial")).serve(
+        list(reqs), realtime=False)
+
+    # 3. the report: throughput, Def.-4 context, per-request percentiles
+    a, s = rep_async.summary(), rep_serial.summary()
+    print(f"[serve] serial handoff: {s['tokens_per_s']:.0f} tok/s; "
+          f"async pipeline: {a['tokens_per_s']:.0f} tok/s "
+          f"(x{a['tokens_per_s'] / max(s['tokens_per_s'], 1e-9):.2f}) over "
+          f"{args.replicas} replica(s), {rep_async.n_done} request(s)")
+    for k in ("ttft_p50_ms", "ttft_p95_ms", "latency_p50_ms",
+              "latency_p95_ms"):
+        if k in a:
+            print(f"[serve]   async {k} = {a[k]}")
+    routed = rep_async.extra.get("routed_per_replica")
+    if routed:
+        print(f"[serve]   routed per replica: {routed}")
+    if rep_async.n_done != args.requests or rep_serial.n_done != args.requests:
+        print("[serve] ERROR: dropped requests")
+        return 1
     return 0
 
 

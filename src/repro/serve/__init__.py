@@ -1,0 +1,10 @@
+"""Production partitioned-serving runtime (paper Sec. V deployment story):
+slot-based continuous batching + async double-buffered stage pipelining +
+replica routing over the partitions the explorer chose."""
+
+from repro.serve.pipeline_async import (PipelineServeEngine, RequestStream,
+                                        ServeLink, stream_of)
+from repro.serve.request import (Request, RequestRecord, ServeReport,
+                                 poisson_traffic)
+from repro.serve.router import ReplicaRouter
+from repro.serve.scheduler import SlotScheduler

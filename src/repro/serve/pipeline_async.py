@@ -1,0 +1,520 @@
+"""Partitioned serving runtime: continuous batching over async pipeline
+stages.
+
+:class:`PipelineServeEngine` serves a live request stream over the stages
+of a :class:`repro.serving.pipeline.PartitionedLMRunner`:
+
+* **Slots & waves.**  The ``n_slots`` decode slots are split into
+  ``n_groups`` independent waves (default: one per stage).  Each wave is a
+  vmapped batch of per-slot cache lanes (own write positions — see
+  ``SlotDecoder``), admitted/evicted per-request by the
+  :class:`~repro.serve.scheduler.SlotScheduler`.
+* **Async double buffering** (``mode='async'``).  One worker thread per
+  stage and one shuttle thread per inter-stage link, connected by bounded
+  queues.  Autoregressive decode has a feedback edge (step t+1 needs step
+  t's sampled token), so a single wave can never overlap with itself; with
+  ``n_groups >= n_stages`` waves in flight, stage k+1 computes wave A's
+  step while wave B's activations cross the link into stage k — the
+  steady-state step rate approaches Def. 4's ``1/max(stage, link)``.
+* **Links.**  Activations crossing stage k -> k+1 are fake-quantized to
+  the producer's bit width (the existing ``link_transfer_bytes`` /
+  ``QuantSpec`` path) and the wire time of an emulated
+  :class:`~repro.core.link.LinkModel` is slept in the shuttle thread, so
+  transfers genuinely overlap with compute.
+* **Serial baseline** (``mode='serial'``).  Identical scheduler, stage
+  programs and link emulation, lockstep handoff in one thread — per step
+  it pays ``sum(stage + link)``.  This is the baseline the >=1.5x
+  ``serve_bench`` gate compares against, and byte-identical greedy tokens
+  across the two modes is a tested invariant.
+
+Thread-side code here is *host* code on purpose: it samples tokens with
+NumPy and calls ``.item()``-like syncs outside any jit region (the jitted
+programs are the per-stage step functions).  See CONTRIBUTING.md
+("RPR1xx-safe patterns").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.link import LinkModel
+from repro.core.quant import QuantSpec, quantize_tensor
+from repro.serve.request import Request, ServeReport
+from repro.serve.scheduler import SlotScheduler
+from repro.serving.engine import _bump_pos
+from repro.serving.pipeline import (PartitionedLMRunner, def4_throughput,
+                                    link_transfer_bytes)
+
+
+class RequestStream:
+    """Thread-safe request feed: a traffic player / router pushes, a serve
+    engine drains.  ``close()`` marks end-of-stream."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._pending: List[Request] = []
+        self._closed = False
+
+    def push(self, req: Request) -> None:
+        with self._lock:
+            if self._closed:
+                raise ValueError("push to a closed RequestStream")
+            self._pending.append(req)
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+
+    def drain(self) -> List[Request]:
+        with self._lock:
+            out, self._pending = self._pending, []
+            return out
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    @property
+    def closed(self) -> bool:
+        with self._lock:
+            return self._closed and not self._pending
+
+
+def stream_of(requests: List[Request]) -> RequestStream:
+    """A pre-closed stream delivering ``requests`` as one burst."""
+    s = RequestStream()
+    for r in requests:
+        s.push(r)
+    s.close()
+    return s
+
+
+@dataclasses.dataclass
+class ServeLink:
+    """Emulated inter-stage link: the producer's bit width quantizes the
+    activation crossing it; an optional :class:`LinkModel` prices the wire
+    time (slept by the shuttle thread / the serial loop)."""
+    model: Optional[LinkModel] = None
+    quant: Optional[QuantSpec] = None
+
+    def transfer(self, x):
+        """-> (activation as received, wire bytes, wire seconds)."""
+        nbytes = link_transfer_bytes(int(x.size), self.quant)
+        if self.quant is not None:
+            x = quantize_tensor(x, self.quant)
+        lat = self.model.latency_s(nbytes) if self.model is not None else 0.0
+        return x, nbytes, lat
+
+
+@dataclasses.dataclass
+class _Item:
+    """One unit of pipeline work: a wave decode step or a single-lane
+    prompt prefill."""
+    kind: str                   # 'decode' | 'prefill'
+    group: int
+    lane: int = -1              # prefill only
+    x: Any = None               # tokens entering stage 0, then activations
+    link_s: float = 0.0         # accumulated emulated wire seconds
+
+
+_STOP = object()
+
+
+class _PrioQueue:
+    """Two-priority queue: decode items overtake prefill items.
+    Admission prefills ship whole-prompt activations (long transfers /
+    long stage calls) and must not head-of-line-block the steady-state
+    decode waves; reordering across kinds is safe because the driver never
+    lets a wave's decode and its own prefill be in flight together.
+
+    Built from deques + a semaphore rather than ``queue.PriorityQueue``:
+    per-item queue cost sits on the steady-state step path, and the
+    heap/Condition machinery is measurably slower than C-level semaphore
+    handoff.  Depth is bounded by the driver's per-wave in-flight gating,
+    so no ``maxsize`` blocking is needed.
+    """
+
+    def __init__(self):
+        import collections
+        self._dqs = [collections.deque(), collections.deque(),
+                     collections.deque()]    # decode | prefill | stop
+        self._sem = threading.Semaphore(0)
+        self._lock = threading.Lock()
+
+    def put(self, item) -> None:
+        if item is _STOP:
+            prio = 2                      # drain everything else first
+        else:
+            prio = 0 if item.kind == "decode" else 1
+        with self._lock:
+            self._dqs[prio].append(item)
+        self._sem.release()
+
+    def get(self):
+        self._sem.acquire()
+        with self._lock:
+            for dq in self._dqs:
+                if dq:
+                    return dq.popleft()
+        raise RuntimeError("semaphore/queue accounting out of sync")
+
+
+class _StageRuntime:
+    """One stage's jitted programs + per-wave cache lanes.
+
+    ``decode`` runs the vmapped step over a whole wave (every lane advances
+    one token; idle lanes compute from a sentinel cache and are never
+    sampled); ``prefill`` runs the single-lane step over a full prompt and
+    splices the resulting cache into the wave.
+    """
+
+    def __init__(self, runner: PartitionedLMRunner, si: int, lanes: int,
+                 n_groups: int, capacity: int, dtype=jnp.float32):
+        self.si = si
+        self.runner = runner
+        self.capacity = capacity
+        self.dtype = dtype
+        self.weights = runner.stage_weights(si)
+        fn = runner.stage_step_fn(si)
+        self._step_group = jax.jit(jax.vmap(fn, in_axes=(None, 0, 0)))
+        self._step_one = jax.jit(fn)
+        # jits are functional, so one immutable zero cache serves every
+        # admission; the lane splice is jitted to fuse the per-leaf scatters
+        self._fresh = runner.init_stage_caches(si, 1, capacity, dtype)
+        self._splice = jax.jit(lambda full, one, lane: jax.tree_util.tree_map(
+            lambda f, o: f.at[lane].set(o), full, one))
+        idle = _bump_pos(self._fresh)
+        self.caches = [jax.tree_util.tree_map(
+            lambda x: jnp.stack([x] * lanes), idle) for _ in range(n_groups)]
+        self.decode_s: List[float] = []      # per-item compute seconds
+
+    def decode(self, g: int, x):
+        t0 = time.perf_counter()
+        out, self.caches[g] = self._step_group(self.weights, self.caches[g], x)
+        jax.block_until_ready(out)
+        self.decode_s.append(time.perf_counter() - t0)
+        return out
+
+    def prefill(self, g: int, lane: int, x):
+        out, new = self._step_one(self.weights, self._fresh, x)
+        self.caches[g] = self._splice(self.caches[g], new, lane)
+        jax.block_until_ready(out)
+        return out
+
+    def run_item(self, item: _Item):
+        if item.kind == "decode":
+            item.x = self.decode(item.group, item.x)
+        else:
+            item.x = self.prefill(item.group, item.lane, item.x)
+        return item
+
+
+class PipelineServeEngine:
+    """Continuous-batching serve engine over partitioned LM stages (see
+    module docstring).  One instance is one replica; drive it with
+    :meth:`run` on a :class:`RequestStream` (directly, or via
+    ``repro.serve.router.ReplicaRouter``)."""
+
+    def __init__(self, runner: PartitionedLMRunner, *, n_slots: int = 8,
+                 n_groups: Optional[int] = None, eos: Optional[int] = None,
+                 links: Optional[List[ServeLink]] = None,
+                 capacity: int = 128, temperature: float = 0.0,
+                 seed: int = 0, mode: str = "async", name: str = "replica0"):
+        if mode not in ("async", "serial"):
+            raise ValueError(f"mode must be 'async' or 'serial', got {mode!r}")
+        self.runner = runner
+        self.n_stages = runner.n_stages
+        self.n_groups = n_groups or self.n_stages
+        self.lanes = max(1, n_slots // self.n_groups)
+        self.n_slots = self.lanes * self.n_groups
+        self.eos = eos
+        self.temperature = temperature
+        self.seed = seed
+        self.mode = mode
+        self.name = name
+        self.links = list(links) if links else [
+            ServeLink() for _ in range(self.n_stages - 1)]
+        assert len(self.links) == self.n_stages - 1
+        self.stages = [_StageRuntime(runner, si, self.lanes, self.n_groups,
+                                     capacity)
+                       for si in range(self.n_stages)]
+        # per-link decode occupancy: measured wall (transfer + sleep, i.e.
+        # what the link resource actually costs on this host) and the pure
+        # modeled wire seconds, kept separately
+        self.link_decode_s: List[List[float]] = [[] for _ in self.links]
+        self.link_model_s: List[List[float]] = [[] for _ in self.links]
+        self._sched: Optional[SlotScheduler] = None
+        self.stats: Dict[str, float] = {}
+
+    # -- wave helpers --------------------------------------------------------
+    def _slot(self, g: int, lane: int) -> int:
+        return g * self.lanes + lane
+
+    def _group_tokens(self, sched: SlotScheduler, g: int) -> np.ndarray:
+        toks = np.zeros(self.lanes, np.int32)
+        for lane in range(self.lanes):
+            slot = self._slot(g, lane)
+            if sched.slot_request(slot) is not None:
+                toks[lane] = sched.last_token(slot)
+        return toks
+
+    def _group_active(self, sched: SlotScheduler, g: int) -> bool:
+        return any(sched.slot_request(self._slot(g, ln)) is not None
+                   for ln in range(self.lanes))
+
+    def _sample(self, logits: np.ndarray, rid: int, step: int) -> int:
+        if self.temperature <= 0:
+            return int(np.argmax(logits))
+        rng = np.random.default_rng(
+            np.random.SeedSequence((self.seed, rid, step)))
+        g = rng.gumbel(size=logits.shape)
+        return int(np.argmax(logits / self.temperature + g))
+
+    def warmup(self, prompt_len: int) -> None:
+        """Compile every stage program (wave decode + one prompt length)
+        before the serving clock starts, so TTFT measures serving, not XLA."""
+        x = jnp.zeros((self.lanes, 1, 1), jnp.int32)
+        p = jnp.zeros((1, prompt_len), jnp.int32)
+        for st in self.stages:
+            x, _ = st._step_group(st.weights, st.caches[0], x)
+            p, new = st._step_one(st.weights, st._fresh, p)
+            st._splice(st.caches[0], new, 0)    # discarded: compile only
+        jax.block_until_ready((x, p))
+
+    # -- execution backends --------------------------------------------------
+    def _serial_dispatch(self, item: _Item, done: "queue.SimpleQueue"):
+        for si, st in enumerate(self.stages):
+            st.run_item(item)
+            if si < len(self.links):
+                t0 = time.perf_counter()
+                x, _, lat = self.links[si].transfer(item.x)
+                if lat > 0:
+                    time.sleep(lat)
+                if item.kind == "decode":
+                    self.link_decode_s[si].append(time.perf_counter() - t0)
+                    self.link_model_s[si].append(lat)
+                item.x = x
+                item.link_s += lat
+        item.x = np.asarray(item.x)
+        done.put(item)
+
+    def _start_workers(self, done: "queue.SimpleQueue"):
+        """stage 0 -> link 0 -> stage 1 -> ... -> done; each arrow is a
+        bounded queue, each box a thread."""
+        self._qs = [_PrioQueue() for _ in range(2 * self.n_stages - 1)]
+        self._errors: List[BaseException] = []
+        self._threads = []
+
+        def stage_worker(si):
+            in_q = self._qs[2 * si]
+            last = si == self.n_stages - 1
+            out_q = done if last else self._qs[2 * si + 1]
+            while True:
+                item = in_q.get()
+                if item is _STOP:
+                    out_q.put(_STOP)
+                    return
+                try:
+                    self.stages[si].run_item(item)
+                    if last:
+                        # hand the driver host memory: the device->host copy
+                        # belongs in this worker, not on the driver's
+                        # critical sampling path
+                        item.x = np.asarray(item.x)
+                    out_q.put(item)
+                except BaseException as e:          # surface in the driver
+                    self._errors.append(e)
+                    out_q.put(_STOP)
+                    return
+
+        def link_worker(li):
+            in_q, out_q = self._qs[2 * li + 1], self._qs[2 * li + 2]
+            while True:
+                item = in_q.get()
+                if item is _STOP:
+                    out_q.put(_STOP)
+                    return
+                try:
+                    t0 = time.perf_counter()
+                    x, _, lat = self.links[li].transfer(item.x)
+                    if lat > 0:
+                        time.sleep(lat)
+                    if item.kind == "decode":
+                        self.link_decode_s[li].append(
+                            time.perf_counter() - t0)
+                        self.link_model_s[li].append(lat)
+                    item.x = x
+                    item.link_s += lat
+                    out_q.put(item)
+                except BaseException as e:
+                    self._errors.append(e)
+                    out_q.put(_STOP)
+                    return
+
+        for si in range(self.n_stages):
+            t = threading.Thread(target=stage_worker, args=(si,),
+                                 name=f"{self.name}-stage{si}", daemon=True)
+            t.start()
+            self._threads.append(t)
+        for li in range(len(self.links)):
+            t = threading.Thread(target=link_worker, args=(li,),
+                                 name=f"{self.name}-link{li}", daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    # -- the serve loop ------------------------------------------------------
+    @property
+    def outstanding(self) -> int:
+        """Queued + in-flight requests (the router's load signal)."""
+        sched = self._sched
+        return sched.outstanding if sched is not None else 0
+
+    def run(self, stream: RequestStream,
+            max_wall_s: float = 120.0) -> ServeReport:
+        sched = SlotScheduler(self.n_slots, eos=self.eos)
+        self._sched = sched
+        for st in self.stages:                   # fresh per-run accounting
+            st.decode_s = []
+        self.link_decode_s = [[] for _ in self.links]
+        self.link_model_s = [[] for _ in self.links]
+        done: "queue.SimpleQueue" = queue.SimpleQueue()
+        if self.mode == "async":
+            self._start_workers(done)
+            dispatch = self._qs[0].put
+        else:
+            self._errors = []
+            dispatch = lambda item: self._serial_dispatch(item, done)  # noqa: E731
+
+        in_flight = [False] * self.n_groups
+        pending_prefill = [0] * self.n_groups
+        decode_done_t: List[float] = []
+        t0 = time.perf_counter()
+        now = lambda: time.perf_counter() - t0  # noqa: E731
+
+        def admit_and_dispatch():
+            # payloads stay numpy here: the jitted stage programs do the
+            # host->device transfer in their own worker thread
+            for req in stream.drain():
+                sched.submit(req, now())
+            for slot, req in sched.admit():
+                g, lane = divmod(slot, self.lanes)
+                pending_prefill[g] += 1
+                dispatch(_Item("prefill", g, lane, x=req.prompt[None]))
+            for g in range(self.n_groups):
+                if (not in_flight[g] and pending_prefill[g] == 0
+                        and self._group_active(sched, g)):
+                    in_flight[g] = True
+                    toks = self._group_tokens(sched, g)
+                    dispatch(_Item("decode", g,
+                                   x=toks.reshape(self.lanes, 1, 1)))
+
+        def handle(item: _Item):
+            logits = item.x                        # np, converted stage-side
+            if item.kind == "prefill":
+                g, lane = item.group, item.lane
+                pending_prefill[g] -= 1
+                slot = self._slot(g, lane)
+                req = sched.slot_request(slot)
+                if req is not None:
+                    tok = self._sample(logits[0, -1], req.rid, 0)
+                    sched.record_token(slot, tok, now())
+            else:
+                g = item.group
+                in_flight[g] = False
+                decode_done_t.append(now())
+                for lane in range(self.lanes):
+                    slot = self._slot(g, lane)
+                    req = sched.slot_request(slot)
+                    if req is None:
+                        continue
+                    step = len(sched.records[req.rid].tokens)
+                    tok = self._sample(logits[lane, 0, -1], req.rid, step)
+                    sched.record_token(slot, tok, now())
+
+        while True:
+            if self._errors:
+                raise RuntimeError("serve worker failed") from self._errors[0]
+            admit_and_dispatch()
+            try:
+                item = done.get(timeout=0.002)
+            except queue.Empty:
+                item = None
+            got_any = False
+            while item is not None:                # drain the whole burst
+                if item is not _STOP:
+                    handle(item)
+                    got_any = True
+                try:
+                    item = done.get_nowait()
+                except queue.Empty:
+                    item = None
+            if got_any:
+                admit_and_dispatch()
+            if (stream.closed and sched.idle and not any(in_flight)
+                    and not any(pending_prefill)):
+                break
+            if now() > max_wall_s:
+                raise TimeoutError(
+                    f"serve run exceeded {max_wall_s}s "
+                    f"({sched.outstanding} request(s) outstanding)")
+        wall = now()
+        if self.mode == "async":
+            self._qs[0].put(_STOP)
+            for t in self._threads:
+                t.join(timeout=10.0)
+        self._finalize_stats(wall, decode_done_t)
+        for rec in sched.records.values():
+            rec.replica = self.name
+        report = ServeReport(records=list(sched.records.values()),
+                             wall_s=wall, eos=self.eos,
+                             extra=dict(self.stats))
+        self._sched = None
+        return report
+
+    def _finalize_stats(self, wall: float, decode_done_t: List[float]):
+        """Measured step rate vs the Def.-4 prediction from per-stage /
+        per-link decode times (first ``2 * n_groups`` items dropped: XLA
+        warm-up when :meth:`warmup` was skipped, queue fill otherwise).
+
+        Def. 4 takes each resource's *occupancy per item* as input; on this
+        emulated deployment that is the measured wall a stage / link spends
+        per wave step, so the prediction is fed measured occupancies
+        (``stage_step_s`` / ``link_step_s``).  The pure modeled wire time is
+        reported alongside as ``link_model_s``.
+        """
+
+        def _mean_tail(xs: List[float], skip: int) -> float:
+            tail = xs[skip:] or xs
+            return sum(tail) / len(tail) if tail else 0.0
+
+        skip = 2 * self.n_groups
+        stage_means = [_mean_tail(st.decode_s, skip) for st in self.stages]
+        link_means = [_mean_tail(xs, skip) for xs in self.link_decode_s]
+        link_model = [_mean_tail(xs, skip) for xs in self.link_model_s]
+        steps = len(decode_done_t)
+        steady = decode_done_t[skip:]
+        if len(steady) >= 2:
+            measured = (len(steady) - 1) / (steady[-1] - steady[0])
+        elif steps >= 1 and wall > 0:
+            measured = steps / wall
+        else:
+            measured = 0.0
+        self.stats = {
+            "mode": self.mode,
+            "decode_steps": steps,
+            "stage_step_s": [round(t, 6) for t in stage_means],
+            "link_step_s": [round(t, 6) for t in link_means],
+            "link_model_s": [round(t, 6) for t in link_model],
+            "def4_steps_per_s": round(def4_throughput(stage_means,
+                                                      link_means), 2),
+            "measured_steps_per_s": round(measured, 2),
+        }

@@ -1,0 +1,133 @@
+"""Requests, synthetic traffic, and per-request serving accounting.
+
+A :class:`Request` is one generation job (prompt + decode budget) with an
+arrival offset; :func:`poisson_traffic` draws a stream of them from
+``repro.data.synthetic`` token prompts with exponential inter-arrival gaps.
+:class:`RequestRecord` is what the runtime hands back — tokens plus the
+latency breakdown (TTFT = first decoded token, end-to-end latency) — and
+:class:`ServeReport` aggregates records into the throughput/latency summary
+the benchmarks gate on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.data.synthetic import SyntheticTokens
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (T_prompt,) int32
+    max_new: int = 16
+    arrival_s: float = 0.0      # offset from stream start
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32)
+        assert self.prompt.ndim == 1 and self.prompt.size > 0
+        assert self.max_new > 0
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Completed (or in-flight) request bookkeeping, wall-clock seconds
+    measured from the serving run's start."""
+    rid: int
+    prompt_len: int
+    max_new: int
+    submit_s: float = 0.0
+    first_token_s: Optional[float] = None
+    done_s: Optional[float] = None
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    finish: Optional[str] = None        # 'eos' | 'length'
+    replica: Optional[str] = None
+
+    @property
+    def done(self) -> bool:
+        return self.done_s is not None
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.submit_s
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.done_s is None:
+            return None
+        return self.done_s - self.submit_s
+
+    def n_valid_tokens(self, eos: Optional[int]) -> int:
+        """Pre-EOS tokens this request contributed."""
+        if eos is None:
+            return len(self.tokens)
+        toks = np.asarray(self.tokens, np.int32)
+        hit = np.flatnonzero(toks == eos)
+        return int(hit[0]) if hit.size else len(self.tokens)
+
+
+def poisson_traffic(n_requests: int, rate_rps: float, vocab: int,
+                    prompt_len: int = 16, max_new: int = 16,
+                    seed: int = 0) -> List[Request]:
+    """A Poisson request stream: exponential inter-arrival gaps at
+    ``rate_rps`` requests/s, prompts drawn from the learnable
+    ``SyntheticTokens`` bigram process (fixed ``prompt_len`` so the
+    prefill program compiles once)."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_rps, size=n_requests)
+    arrivals = np.cumsum(gaps) - gaps[0]          # first request at t=0
+    prompts = SyntheticTokens(vocab, seed=seed).batch(
+        n_requests, prompt_len, seed=seed)[:, :-1]
+    return [Request(rid=i, prompt=prompts[i], max_new=max_new,
+                    arrival_s=float(arrivals[i]))
+            for i in range(n_requests)]
+
+
+def _percentile(values: Sequence[float], q: float) -> float:
+    return float(np.percentile(np.asarray(values, np.float64), q))
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Aggregate view over a finished serving run."""
+    records: List[RequestRecord]
+    wall_s: float
+    eos: Optional[int] = None
+    extra: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_done(self) -> int:
+        return sum(1 for r in self.records if r.done)
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(r.n_valid_tokens(self.eos) for r in self.records)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.total_tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        done = [r for r in self.records if r.done]
+        ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
+        lats = [r.latency_s for r in done]
+        out = {
+            "n_requests": len(self.records),
+            "n_done": len(done),
+            "wall_s": round(self.wall_s, 4),
+            "total_tokens": self.total_tokens,
+            "tokens_per_s": round(self.tokens_per_s, 1),
+        }
+        if ttfts:
+            out["ttft_p50_ms"] = round(_percentile(ttfts, 50) * 1e3, 2)
+            out["ttft_p95_ms"] = round(_percentile(ttfts, 95) * 1e3, 2)
+        if lats:
+            out["latency_p50_ms"] = round(_percentile(lats, 50) * 1e3, 2)
+            out["latency_p95_ms"] = round(_percentile(lats, 95) * 1e3, 2)
+        out.update(self.extra)
+        return out

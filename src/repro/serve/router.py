@@ -1,0 +1,83 @@
+"""Replica router: spread a traffic stream across N partitioned pipelines.
+
+Each replica is a :class:`~repro.serve.pipeline_async.PipelineServeEngine`
+running in its own thread on its own :class:`RequestStream`.  The router
+plays the traffic's arrival process (real-time, or as one burst) and sends
+every request to the replica with the fewest outstanding requests
+(queued + in-flight slots) at send time — classic least-outstanding load
+balancing, which beats round-robin when decode lengths vary (EOS evictions
+make per-request service times heavy-tailed).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import List, Optional
+
+from repro.serve.pipeline_async import PipelineServeEngine, RequestStream
+from repro.serve.request import Request, ServeReport
+
+
+class ReplicaRouter:
+    def __init__(self, replicas: List[PipelineServeEngine]):
+        assert replicas
+        self.replicas = replicas
+
+    def _pick(self, sent: List[int]) -> int:
+        """Least outstanding; ties broken by fewest requests ever sent,
+        then lowest index (deterministic for tests)."""
+        load = [(r.outstanding, sent[i], i)
+                for i, r in enumerate(self.replicas)]
+        return min(load)[2]
+
+    def serve(self, requests: List[Request], realtime: bool = True,
+              max_wall_s: float = 120.0) -> ServeReport:
+        """Play ``requests`` (sorted by ``arrival_s``) into the replica
+        fleet and block until every request finishes.  ``realtime=False``
+        ignores arrival gaps and routes the whole list as a burst."""
+        streams = [RequestStream() for _ in self.replicas]
+        reports: List[Optional[ServeReport]] = [None] * len(self.replicas)
+        errors: List[BaseException] = []
+
+        def run_replica(i):
+            try:
+                reports[i] = self.replicas[i].run(streams[i],
+                                                  max_wall_s=max_wall_s)
+            except BaseException as e:
+                errors.append(e)
+                streams[i].close()
+
+        threads = [threading.Thread(target=run_replica, args=(i,),
+                                    name=f"router-{r.name}", daemon=True)
+                   for i, r in enumerate(self.replicas)]
+        for t in threads:
+            t.start()
+
+        t0 = time.perf_counter()
+        sent = [0] * len(self.replicas)
+        for req in sorted(requests, key=lambda r: r.arrival_s):
+            if realtime:
+                lag = req.arrival_s - (time.perf_counter() - t0)
+                if lag > 0:
+                    time.sleep(lag)
+            i = self._pick(sent)
+            streams[i].push(req)
+            sent[i] += 1
+        for s in streams:
+            s.close()
+        for t in threads:
+            t.join(timeout=max_wall_s + 10.0)
+        if errors:
+            raise RuntimeError("replica failed during serve") from errors[0]
+
+        records = [rec for rep in reports if rep is not None
+                   for rec in rep.records]
+        wall = time.perf_counter() - t0
+        extra = {"n_replicas": len(self.replicas),
+                 "routed_per_replica": sent}
+        for i, rep in enumerate(reports):
+            if rep is not None:
+                extra[f"replica{i}_tokens_per_s"] = round(rep.tokens_per_s, 1)
+        eos = self.replicas[0].eos
+        return ServeReport(records=records, wall_s=wall, eos=eos, extra=extra)

@@ -1,0 +1,151 @@
+"""Slot-based continuous-batching scheduler (host-side, no JAX).
+
+Fixed decode slots; requests wait in a FIFO queue, are admitted into free
+slots (:meth:`SlotScheduler.admit`), decode one token per step, and are
+evicted per-slot the moment they emit EOS or exhaust ``max_new`` — the
+freed slot backfills from the waiting queue on the very next ``admit``.
+No lockstep waves: every slot has its own request lifetime.
+
+The scheduler owns all request bookkeeping (tokens, TTFT, latency) and is
+deliberately execution-agnostic: ``SlotDecoder``, the async stage pipeline
+and the serial baseline all drive the same instance, which is what makes
+"byte-identical tokens across execution modes" checkable.
+
+Invariants (tested under randomized arrival/EOS patterns):
+  * no slot leak — every slot is always either free or owned by exactly
+    one in-flight request, and eviction always frees it;
+  * no cross-request token bleed — a token recorded against slot ``i``
+    lands only in the record of the request *currently* owning ``i``;
+  * immediate backfill — after ``admit()``, a slot is only free if the
+    waiting queue is empty.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.serve.request import Request, RequestRecord
+
+
+@dataclasses.dataclass
+class _SlotState:
+    req: Request
+    record: RequestRecord
+    n_generated: int = 0
+
+    @property
+    def position(self) -> int:
+        """Next token position = prompt length + tokens generated so far."""
+        return self.req.prompt.shape[0] + self.n_generated
+
+
+class SlotScheduler:
+    def __init__(self, n_slots: int, eos: Optional[int] = None):
+        assert n_slots > 0
+        self.n_slots = n_slots
+        self.eos = eos
+        self._slots: List[Optional[_SlotState]] = [None] * n_slots
+        self._waiting: collections.deque = collections.deque()
+        self.records: Dict[int, RequestRecord] = {}
+
+    # -- queue side ----------------------------------------------------------
+    def submit(self, req: Request, now: float = 0.0) -> RequestRecord:
+        if req.rid in self.records:
+            raise ValueError(f"duplicate request id {req.rid}")
+        rec = RequestRecord(rid=req.rid, prompt_len=req.prompt.shape[0],
+                            max_new=req.max_new, submit_s=now)
+        self.records[req.rid] = rec
+        self._waiting.append(req)
+        return rec
+
+    def admit(self) -> List[Tuple[int, Request]]:
+        """Move waiting requests into free slots (FIFO), immediately and
+        exhaustively: afterwards a free slot implies an empty queue.
+        Returns the new (slot, request) assignments — the caller prefills
+        them and records their first token via :meth:`record_token`."""
+        placed = []
+        for i in range(self.n_slots):
+            if self._slots[i] is not None or not self._waiting:
+                continue
+            req = self._waiting.popleft()
+            self._slots[i] = _SlotState(req, self.records[req.rid])
+            placed.append((i, req))
+        return placed
+
+    # -- decode side ---------------------------------------------------------
+    def record_token(self, slot: int, token: int,
+                     now: float = 0.0) -> Optional[RequestRecord]:
+        """Append one decoded token to the request owning ``slot``.  Evicts
+        the slot (returning the finished record) on EOS or length; returns
+        None while the request keeps running."""
+        st = self._slots[slot]
+        if st is None:
+            raise ValueError(f"token recorded for free slot {slot}")
+        st.record.tokens.append(int(token))
+        st.n_generated += 1
+        if st.record.first_token_s is None:
+            st.record.first_token_s = now
+        hit_eos = self.eos is not None and int(token) == self.eos
+        if hit_eos or st.n_generated >= st.req.max_new:
+            st.record.finish = "eos" if hit_eos else "length"
+            st.record.done_s = now
+            self._slots[slot] = None
+            return st.record
+        return None
+
+    # -- views ---------------------------------------------------------------
+    def active_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s is not None]
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s is None]
+
+    def slot_request(self, slot: int) -> Optional[Request]:
+        st = self._slots[slot]
+        return st.req if st is not None else None
+
+    def position(self, slot: int) -> int:
+        st = self._slots[slot]
+        if st is None:
+            raise ValueError(f"position of free slot {slot}")
+        return st.position
+
+    def last_token(self, slot: int) -> int:
+        """The token the slot's request decodes *from* next step (its most
+        recently generated token)."""
+        st = self._slots[slot]
+        if st is None or not st.record.tokens:
+            raise ValueError(f"no generated token in slot {slot}")
+        return st.record.tokens[-1]
+
+    @property
+    def n_waiting(self) -> int:
+        return len(self._waiting)
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self.free_slots())
+
+    @property
+    def outstanding(self) -> int:
+        """Queued + in-flight — the router's least-outstanding load signal."""
+        return self.n_waiting + self.n_active
+
+    @property
+    def idle(self) -> bool:
+        return self.n_active == 0 and self.n_waiting == 0
+
+    def check_invariants(self) -> None:
+        """Assert the slot/bookkeeping invariants (used by tests)."""
+        owners = [s.req.rid for s in self._slots if s is not None]
+        assert len(owners) == len(set(owners)), "request owns two slots"
+        waiting = [r.rid for r in self._waiting]
+        assert not set(owners) & set(waiting), "request both active+waiting"
+        for s in self._slots:
+            if s is None:
+                continue
+            assert s.record is self.records[s.req.rid]
+            assert not s.record.done, "finished request still holds a slot"
+            assert s.n_generated == len(s.record.tokens) < s.req.max_new

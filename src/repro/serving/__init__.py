@@ -1,3 +1,5 @@
-from repro.serving.engine import GenerationEngine
+from repro.serving.engine import (GenerationEngine, GenResult, SlotDecoder,
+                                  valid_token_count)
 from repro.serving.pipeline import (PartitionedCNNRunner, PartitionedLMRunner,
+                                    def4_throughput, link_transfer_bytes,
                                     pipeline_report)

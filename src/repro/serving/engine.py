@@ -1,8 +1,16 @@
 """Batched generation engine: prefill + decode against KV/SSM caches.
 
-Static-slot continuous batching lite: a wave of requests is prefillled
-together (right-padded), then decoded in lockstep; finished sequences are
-masked.  Greedy or temperature sampling.
+Two execution modes:
+
+* :class:`GenerationEngine` — static-slot continuous batching lite: a wave
+  of requests is prefilled together (right-padded), then decoded in
+  lockstep; finished sequences are masked.  Greedy or temperature sampling.
+  This is the *serial reference* the ``repro.serve`` runtime is checked
+  against (byte-identical greedy tokens).
+* :class:`SlotDecoder` — the slot API under ``repro.serve`` continuous
+  batching: every slot is an independent batch=1 cache lane with its own
+  write position, decoded together via one vmapped+jitted step, so
+  per-request admission/eviction never shares cache state across requests.
 """
 
 from __future__ import annotations
@@ -15,16 +23,32 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def valid_token_count(tokens: np.ndarray, eos: Optional[int]) -> int:
+    """Pre-EOS token count over a (B, T) generation: per row, tokens
+    strictly before the first ``eos`` (all T when the row never stopped).
+    The throughput-accounting denominator — lockstep decoding keeps
+    emitting (masked) tokens for finished rows and those must not count."""
+    tokens = np.asarray(tokens)
+    if eos is None or tokens.size == 0:
+        return int(tokens.size)
+    hit = tokens == eos
+    first = np.where(hit.any(axis=1), hit.argmax(axis=1), tokens.shape[1])
+    return int(first.sum())
+
+
 @dataclasses.dataclass
 class GenResult:
     tokens: np.ndarray          # (B, T_new)
     prefill_s: float = 0.0
     decode_s: float = 0.0
+    n_valid: Optional[int] = None   # pre-EOS tokens (None: all count)
 
     @property
     def tokens_per_s(self) -> float:
-        n = self.tokens.size
-        return n / self.decode_s if self.decode_s > 0 else float("inf")
+        if self.decode_s <= 0:
+            return 0.0
+        n = self.tokens.size if self.n_valid is None else self.n_valid
+        return n / self.decode_s
 
 
 class GenerationEngine:
@@ -67,6 +91,9 @@ class GenerationEngine:
                 nxt = cur.argmax(-1)
             nxt = np.asarray(nxt).astype(np.int32)
             if eos is not None:
+                # already-done rows are masked to eos: they keep decoding in
+                # lockstep but stop contributing (real) tokens
+                nxt = np.where(done, eos, nxt).astype(np.int32)
                 done |= nxt == eos
             out.append(nxt)
             if eos is not None and done.all():
@@ -76,5 +103,71 @@ class GenerationEngine:
             cur = logits[:, -1]
         jax.block_until_ready(cur)
         t2 = time.perf_counter()
-        return GenResult(np.stack(out, axis=1), prefill_s=t1 - t0,
-                         decode_s=t2 - t1)
+        tokens = np.stack(out, axis=1)
+        return GenResult(tokens, prefill_s=t1 - t0, decode_s=t2 - t1,
+                         n_valid=valid_token_count(tokens, eos))
+
+
+def _bump_pos(cache):
+    """Sentinel variant of a fresh cache: ``pos`` advanced past one zero
+    key/value row so a never-admitted lane still has >= 1 visible cache
+    entry — an all-masked attention row softmaxes to NaN otherwise."""
+    if isinstance(cache, dict):
+        return {k: (v + 1 if k == "pos" else _bump_pos(v))
+                for k, v in cache.items()}
+    return cache
+
+
+class SlotDecoder:
+    """Per-slot KV caches + one vmapped decode step (the engine slot API).
+
+    Each of the ``n_slots`` lanes is a batch=1 cache pytree with its own
+    write position; :meth:`decode` advances every lane in one jitted
+    program (idle lanes compute garbage that is never sampled — the fixed
+    cost of static-slot continuous batching), while :meth:`prefill`
+    replaces a single lane's cache wholesale with a freshly prefilled one,
+    so no token of an evicted request can leak into its successor.
+    """
+
+    def __init__(self, model, params, n_slots: int, max_seq: int,
+                 cache_dtype=jnp.float32, impl: str = "ref"):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.cache_dtype = cache_dtype
+        idle = _bump_pos(model.init_caches(1, max_seq, cache_dtype))
+        self.caches = jax.tree_util.tree_map(
+            lambda x: jnp.stack([x] * n_slots), idle)
+        self._idle = idle
+        self._decode = jax.jit(jax.vmap(
+            lambda p, c, t: model.decode_step(p, c, {"tokens": t}, impl=impl),
+            in_axes=(None, 0, 0)))
+        # compiles once per distinct prompt length (documented cost: the
+        # synthetic traffic generators emit fixed-length prompts)
+        self._prefill = jax.jit(
+            lambda p, c, t: model.decode_step(p, c, {"tokens": t}, impl=impl))
+
+    def prefill(self, slot: int, prompt: np.ndarray) -> np.ndarray:
+        """Admit a prompt (T,) into ``slot``: fresh lane cache, full-prompt
+        prefill, cache written back.  Returns the last-position logits."""
+        fresh = self.model.init_caches(1, self.max_seq, self.cache_dtype)
+        toks = jnp.asarray(prompt, jnp.int32)[None]
+        logits, new = self._prefill(self.params, fresh, toks)
+        self.caches = jax.tree_util.tree_map(
+            lambda full, one: full.at[slot].set(one), self.caches, new)
+        return np.asarray(logits[0, -1])
+
+    def free(self, slot: int) -> None:
+        """Reset a lane to the idle sentinel (eviction hygiene — admission
+        via :meth:`prefill` overwrites the lane anyway)."""
+        self.caches = jax.tree_util.tree_map(
+            lambda full, one: full.at[slot].set(one), self.caches, self._idle)
+
+    def decode(self, tokens: np.ndarray) -> np.ndarray:
+        """One decode step for every lane. ``tokens``: (n_slots,) int32 —
+        idle lanes get a dummy token whose logits the caller ignores.
+        Returns (n_slots, vocab) logits."""
+        toks = jnp.asarray(tokens, jnp.int32)[:, None, None]
+        logits, self.caches = self._decode(self.params, self.caches, toks)
+        return np.asarray(logits[:, 0, -1])

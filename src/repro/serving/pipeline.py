@@ -21,6 +21,17 @@ import jax.numpy as jnp
 from repro.core.quant import QuantSpec, quantize_pytree, quantize_tensor
 
 
+def def4_throughput(stage_latencies: Sequence[float],
+                    link_latencies: Sequence[float] = ()) -> float:
+    """Def. 4: steady-state pipeline throughput is set by the slowest
+    module — ``1 / max(stage latencies, link latencies)``.  The single
+    shared implementation behind :meth:`StageReport.throughput`,
+    :func:`pipeline_report` and the ``repro.serve`` measured-vs-predicted
+    gate (``benchmarks/serve_bench.py``)."""
+    mods = [t for t in list(stage_latencies) + list(link_latencies) if t > 0]
+    return 1.0 / max(mods) if mods else 0.0
+
+
 @dataclasses.dataclass
 class StageReport:
     latency_s: List[float]
@@ -28,18 +39,14 @@ class StageReport:
 
     def throughput(self, link_latency_s: Optional[List[float]] = None) -> float:
         """Def. 4 with measured stage latencies."""
-        mods = [t for t in self.latency_s if t > 0]
-        if link_latency_s:
-            mods += [t for t in link_latency_s if t > 0]
-        return 1.0 / max(mods) if mods else 0.0
+        return def4_throughput(self.latency_s, link_latency_s or ())
 
 
 def pipeline_report(stage_latencies: Sequence[float],
                     link_latencies: Sequence[float]) -> Dict[str, float]:
     lat = sum(stage_latencies) + sum(link_latencies)
-    mods = [t for t in list(stage_latencies) + list(link_latencies) if t > 0]
-    th = 1.0 / max(mods) if mods else 0.0
-    return {"latency_s": lat, "throughput": th}
+    return {"latency_s": lat,
+            "throughput": def4_throughput(stage_latencies, link_latencies)}
 
 
 def link_transfer_bytes(n_elems: int, spec: Optional[QuantSpec]) -> int:
@@ -163,3 +170,82 @@ class PartitionedLMRunner:
         x = rms_norm(x, p["final_norm"])
         logits = m._head(p, x)
         return logits, StageReport(lat, link_bytes)
+
+    # -- step-wise stage interface (the repro.serve execution layer) ---------
+    #
+    # ``forward`` above runs the whole pipeline lockstep inside one call;
+    # the serve runtime instead drives each stage independently (thread per
+    # stage, one decode step at a time), so it needs the stage as a *pure
+    # function* over explicit weights/caches it can jit and vmap itself.
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.ranges)
+
+    def stage_weights(self, si: int):
+        """Parameter subtree stage ``si`` owns: its (possibly weight-fake-
+        quantized) block slice, plus the embedding on stage 0 and the final
+        norm + head on the last stage (the embedding again when tied)."""
+        a, b = self.ranges[si]
+        blocks = self._stage_blocks(a, b)
+        spec = self.quant_specs[si]
+        if spec is not None:
+            blocks = quantize_pytree(blocks, spec)
+        w = {"blocks": blocks}
+        cfg = self.model.cfg
+        last = si == self.n_stages - 1
+        if si == 0 or (last and cfg.tied_embeddings):
+            w["embed"] = self.params["embed"]
+        if last:
+            w["final_norm"] = self.params["final_norm"]
+            if not cfg.tied_embeddings:
+                w["head"] = self.params["head"]
+        return w
+
+    def init_stage_caches(self, si: int, batch: int, capacity: int,
+                          dtype=jnp.float32):
+        """Fresh decode caches for stage ``si``'s layer range (leading layer
+        axis, ``pos`` = 0)."""
+        a, b = self.ranges[si]
+        full = self.model.init_caches(batch, capacity, dtype)
+        return jax.tree_util.tree_map(lambda x: x[a:b], full["dense"])
+
+    def stage_step_fn(self, si: int):
+        """Pure ``(weights, caches, x) -> (out, new_caches)`` for one
+        prefill/decode step of stage ``si`` — the caller jits it (and vmaps
+        it over independent per-slot cache lanes for continuous batching).
+
+        Stage 0 takes ``x`` as int32 tokens (B, T) and embeds them; later
+        stages take the predecessor's activations (B, T, D).  The last
+        stage applies the final norm + head and returns logits.  Token
+        positions are derived from the cache write position exactly like
+        ``DecoderLM.decode_step``, so per-lane caches admitted at different
+        times decode at their own positions.
+        """
+        cfg = self.model.cfg
+        assert cfg.family == "dense" and self.model.n_moe == 0, \
+            "step-wise stage serving supports dense scan stacks"
+        assert self.ranges[si][1] > self.ranges[si][0], \
+            f"stage {si} owns no blocks (cuts {self.cuts})"
+        from repro.models.decoder import _scan_blocks
+        from repro.nn.layers import rms_norm
+        block = self.model.dense_block
+        first, last = si == 0, si == self.n_stages - 1
+        tied = cfg.tied_embeddings
+
+        def fn(weights, caches, x):
+            if first:
+                x = jnp.take(weights["embed"], x, axis=0)
+            b, t, _ = x.shape
+            pos0 = caches["pos"][0]
+            positions = jnp.broadcast_to(
+                (pos0[None, None] + jnp.arange(t)[None, :]).astype(jnp.int32),
+                (b, t))
+            x, new_caches, _ = _scan_blocks(block, weights["blocks"], x,
+                                            positions, caches=caches)
+            if last:
+                x = rms_norm(x, weights["final_norm"])
+                head = weights["embed"].T if tied else weights["head"]
+                x = x @ head
+            return x, new_caches
+        return fn

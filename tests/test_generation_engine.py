@@ -1,0 +1,101 @@
+"""GenerationEngine behavior: EOS early-stop, sampling determinism,
+masked-done sequences, and pre-EOS throughput accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.registry import build_model, get_config
+from repro.serving.engine import GenResult, GenerationEngine, valid_token_count
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, b=3, t=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab, size=(b, t)).astype(np.int32)
+
+
+def test_valid_token_count():
+    toks = np.array([[3, 7, 7, 7],      # eos at 1 -> 1 valid
+                     [1, 2, 3, 7],      # eos at 3 -> 3 valid
+                     [1, 2, 3, 4]])     # never stopped -> 4 valid
+    assert valid_token_count(toks, eos=7) == 8
+    assert valid_token_count(toks, eos=None) == 12
+    assert valid_token_count(np.zeros((0, 4), np.int32), eos=7) == 0
+
+
+def test_tokens_per_s_zero_decode_and_pre_eos():
+    r = GenResult(tokens=np.ones((2, 4), np.int32), decode_s=0.0)
+    assert r.tokens_per_s == 0.0        # not inf
+    r = GenResult(tokens=np.ones((2, 4), np.int32), decode_s=2.0, n_valid=6)
+    assert r.tokens_per_s == pytest.approx(3.0)
+    r = GenResult(tokens=np.ones((2, 4), np.int32), decode_s=2.0)
+    assert r.tokens_per_s == pytest.approx(4.0)   # n_valid None: all count
+
+
+def test_eos_early_stop_and_masked_done(lm):
+    cfg, model, params = lm
+    eng = GenerationEngine(model, params, max_seq=40,
+                           cache_dtype=jnp.float32)
+    prompts = _prompts(cfg)
+    free = eng.generate(prompts, max_new=8)          # no EOS: full budget
+    assert free.tokens.shape == (3, 8)
+    # use row 0's second greedy token as EOS: that row must stop early and
+    # every position after its first EOS must be masked to EOS
+    eos = int(free.tokens[0, 1])
+    res = eng.generate(prompts, max_new=8, eos=eos)
+    toks = res.tokens
+    assert toks.shape[1] <= 8
+    for row in toks:
+        hits = np.flatnonzero(row == eos)
+        if hits.size:
+            assert (row[hits[0]:] == eos).all()      # masked-done tail
+    assert res.n_valid == valid_token_count(toks, eos)
+    assert res.n_valid < toks.size                   # row 0 stopped early
+    # greedy tokens before the stop are unchanged by the EOS setting
+    np.testing.assert_array_equal(toks[:, 0], free.tokens[:, 0])
+
+
+def test_greedy_and_temperature_determinism(lm):
+    cfg, model, params = lm
+    eng = GenerationEngine(model, params, max_seq=40,
+                           cache_dtype=jnp.float32)
+    prompts = _prompts(cfg)
+    a = eng.generate(prompts, max_new=6)
+    b = eng.generate(prompts, max_new=6)
+    np.testing.assert_array_equal(a.tokens, b.tokens)     # greedy: exact
+    t1 = eng.generate(prompts, max_new=6, temperature=0.8, seed=1)
+    t2 = eng.generate(prompts, max_new=6, temperature=0.8, seed=1)
+    np.testing.assert_array_equal(t1.tokens, t2.tokens)   # same seed: exact
+    t3 = eng.generate(prompts, max_new=6, temperature=0.8, seed=2)
+    assert (t1.tokens != t3.tokens).any()                 # seed changes draw
+
+
+def test_all_done_stops_decoding(lm):
+    """Once every row hit EOS the loop exits early: the token matrix is
+    narrower than the budget."""
+    cfg, model, params = lm
+    eng = GenerationEngine(model, params, max_seq=40,
+                           cache_dtype=jnp.float32)
+    prompts = _prompts(cfg, b=2)
+    free = eng.generate(prompts, max_new=10)
+    eos = int(free.tokens[0, 0])
+    if int(free.tokens[1, 0]) != eos:
+        # force both rows to stop on their own first token by running
+        # per-row: each single-row batch stops at width 1
+        for row in range(2):
+            res = eng.generate(prompts[row:row + 1], max_new=10,
+                               eos=int(free.tokens[row, 0]))
+            assert res.tokens.shape == (1, 1)
+            assert res.n_valid == 0
+    else:
+        res = eng.generate(prompts, max_new=10, eos=eos)
+        assert res.tokens.shape == (2, 1)
