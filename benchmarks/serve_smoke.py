@@ -8,7 +8,8 @@ three ways — async pipeline, serial-handoff baseline, and the monolithic
 * greedy tokens are byte-identical across all three executors, including
   the EOS-eviction path (the EOS id is taken from a real greedy
   continuation so some sequences stop early and their slots backfill);
-* async throughput >= the serial-handoff baseline.
+* async throughput >= 0.9x the serial-handoff baseline (noise headroom;
+  the strict >=1.5x speedup gate lives in ``serve_bench``).
 
   PYTHONPATH=src python benchmarks/serve_smoke.py
 """
@@ -90,8 +91,11 @@ def main() -> int:
           f"(x{asy / max(ser, 1e-9):.2f}), eos={eos}, "
           f"{N_REQUESTS} requests, 0 dropped" if not fail else
           f"serve_smoke: serial={ser:.0f} async={asy:.0f}")
-    if asy < ser:
-        fail.append(f"async throughput {asy:.0f} tok/s below serial "
+    # correctness smoke, not a perf gate: on this 2-stage chain only link
+    # time overlaps, so allow noise headroom on a shared runner — the
+    # strict >=1.5x speedup check lives in serve_bench's deeper chain
+    if asy < 0.9 * ser:
+        fail.append(f"async throughput {asy:.0f} tok/s below 0.9x serial "
                     f"baseline {ser:.0f} tok/s")
 
     for msg in fail:

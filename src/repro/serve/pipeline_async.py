@@ -234,8 +234,13 @@ class PipelineServeEngine:
         self.runner = runner
         self.n_stages = runner.n_stages
         self.n_groups = n_groups or self.n_stages
-        self.lanes = max(1, n_slots // self.n_groups)
-        self.n_slots = self.lanes * self.n_groups
+        if n_slots < self.n_groups or n_slots % self.n_groups:
+            raise ValueError(
+                f"n_slots={n_slots} must be a positive multiple of "
+                f"n_groups={self.n_groups} (each wave holds "
+                f"n_slots // n_groups cache lanes)")
+        self.lanes = n_slots // self.n_groups
+        self.n_slots = n_slots
         self.eos = eos
         self.temperature = temperature
         self.seed = seed
@@ -436,49 +441,63 @@ class PipelineServeEngine:
                     req = sched.slot_request(slot)
                     if req is None:
                         continue
-                    step = len(sched.records[req.rid].tokens)
-                    tok = self._sample(logits[lane, 0, -1], req.rid, step)
+                    rec = sched.records[req.rid]
+                    if not rec.tokens:
+                        # Admitted into a free lane after this wave was
+                        # dispatched (streaming arrival): these logits
+                        # predate the request — its first token comes from
+                        # its in-flight prefill.  Lanes genuinely in the
+                        # wave always have >=1 token, because decode
+                        # dispatch requires pending_prefill[g] == 0.
+                        continue
+                    tok = self._sample(logits[lane, 0, -1], req.rid,
+                                       len(rec.tokens))
                     sched.record_token(slot, tok, now())
 
-        while True:
-            if self._errors:
-                raise RuntimeError("serve worker failed") from self._errors[0]
-            admit_and_dispatch()
-            try:
-                item = done.get(timeout=0.002)
-            except queue.Empty:
-                item = None
-            got_any = False
-            while item is not None:                # drain the whole burst
-                if item is not _STOP:
-                    handle(item)
-                    got_any = True
+        try:
+            while True:
+                if self._errors:
+                    raise RuntimeError(
+                        "serve worker failed") from self._errors[0]
+                admit_and_dispatch()
                 try:
-                    item = done.get_nowait()
+                    item = done.get(timeout=0.002)
                 except queue.Empty:
                     item = None
-            if got_any:
-                admit_and_dispatch()
-            if (stream.closed and sched.idle and not any(in_flight)
-                    and not any(pending_prefill)):
-                break
-            if now() > max_wall_s:
-                raise TimeoutError(
-                    f"serve run exceeded {max_wall_s}s "
-                    f"({sched.outstanding} request(s) outstanding)")
-        wall = now()
-        if self.mode == "async":
-            self._qs[0].put(_STOP)
-            for t in self._threads:
-                t.join(timeout=10.0)
+                got_any = False
+                while item is not None:            # drain the whole burst
+                    if item is not _STOP:
+                        handle(item)
+                        got_any = True
+                    try:
+                        item = done.get_nowait()
+                    except queue.Empty:
+                        item = None
+                if got_any:
+                    admit_and_dispatch()
+                if (stream.closed and sched.idle and not any(in_flight)
+                        and not any(pending_prefill)):
+                    break
+                if now() > max_wall_s:
+                    raise TimeoutError(
+                        f"serve run exceeded {max_wall_s}s "
+                        f"({sched.outstanding} request(s) outstanding)")
+            wall = now()
+        finally:
+            # error/timeout exits must not leak worker threads (blocked in
+            # _PrioQueue.get) or leave the router seeing stale outstanding
+            # load for a dead replica
+            self._sched = None
+            if self.mode == "async":
+                self._qs[0].put(_STOP)
+                for t in self._threads:
+                    t.join(timeout=10.0)
         self._finalize_stats(wall, decode_done_t)
         for rec in sched.records.values():
             rec.replica = self.name
-        report = ServeReport(records=list(sched.records.values()),
-                             wall_s=wall, eos=self.eos,
-                             extra=dict(self.stats))
-        self._sched = None
-        return report
+        return ServeReport(records=list(sched.records.values()),
+                           wall_s=wall, eos=self.eos,
+                           extra=dict(self.stats))
 
     def _finalize_stats(self, wall: float, decode_done_t: List[float]):
         """Measured step rate vs the Def.-4 prediction from per-stage /

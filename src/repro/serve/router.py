@@ -57,12 +57,17 @@ class ReplicaRouter:
         t0 = time.perf_counter()
         sent = [0] * len(self.replicas)
         for req in sorted(requests, key=lambda r: r.arrival_s):
+            if errors:
+                break          # a replica died — surface its error below
             if realtime:
                 lag = req.arrival_s - (time.perf_counter() - t0)
                 if lag > 0:
                     time.sleep(lag)
             i = self._pick(sent)
-            streams[i].push(req)
+            try:
+                streams[i].push(req)
+            except ValueError:
+                break          # run_replica closed the stream on failure
             sent[i] += 1
         for s in streams:
             s.close()

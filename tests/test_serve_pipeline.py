@@ -1,15 +1,20 @@
 """repro.serve runtime: Def.-4 helper, step-wise stage interface,
 SlotDecoder isolation, async-vs-serial token equality, replica routing."""
 
+import threading
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.link import LinkModel
 from repro.explore import lm_block_cuts
 from repro.models.registry import build_model, get_config
 from repro.serve import (PipelineServeEngine, ReplicaRouter, Request,
-                         poisson_traffic, stream_of)
+                         RequestStream, ServeLink, poisson_traffic,
+                         stream_of)
 from repro.serving.engine import GenerationEngine, SlotDecoder
 from repro.serving.pipeline import PartitionedLMRunner, def4_throughput
 
@@ -137,6 +142,68 @@ def test_async_serial_and_engine_tokens_identical(runner, lm):
         if eos in row:
             row = row[:row.index(eos) + 1]
         assert outs["async"][r.rid] == row, f"rid {r.rid} diverged"
+
+
+def test_streaming_arrival_tokens_identical(runner, lm):
+    """Requests arriving while a decode wave is already in flight
+    (router-style streaming pushes, not a pre-closed burst) must not pick
+    up a spurious first token from the stale wave's logits: every
+    request's token stream still equals the monolithic greedy reference."""
+    cfg, model, params = lm
+    rng = np.random.default_rng(5)
+    prompts = rng.integers(0, cfg.vocab, size=(4, 6)).astype(np.int32)
+    eng = GenerationEngine(model, params, max_seq=32,
+                           cache_dtype=jnp.float32)
+    ref = eng.generate(prompts, max_new=6)
+
+    # the slow link keeps each decode wave "on the wire" ~50 ms, so the
+    # pushes below almost surely land while a wave is in flight
+    slow = LinkModel(name="slow", rate_bps=1e9, t_setup_s=0.05)
+    for mode in ("serial", "async"):
+        # 2 lanes, 1 wave: request 0 decodes with a free lane in its wave,
+        # so later arrivals land mid-flight in that wave's free lane
+        e = PipelineServeEngine(runner, n_slots=2, n_groups=1, eos=None,
+                                mode=mode, capacity=32,
+                                links=[ServeLink(model=slow)])
+        e.warmup(prompt_len=6)
+        stream = RequestStream()
+        stream.push(Request(0, prompts[0], 6, 0.0))
+        out = {}
+        t = threading.Thread(
+            target=lambda: out.update(rep=e.run(stream, max_wall_s=120.0)))
+        t.start()
+        for rid in range(1, 4):
+            time.sleep(0.06)               # land mid-wave, unaligned
+            stream.push(Request(rid, prompts[rid], 6, 0.0))
+        stream.close()
+        t.join(timeout=120.0)
+        rep = out["rep"]
+        assert rep.n_done == 4
+        toks = {r.rid: r.tokens for r in rep.records}
+        for rid in range(4):
+            assert toks[rid] == list(ref.tokens[rid]), (mode, rid)
+
+
+def test_n_slots_must_divide_into_groups(runner):
+    with pytest.raises(ValueError, match="multiple of"):
+        PipelineServeEngine(runner, n_slots=8, n_groups=3)
+    with pytest.raises(ValueError, match="multiple of"):
+        PipelineServeEngine(runner, n_slots=2, n_groups=4)
+
+
+def test_router_surfaces_replica_failure(runner):
+    """A dying replica's root-cause error must come back from serve() —
+    not a masking ValueError from pushing to its closed stream."""
+    class Boom(PipelineServeEngine):
+        def run(self, stream, max_wall_s=120.0):
+            raise RuntimeError("replica exploded")
+
+    reqs = [Request(i, np.zeros(4, np.int32), 2, float(i) * 0.01)
+            for i in range(6)]
+    bad = Boom(runner, n_slots=2, n_groups=1, mode="serial", capacity=32)
+    with pytest.raises(RuntimeError, match="replica failed") as ei:
+        ReplicaRouter([bad]).serve(reqs, realtime=True, max_wall_s=5.0)
+    assert "replica exploded" in str(ei.value.__cause__)
 
 
 def test_router_least_outstanding(runner, lm):
