@@ -52,8 +52,8 @@ from typing import Optional, Tuple
 
 HIGHER_BETTER = ("batch_evals_per_s", "nsga_evals_per_s",
                  "jit_nsga_evals_per_s", "jit_nsga_scale_evals_per_s",
-                 "serve_tokens_per_s")
-LOWER_BETTER = ("campaign_wall_s", "fleet_sweep_wall_s")
+                 "serve_tokens_per_s", "repartition_warm_speedup")
+LOWER_BETTER = ("campaign_wall_s", "fleet_sweep_wall_s", "repartition_ms")
 
 
 def load(path: str) -> Optional[dict]:

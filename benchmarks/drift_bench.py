@@ -1,0 +1,153 @@
+"""Online re-partitioning benchmark: warm re-search vs cold compile+search.
+
+The online drift story (``repro.explore.online``) claims a re-partition
+after a link degradation or node dropout costs *milliseconds*, not the
+seconds a cold search pays for XLA compilation.  This bench measures both
+ends on the paper's 4-platform chain (2×EYR + 2×SMB over GigE) with
+EfficientNet-B0:
+
+* **cold** — a fresh :class:`OnlineRepartitioner` with an empty compiled-
+  runner cache: model resolution, candidate filtering, XLA trace+compile
+  of the whole NSGA-II program and the first search.  This is what every
+  perturbed system used to cost before table values became runtime
+  arguments.
+* **warm** — a stream of same-shape perturbations (degraded links, one
+  node dropout) through the same repartitioner: the compiled runner is
+  reused (cache size must stay 1 — asserted) and each search warm-starts
+  from the previous front.  ``repartition_ms`` is the median decision
+  wall.
+
+``repartition_warm_speedup = cold_ms / repartition_ms`` is merged into
+``BENCH_explorer.json`` (schema 6) so ``compare_bench.py`` gates it against
+the committed floor and the trend dashboard plots ``repartition_ms``;
+``--min-warm-speedup`` makes this run itself the hard ≥ 20× gate in CI.
+
+  PYTHONPATH=src python benchmarks/drift_bench.py              # full
+  PYTHONPATH=src python benchmarks/drift_bench.py --quick      # CI mode
+  ... --min-warm-speedup 20    # gate: cold/warm wall ratio
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import chain_system_spec, csv_row
+from repro.explore import (ExplorationSpec, ModelRef, OnlineRepartitioner,
+                           SearchSettings, clear_jit_runner_cache,
+                           degrade_link, drop_node, jit_runner_cache_size)
+from repro.utils.atomicio import atomic_write_json
+
+BENCH_SCHEMA = 6
+DRIFT_MODEL = "efficientnet_b0"
+
+
+def drift_spec(pop: int, n_gen: int) -> ExplorationSpec:
+    """EfficientNet-B0 on the §V-C 4-platform chain, jit_nsga2 search."""
+    return ExplorationSpec(
+        model=ModelRef("cnn", DRIFT_MODEL, {"in_hw": 64}),
+        system=chain_system_spec(),
+        objectives=("latency", "energy", "throughput"),
+        search=SearchSettings(strategy="jit_nsga2", seed=0,
+                              pop_size=pop, n_gen=n_gen))
+
+
+def drift_stream(base, n_events: int):
+    """Deterministic perturbation schedule: progressive link degradation
+    round-robin over the chain's links, with one node dropout mixed in."""
+    events = []
+    for i in range(n_events):
+        if i == n_events // 2:
+            events.append(drop_node(base, len(base.platforms) - 2))
+        else:
+            link = i % len(base.links)
+            events.append(degrade_link(base, link, 2.0 ** (1 + i // 2)))
+    return events
+
+
+def bench_drift(pop: int, n_gen: int, n_events: int) -> dict:
+    spec = drift_spec(pop, n_gen)
+
+    clear_jit_runner_cache()
+    t0 = time.perf_counter()
+    rp = OnlineRepartitioner(spec)
+    first = rp.update(spec.system)
+    cold_s = time.perf_counter() - t0
+    assert jit_runner_cache_size() == 1, "cold search must compile once"
+    print(csv_row("drift_cold", cold_s * 1e6,
+                  f"cuts={first.cuts};pareto={first.pareto_size}"))
+
+    warm_ms = []
+    n_changed = 0
+    for event in drift_stream(spec.system, n_events):
+        d = rp.update(event)
+        warm_ms.append(d.repartition_ms)
+        n_changed += int(d.changed)
+        print(csv_row("drift_warm", d.repartition_ms * 1e3,
+                      f"label={d.label};cuts={d.cuts};changed={d.changed};"
+                      f"feasible={d.feasible}"))
+    assert jit_runner_cache_size() == 1, (
+        f"warm re-searches recompiled: cache={jit_runner_cache_size()}")
+
+    med_ms = statistics.median(warm_ms)
+    speedup = (cold_s * 1e3) / med_ms
+    print(csv_row("drift_summary", 0.0,
+                  f"cold_ms={cold_s * 1e3:.0f};warm_ms={med_ms:.1f};"
+                  f"speedup=x{speedup:.0f};changed={n_changed}/{n_events}"))
+    return {
+        "repartition_warm_speedup": round(speedup, 1),
+        "repartition_ms": round(med_ms, 2),
+        "repartition_cold_ms": round(cold_s * 1e3, 1),
+        "repartition_events": n_events,
+        "repartition_changed": n_changed,
+        "repartition_model": DRIFT_MODEL,
+    }
+
+
+def merge_bench_json(path: str, keys: dict, *, mode: str) -> None:
+    """Fold repartition_* keys into the explorer bench artifact (creating a
+    minimal one when explorer_bench hasn't run).  An existing artifact
+    keeps its own mode; only a fresh standalone file gets this run's."""
+    out = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            out = json.load(f)
+    out.setdefault("mode", mode)
+    out["bench_schema"] = BENCH_SCHEMA
+    out.update(keys)
+    atomic_write_json(path, out)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller search budget / fewer events for CI")
+    ap.add_argument("--min-warm-speedup", type=float, default=None,
+                    help="fail when cold/warm wall ratio drops below this")
+    ap.add_argument("--json", default="BENCH_explorer.json",
+                    help="artifact to merge repartition_* keys into")
+    args = ap.parse_args()
+
+    pop, n_gen, n_events = (128, 12, 4) if args.quick else (256, 16, 8)
+    keys = bench_drift(pop, n_gen, n_events)
+    merge_bench_json(args.json, keys,
+                     mode="quick" if args.quick else "full")
+    print(f"merged repartition_* into {args.json}")
+
+    if (args.min_warm_speedup is not None
+            and keys["repartition_warm_speedup"] < args.min_warm_speedup):
+        print(f"FAIL: repartition_warm_speedup "
+              f"x{keys['repartition_warm_speedup']} < required "
+              f"x{args.min_warm_speedup}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

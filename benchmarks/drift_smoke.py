@@ -1,0 +1,101 @@
+"""CI smoke test for the online re-partitioning loop (drift-smoke job).
+
+A miniature degradation schedule — three same-shape perturbations of the
+paper chain (two link degradations, one node dropout) — is replayed twice
+through fresh :class:`~repro.explore.online.OnlineRepartitioner` instances.
+Asserts, loudly and with a non-zero exit on failure:
+
+* decisions are **deterministic** — both replays emit identical cut
+  sequences (seeded search, seeded warm-start jitter, no wall-clock in the
+  decision path);
+* ``repartition_ms`` is recorded (> 0) on every decision;
+* the second replay performs **zero recompilation** — the shared compiled-
+  runner cache holds exactly one entry from start to finish, because every
+  perturbed system is same-shape and table values ride in as runtime args;
+* the node-dropout decision routes every layer off the dead platform.
+
+  PYTHONPATH=src python benchmarks/drift_smoke.py
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import chain_system_spec
+from repro.explore import (ExplorationSpec, ModelRef, OnlineRepartitioner,
+                           SearchSettings, clear_jit_runner_cache,
+                           degrade_link, drop_node, jit_runner_cache_size)
+
+N_EVENTS = 3
+
+
+def smoke_spec() -> ExplorationSpec:
+    return ExplorationSpec(
+        model=ModelRef("cnn", "squeezenet11", {"in_hw": 64}),
+        system=chain_system_spec(),
+        objectives=("latency", "energy", "throughput"),
+        search=SearchSettings(strategy="jit_nsga2", seed=0,
+                              pop_size=96, n_gen=10))
+
+
+def run_loop(spec: ExplorationSpec):
+    base = spec.system
+    events = [degrade_link(base, 0, 8.0),
+              degrade_link(base, 2, 64.0),
+              drop_node(base, 1)]
+    rp = OnlineRepartitioner(spec)
+    decisions = [rp.update(base)]
+    decisions += list(rp.watch(events))
+    return decisions
+
+
+def main() -> int:
+    spec = smoke_spec()
+    clear_jit_runner_cache()
+    first = run_loop(spec)
+    cache_after_first = jit_runner_cache_size()
+    second = run_loop(spec)
+    cache_after_second = jit_runner_cache_size()
+
+    fails = []
+    cuts_a = [d.cuts for d in first]
+    cuts_b = [d.cuts for d in second]
+    for d in first:
+        print(f"[drift-smoke] step {d.step} {d.label}: cuts={d.cuts} "
+              f"changed={d.changed} feasible={d.feasible} "
+              f"repartition_ms={d.repartition_ms:.1f}")
+    if cuts_a != cuts_b:
+        fails.append(f"decisions not deterministic: {cuts_a} != {cuts_b}")
+    if not all(d.repartition_ms > 0 for d in first + second):
+        fails.append("repartition_ms missing on a decision")
+    if cache_after_first != 1 or cache_after_second != 1:
+        fails.append(
+            f"expected exactly one compiled runner for {2 * (N_EVENTS + 1)} "
+            f"same-shape re-searches, cache went "
+            f"{cache_after_first} -> {cache_after_second}")
+    dropped = first[-1]
+    if dropped.cuts is not None:
+        # platform 1 is dead: stage 1 (bounds[1]..bounds[2]) must be empty,
+        # i.e. the first two cut genes coincide (or the earlier is -1 ==
+        # "platform skipped")
+        b = [-1] + list(dropped.cuts)
+        if b[2] > b[1]:
+            fails.append(f"dropout decision still uses dead platform 1: "
+                         f"cuts={dropped.cuts}")
+    if not all(d.strategy_used == "jit_nsga2" for d in first + second):
+        fails.append("a decision did not come from the jit_nsga2 strategy")
+
+    for msg in fails:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    if not fails:
+        print(f"[drift-smoke] OK: {len(first)} deterministic decisions, "
+              f"1 compiled runner, median warm "
+              f"{sorted(d.repartition_ms for d in first[1:])[1]:.1f} ms")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -264,8 +264,9 @@ def main() -> int:
     # to diff files whose schemas (and so key semantics) don't match
     # (schema 3 added the pop-32768 jit_nsga_scale_* keys; schema 4 the
     # 2-worker fleet_sweep_wall_s; schema 5 the serve_* keys merged in by
-    # serve_bench.py)
-    out = {"mode": "quick" if args.quick else "full", "bench_schema": 5}
+    # serve_bench.py; schema 6 the repartition_* keys merged in by
+    # drift_bench.py)
+    out = {"mode": "quick" if args.quick else "full", "bench_schema": 6}
     if args.quick:
         speedup = bench_eval_paths(out, n_candidates=1024, scalar_cap=128)
         np_rate = bench_nsga_run(out, pop_size=2048, n_gen=3)

@@ -36,6 +36,7 @@ class LayerGraph:
 
     # -- construction -------------------------------------------------------
     def add(self, layer: LayerInfo, after: Optional[Iterable[str]] = None) -> LayerInfo:
+        """Insert one layer with edges from each ``after`` predecessor."""
         if layer.name in self.nodes:
             raise GraphError(f"duplicate node {layer.name!r}")
         self.nodes[layer.name] = layer
@@ -56,9 +57,11 @@ class LayerGraph:
 
     # -- adjacency ----------------------------------------------------------
     def preds(self, name: str) -> List[str]:
+        """Direct predecessors of ``name`` (edge order)."""
         return [u for (u, v) in self.edges if v == name]
 
     def succs(self, name: str) -> List[str]:
+        """Direct successors of ``name`` (edge order)."""
         return [v for (u, v) in self.edges if u == name]
 
     def _adj(self) -> Tuple[Dict[str, List[str]], Dict[str, int]]:
@@ -74,10 +77,12 @@ class LayerGraph:
 
     @property
     def total_params(self) -> int:
+        """Parameter count summed over every layer."""
         return sum(l.params for l in self.nodes.values())
 
     @property
     def total_macs(self) -> int:
+        """MAC count summed over every layer."""
         return sum(l.macs for l in self.nodes.values())
 
     # -- scheduling (§IV-A) --------------------------------------------------
@@ -177,6 +182,8 @@ class LayerGraph:
         return regions
 
     def validate_schedule(self, schedule: Sequence[LayerInfo]) -> bool:
+        """True iff ``schedule`` is a topological order covering every
+        node exactly once."""
         pos = {l.name: i for i, l in enumerate(schedule)}
         if len(pos) != len(self.nodes):
             return False

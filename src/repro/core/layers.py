@@ -78,6 +78,7 @@ class LayerInfo:
 
     @property
     def flops(self) -> int:
+        """2 x MACs (multiply + accumulate)."""
         return 2 * self.macs
 
     def __repr__(self) -> str:  # compact for exploration logs

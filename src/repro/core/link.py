@@ -29,6 +29,8 @@ class LinkModel:
     e_per_byte_j: float = 0.0       # transceiver energy per byte
 
     def latency_s(self, nbytes: int) -> float:
+        """Transfer wall seconds for ``nbytes``: setup + packetized wire
+        time including per-packet headers (paper Eq. for t_link)."""
         if nbytes <= 0:
             return 0.0
         packets = math.ceil(nbytes / self.payload_bytes)
@@ -36,6 +38,8 @@ class LinkModel:
         return self.t_setup_s + wire_bits / self.rate_bps
 
     def energy_j(self, nbytes: int) -> float:
+        """Transfer energy: TX+RX power over the wall time plus the
+        per-byte transceiver cost."""
         if nbytes <= 0:
             return 0.0
         d = self.latency_s(nbytes)
@@ -122,6 +126,7 @@ LINKS = {
 
 
 def get_link(name: str) -> LinkModel:
+    """Registry lookup: a fresh LinkModel by name ('gige', 'eth10', ...)."""
     try:
         return LINKS[name]()
     except KeyError:

@@ -268,13 +268,19 @@ def _resolve_rank_block(rank_block: Optional[int], pop_size: int) -> int:
 def _make_run(eval_fn: EvalFn, lo: int, hi: int, pop_size: int,
               rank_block: int, rank_impl: str, mesh):
     """The whole-search program (unjitted) shared by the single-seed and
-    vmapped multi-restart runners."""
+    vmapped multi-restart runners.
 
-    def gen_step(carry):
+    ``run(key, X0, n_gen, *eval_args)`` forwards any trailing arguments to
+    every ``eval_fn(X, *eval_args)`` call — that is how runtime-valued
+    evaluation tables (gene table, :class:`~repro.core.partition_jax
+    .EvalTables`) flow through the compiled program without being baked
+    into the trace."""
+
+    def gen_step(carry, eval_args):
         key, X, F, CV, crowd = carry
         key, k_off = jax.random.split(key)
         Xc = make_offspring(k_off, X, F, CV, crowd, lo, hi)
-        Fc, CVc = eval_fn(Xc)
+        Fc, CVc = eval_fn(Xc, *eval_args)
         Xall = jnp.concatenate([X, Xc])
         Fall = jnp.concatenate([F, Fc])
         CVall = jnp.concatenate([CV, CVc])
@@ -287,14 +293,16 @@ def _make_run(eval_fn: EvalFn, lo: int, hi: int, pop_size: int,
         keep = jnp.lexsort((-crowd_all, rank))[:pop_size]
         return key, Xall[keep], Fall[keep], CVall[keep], crowd_all[keep]
 
-    def run(key: Array, X0: Array, n_gen) -> Tuple[Array, Array, Array]:
+    def run(key: Array, X0: Array, n_gen,
+            *eval_args) -> Tuple[Array, Array, Array]:
         X0 = repair(X0, lo, hi)
-        F0, CV0 = eval_fn(X0)
+        F0, CV0 = eval_fn(X0, *eval_args)
         rank0 = nondominated_rank(F0, CV0, rank_block=rank_block,
                                   rank_impl=rank_impl, mesh=mesh)
         crowd0 = crowding_by_rank(F0, rank0)
         carry = (key, X0, F0, CV0, crowd0)
-        carry = lax.fori_loop(0, n_gen, lambda _, c: gen_step(c), carry)
+        carry = lax.fori_loop(0, n_gen,
+                              lambda _, c: gen_step(c, eval_args), carry)
         return carry[1], carry[2], carry[3]
 
     return run
@@ -305,10 +313,14 @@ def make_jit_runner(eval_fn: EvalFn, n_var: int, lower: int, upper: int,
                     rank_impl: str = "auto", mesh=None):
     """Compile the whole NSGA-II run into one XLA program.
 
-    Returns ``run(key, X0, n_gen) -> (X, F, CV)``; ``n_gen`` is a traced
-    loop bound, so one compilation serves any generation budget at a given
-    (pop_size, n_var) shape.  ``X0`` is donated — the population buffers
-    live in place across the generation loop.
+    Returns ``run(key, X0, n_gen, *eval_args) -> (X, F, CV)``; ``n_gen`` is
+    a traced loop bound, so one compilation serves any generation budget at
+    a given (pop_size, n_var) shape.  ``X0`` is donated — the population
+    buffers live in place across the generation loop.  Trailing
+    ``eval_args`` are forwarded to ``eval_fn(X, *eval_args)`` as ordinary
+    (non-donated) runtime arguments: pass value-bearing tables (gene table,
+    ``EvalTables``) here and the same compilation serves every same-shape
+    perturbation of them without retracing.
 
     ``rank_block``/``rank_impl``/``mesh`` select the ranking primitive (see
     :func:`nondominated_rank`): the auto policy keeps the dense packed
@@ -324,18 +336,22 @@ def make_jit_runner(eval_fn: EvalFn, n_var: int, lower: int, upper: int,
 def make_jit_restart_runner(eval_fn: EvalFn, n_var: int, lower: int,
                             upper: int, pop_size: int,
                             rank_block: Optional[int] = None,
-                            rank_impl: str = "auto", mesh=None):
+                            rank_impl: str = "auto", mesh=None,
+                            n_eval_args: int = 0):
     """The ``vmap``-over-seeds twin of :func:`make_jit_runner`.
 
-    Returns ``run(keys, X0s, n_gen)`` over arrays with a leading restart
-    axis — one compilation covers every generation budget at a given
-    (n_restarts, pop_size, n_var) shape, and all restarts advance in
-    lockstep inside a single XLA program.
+    Returns ``run(keys, X0s, n_gen, *eval_args)`` over arrays with a
+    leading restart axis — one compilation covers every generation budget
+    at a given (n_restarts, pop_size, n_var) shape, and all restarts
+    advance in lockstep inside a single XLA program.  ``n_eval_args``
+    declares how many trailing runtime arguments ``eval_fn`` takes; they
+    are broadcast (not mapped) across restarts.
     """
     run = _make_run(eval_fn, lower, upper, pop_size,
                     _resolve_rank_block(rank_block, pop_size), rank_impl,
                     mesh)
-    return jax.jit(jax.vmap(run, in_axes=(0, 0, None)), donate_argnums=(1,))
+    axes = (0, 0, None) + (None,) * n_eval_args
+    return jax.jit(jax.vmap(run, in_axes=axes), donate_argnums=(1,))
 
 
 def _init_population(rng: np.random.Generator, pop_size: int, n_var: int,
@@ -352,23 +368,64 @@ def _init_population(rng: np.random.Generator, pop_size: int, n_var: int,
     return X0
 
 
+def warm_population(rng: np.random.Generator, pop_size: int, n_var: int,
+                    lower: int, upper: int,
+                    warm: Optional[np.ndarray]) -> np.ndarray:
+    """Host-side warm-started population: previous-front rows verbatim,
+    then jitter-mutated copies, then a random tail.
+
+    Layout (all counts deterministic given ``pop_size`` and ``len(warm)``):
+
+    * up to ``pop_size // 2`` rows are ``warm`` rows copied verbatim — the
+      elites the re-search refines;
+    * up to ``pop_size // 4`` rows are elites plus a small integer jitter
+      (uniform in [-2, 2] per gene, clipped to bounds) — local exploration
+      around the previous optimum, where a drifted system's new optimum
+      usually lives;
+    * the remainder is uniform random in [lower, upper] — global escape
+      hatch so a warm start can never trap the search.
+
+    An empty (or ``None``) ``warm`` degenerates to the cold uniform init.
+    """
+    if warm is None:
+        warm = np.empty((0, n_var), dtype=int)
+    warm = np.asarray(warm, dtype=int).reshape(-1, n_var)
+    if len(warm) == 0:
+        return rng.integers(lower, upper + 1, size=(pop_size, n_var))
+    n_elite = min(len(warm), max(pop_size // 2, 1))
+    elite = np.clip(warm[:n_elite], lower, upper)
+    n_jit = min(pop_size - n_elite, pop_size // 4)
+    base = elite[rng.integers(0, n_elite, size=n_jit)]
+    jittered = np.clip(base + rng.integers(-2, 3, size=base.shape),
+                       lower, upper)
+    n_rand = pop_size - n_elite - n_jit
+    rand = rng.integers(lower, upper + 1, size=(n_rand, n_var))
+    return np.concatenate([elite, jittered, rand])[:pop_size]
+
+
 def jit_nsga2(eval_fn: EvalFn, n_var: int, lower: int, upper: int,
               pop_size: int, n_gen: int, seed: int = 0,
               candidates: Optional[Sequence[Sequence[int]]] = None,
-              runner=None) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+              runner=None, X0: Optional[np.ndarray] = None,
+              eval_args: Tuple = ()
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Run the compiled NSGA-II loop; returns host (X, F, CV) arrays.
 
     Population init (including ``candidates`` seeding) matches the NumPy
     :func:`repro.core.nsga2.nsga2` exactly and stays host-side; everything
     after the first device transfer is one XLA program.  Pass a prebuilt
-    ``runner`` (from :func:`make_jit_runner`) to reuse a compilation.
+    ``runner`` (from :func:`make_jit_runner`) to reuse a compilation, an
+    explicit ``X0`` (pop_size, n_var) to override the uniform init (warm
+    starts — see :func:`warm_population`), and ``eval_args`` to forward
+    runtime table values to ``eval_fn``.
     """
-    X0 = _init_population(np.random.default_rng(seed), pop_size, n_var,
-                          lower, upper, candidates)
+    if X0 is None:
+        X0 = _init_population(np.random.default_rng(seed), pop_size, n_var,
+                              lower, upper, candidates)
     if runner is None:
         runner = make_jit_runner(eval_fn, n_var, lower, upper, pop_size)
     X, F, CV = runner(jax.random.PRNGKey(seed),
-                      jnp.asarray(X0, dtype=jnp.int32), n_gen)
+                      jnp.asarray(X0, dtype=jnp.int32), n_gen, *eval_args)
     return (np.asarray(X, dtype=np.int64), np.asarray(F, dtype=np.float64),
             np.asarray(CV, dtype=np.float64))
 
@@ -377,7 +434,8 @@ def jit_nsga2_restarts(eval_fn: EvalFn, n_var: int, lower: int, upper: int,
                        pop_size: int, n_gen: int, n_restarts: int,
                        seed: int = 0,
                        candidates: Optional[Sequence[Sequence[int]]] = None,
-                       runner=None
+                       runner=None, X0s: Optional[np.ndarray] = None,
+                       eval_args: Tuple = ()
                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Multi-restart search: ``n_restarts`` independently seeded runs as one
     vmapped XLA program, compiled once.
@@ -386,18 +444,24 @@ def jit_nsga2_restarts(eval_fn: EvalFn, n_var: int, lower: int, upper: int,
     (same host init stream, same PRNG key), so the merged output's
     non-dominated front equals the union of the per-seed sequential fronts
     after one final non-dominated filter.  Returns host (X, F, CV) with the
-    restart axis flattened to ``n_restarts * pop_size`` rows.
+    restart axis flattened to ``n_restarts * pop_size`` rows.  ``X0s``
+    overrides the per-restart init (shape (n_restarts, pop_size, n_var));
+    ``eval_args`` are broadcast to every restart (the runner must have been
+    built with a matching ``n_eval_args``).
     """
-    X0s = np.stack([
-        _init_population(np.random.default_rng(seed + i), pop_size, n_var,
-                         lower, upper, candidates)
-        for i in range(n_restarts)])
+    if X0s is None:
+        X0s = np.stack([
+            _init_population(np.random.default_rng(seed + i), pop_size,
+                             n_var, lower, upper, candidates)
+            for i in range(n_restarts)])
     keys = jnp.stack([jax.random.PRNGKey(seed + i)
                       for i in range(n_restarts)])
     if runner is None:
         runner = make_jit_restart_runner(eval_fn, n_var, lower, upper,
-                                         pop_size)
-    X, F, CV = runner(keys, jnp.asarray(X0s, dtype=jnp.int32), n_gen)
+                                         pop_size,
+                                         n_eval_args=len(eval_args))
+    X, F, CV = runner(keys, jnp.asarray(X0s, dtype=jnp.int32), n_gen,
+                      *eval_args)
     flat = n_restarts * pop_size
     return (np.asarray(X, dtype=np.int64).reshape(flat, n_var),
             np.asarray(F, dtype=np.float64).reshape(flat, -1),

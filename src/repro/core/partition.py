@@ -40,10 +40,12 @@ class Platform:
 
     @property
     def capacity(self) -> int:
+        """Usable memory bytes: explicit override or the arch default."""
         return self.mem_capacity if self.mem_capacity is not None else self.arch.mem_bytes
 
     @property
     def memory_model(self) -> MemoryModel:
+        """Bytes-per-parameter model implied by the quantization bits."""
         return MemoryModel(bytes_per_param=self.quant.bits / 8.0)
 
 
@@ -58,6 +60,7 @@ class SystemConfig:
 
     @property
     def n_cuts(self) -> int:
+        """Number of cut positions (= platforms - 1)."""
         return len(self.platforms) - 1
 
 
@@ -241,6 +244,8 @@ class PartitionEvaluator:
 
     def evaluate(self, cuts: Sequence[int],
                  constraints: Optional[Constraints] = None) -> PartitionEval:
+        """Score one sorted cut vector: per-stage latency/energy/memory,
+        link costs, Def.-2/3 feasibility, and the composite objectives."""
         L = len(self.schedule)
         cuts = tuple(max(int(c), -1) for c in cuts)
         assert list(cuts) == sorted(cuts), f"cuts must be sorted: {cuts}"

@@ -9,6 +9,15 @@ arrays (:class:`EvalTables`, built by :func:`build_eval_tables` /
 (:func:`make_batch_eval_fn`) so the whole NSGA-II generation loop can run
 inside one ``jax.jit`` program (see ``repro.core.nsga2_jax``).
 
+:class:`EvalTables` is a registered pytree: the table *values* are leaves
+(traced runtime arguments) while the shape-determining statics (``L``,
+``n_cuts``, ``batch``, the accuracy affine knobs) are aux data.  A compiled
+search built by :func:`make_runtime_eval_fn` therefore reruns without any
+retracing when only the values change — degraded links, shrunk memory
+capacities, perturbed cost tables — which is what makes millisecond online
+re-partitioning possible (``repro.explore.online``).  Two tables are
+runner-compatible iff their :meth:`EvalTables.shape_signature` match.
+
 Semantics mirror ``evaluate_batch`` metric-for-metric (tested in
 ``tests/test_jit_nsga2.py``); arithmetic is float32 on-device, so agreement
 is to float32 tolerance rather than bit-exact.
@@ -59,7 +68,51 @@ class EvalTables:
 
     @property
     def supports_accuracy(self) -> bool:
+        """Whether a jittable proxy-accuracy oracle was exported."""
         return self.acc_weight_prefix is not None
+
+    def shape_signature(self) -> Tuple:
+        """Hashable signature of everything that forces a retrace.
+
+        Two :class:`EvalTables` with equal signatures can be fed to the
+        same compiled runner (``make_runtime_eval_fn`` reads only values
+        from the traced leaves): statics, leaf shapes and dtypes all match,
+        so only the table *values* differ between the two programs.
+        """
+        def sig(a):
+            if a is None:
+                return None
+            return (tuple(a.shape), str(a.dtype))
+        return (self.L, self.n_cuts, self.batch,
+                self.acc_base, self.acc_scale,
+                tuple((f, sig(getattr(self, f))) for f in _TABLE_ARRAYS),
+                tuple((sig(pos), sig(par)) for pos, par in self.mem_groups))
+
+
+# pytree registration: array-valued fields are leaves (runtime, traced),
+# shape-determining ints/floats are aux data (static, part of the treedef)
+_TABLE_ARRAYS = (
+    "cost_prefix", "cut_elems", "producer_bpe", "link_rate", "link_setup",
+    "link_payload", "link_header", "link_power", "link_e_byte",
+    "mem_base_prefix", "act_sparse", "bytes_per_param", "bytes_per_act",
+    "capacity", "acc_weight_prefix", "acc_noise")
+_TABLE_STATICS = ("L", "n_cuts", "batch", "acc_base", "acc_scale")
+
+
+def _tables_flatten(t: EvalTables):
+    children = tuple(getattr(t, f) for f in _TABLE_ARRAYS) + (t.mem_groups,)
+    return children, tuple(getattr(t, f) for f in _TABLE_STATICS)
+
+
+def _tables_unflatten(aux, children) -> EvalTables:
+    kw = dict(zip(_TABLE_ARRAYS, children[:-1]))
+    kw["mem_groups"] = children[-1]
+    kw.update(zip(_TABLE_STATICS, aux))
+    return EvalTables(**kw)
+
+
+jax.tree_util.register_pytree_node(EvalTables, _tables_flatten,
+                                   _tables_unflatten)
 
 
 def build_eval_tables(evaluator: PartitionEvaluator) -> EvalTables:
@@ -143,28 +196,34 @@ def _segment_memory(t: EvalTables, aa: Array, bb: Array,
     return jnp.where(valid, jnp.floor(mem), 0.0)
 
 
-def make_batch_eval_fn(tables: EvalTables, objectives: Sequence[str],
-                       constraints: Optional[Constraints] = None,
-                       ) -> Callable[[Array], Tuple[Array, Array]]:
-    """Build ``eval(C) -> (F, CV)`` over an (N, n_cuts) sorted cut matrix.
+def make_runtime_eval_fn(template: EvalTables, objectives: Sequence[str],
+                         constraints: Optional[Constraints] = None,
+                         ) -> Callable[[Array, EvalTables],
+                                       Tuple[Array, Array]]:
+    """Build ``eval(C, tables) -> (F, CV)`` with the tables as a runtime
+    pytree argument.
 
-    ``objectives``/``constraints`` are baked in statically (one compiled
-    program per search).  Raises if accuracy is needed (as an objective or a
-    ``min_accuracy`` constraint) but the evaluator had no proxy oracle.
+    ``objectives``/``constraints`` and the shape statics of ``template``
+    are baked into the trace; the table *values* are read from the
+    ``tables`` argument at call time, so one jitted program serves every
+    :class:`EvalTables` whose :meth:`~EvalTables.shape_signature` equals
+    the template's — the mechanism behind the compiled-runner reuse of
+    ``repro.explore.online``.  Raises if accuracy is needed (objective or
+    ``min_accuracy``) but the template has no proxy oracle.
     """
-    t = tables
     objectives = tuple(objectives)
     cons = constraints or Constraints()
     needs_acc = "accuracy" in objectives or bool(cons.min_accuracy)
-    if needs_acc and not t.supports_accuracy:
+    if needs_acc and not template.supports_accuracy:
         raise ValueError(
             "accuracy objective/constraint requires a jittable proxy "
             "accuracy oracle (ProxyAccuracy.proxy_arrays); measured oracles "
             "must use the NumPy 'nsga2' strategy")
-    L, K = t.L, t.n_cuts
-    n_plat = t.cost_prefix.shape[0]
+    L, K = template.L, template.n_cuts
+    n_plat = template.cost_prefix.shape[0]
+    has_acc = template.supports_accuracy
 
-    def eval_cuts(C: Array) -> Tuple[Array, Array]:
+    def eval_cuts(C: Array, t: EvalTables) -> Tuple[Array, Array]:
         C = jnp.maximum(C.astype(jnp.int32), -1)
         n = C.shape[0]
         bounds = jnp.concatenate(
@@ -210,7 +269,7 @@ def make_batch_eval_fn(tables: EvalTables, objectives: Sequence[str],
         bb = jnp.where(valid, bb_raw, 0)
         mems = _segment_memory(t, aa, bb, valid)             # (N, P)
 
-        if t.supports_accuracy:
+        if has_acc:
             wpre = t.acc_weight_prefix
             loss = (t.acc_noise[None, :]
                     * (wpre[bounds[:, 1:] + 1] - wpre[bounds[:, :-1] + 1])
@@ -246,5 +305,24 @@ def make_batch_eval_fn(tables: EvalTables, objectives: Sequence[str],
         }
         F = jnp.stack([cols[k] for k in objectives], axis=1)
         return F, cv
+
+    return eval_cuts
+
+
+def make_batch_eval_fn(tables: EvalTables, objectives: Sequence[str],
+                       constraints: Optional[Constraints] = None,
+                       ) -> Callable[[Array], Tuple[Array, Array]]:
+    """Build ``eval(C) -> (F, CV)`` over an (N, n_cuts) sorted cut matrix.
+
+    Convenience closure over :func:`make_runtime_eval_fn` with ``tables``
+    bound: objectives/constraints *and* the table values are fixed for the
+    life of the function (one compiled program per search).  Use
+    :func:`make_runtime_eval_fn` directly when the same compilation must
+    serve drifting table values.
+    """
+    fn = make_runtime_eval_fn(tables, objectives, constraints)
+
+    def eval_cuts(C: Array) -> Tuple[Array, Array]:
+        return fn(C, tables)
 
     return eval_cuts

@@ -28,10 +28,12 @@ class QuantSpec:
 
     @property
     def qmin(self) -> int:
+        """Smallest representable integer code."""
         return -(2 ** (self.bits - 1)) if self.symmetric else 0
 
     @property
     def qmax(self) -> int:
+        """Largest representable integer code."""
         return 2 ** (self.bits - 1) - 1 if self.symmetric else 2 ** self.bits - 1
 
 

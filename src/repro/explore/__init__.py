@@ -59,6 +59,8 @@ and strategies are drop-in interchangeable through
 from repro.explore.deploy import lm_block_cuts
 from repro.explore.campaign import (Campaign, CampaignEntry, CampaignReport,
                                     CampaignResult, campaign_entry_dict)
+from repro.explore.online import (OnlineRepartitioner, RepartitionDecision,
+                                  degrade_link, drop_node)
 from repro.explore.filters import (candidate_positions, feasible_cut_rows,
                                    link_feasibility, link_filter,
                                    memory_filter)
@@ -72,17 +74,21 @@ from repro.explore.spec import (AccuracySpec, ExplorationSpec, LinkSpec,
 from repro.explore.strategies import (ExhaustiveSearch, JitNSGA2Search,
                                       MultiCutScan, NSGA2Search,
                                       SearchContext, SearchStrategy,
-                                      StrategyOutput, register_strategy,
+                                      StrategyOutput, clear_jit_runner_cache,
+                                      jit_runner_cache_size,
+                                      register_strategy,
                                       scaled_nsga_defaults)
 
 __all__ = [
     "AccuracySpec", "Campaign", "CampaignEntry", "CampaignReport",
     "CampaignResult", "DEFAULT_OBJECTIVES", "ExhaustiveSearch",
     "ExplorationResult", "ExplorationSpec", "JitNSGA2Search", "LinkSpec",
-    "ModelRef", "MultiCutScan", "NSGA2Search", "PlatformSpec",
-    "SearchContext", "SearchSettings", "SearchStrategy", "StrategyOutput",
-    "SweepSpec", "SystemSpec", "campaign_entry_dict", "candidate_positions",
-    "eval_from_dict", "eval_to_dict", "explore_graph", "feasible_cut_rows",
+    "ModelRef", "MultiCutScan", "NSGA2Search", "OnlineRepartitioner",
+    "PlatformSpec", "RepartitionDecision", "SearchContext", "SearchSettings",
+    "SearchStrategy", "StrategyOutput", "SweepSpec", "SystemSpec",
+    "campaign_entry_dict", "candidate_positions", "clear_jit_runner_cache",
+    "degrade_link", "drop_node", "eval_from_dict", "eval_to_dict",
+    "explore_graph", "feasible_cut_rows", "jit_runner_cache_size",
     "link_feasibility", "link_filter", "lm_block_cuts", "memory_filter",
     "register_strategy", "run_search", "run_spec", "scaled_nsga_defaults",
     "select_weighted",

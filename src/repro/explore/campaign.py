@@ -125,6 +125,7 @@ class Campaign:
 
     @classmethod
     def from_sweep(cls, sweep: SweepSpec) -> "Campaign":
+        """Rebuild the runnable campaign from its durable SweepSpec."""
         return cls(sweep.template, models=sweep.models,
                    systems=sweep.systems)
 
@@ -138,6 +139,8 @@ class Campaign:
                                max_retries=max_retries)
 
     def run(self, verbose: bool = False) -> CampaignResult:
+        """Explore every (model, system) cell serially, sharing cost caches
+        and memory tables per model; returns the merged CampaignResult."""
         from repro.explore.runner import explore_graph
         t_start = time.perf_counter()
         tpl = self.template

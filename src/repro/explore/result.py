@@ -58,6 +58,10 @@ class ExplorationResult:
     nsga: Optional[NSGA2Result] = None
     strategy: str = "auto"
     n_evaluated: int = 0          # candidate vectors scored by all strategies
+    strategy_used: str = ""       # strategies that actually ran ("+"-joined);
+    #                               differs from `strategy` on documented
+    #                               downgrades (jit_nsga2 measured-accuracy
+    #                               fallback) and for the "auto" policy
 
     def layer_name(self, cut: int) -> str:
         """Layer name at a cut position; ``"-"`` for the ``-1`` / out-of-
@@ -67,6 +71,7 @@ class ExplorationResult:
         return "-"
 
     def summary(self) -> str:
+        """Human-readable report: schedule size, baselines, Pareto front."""
         lines = [f"schedule: {len(self.schedule)} layers, "
                  f"{len(self.candidates)} feasible cut points "
                  f"[{self.strategy}]"]
@@ -107,6 +112,7 @@ class ExplorationResult:
             "n_evaluated": self.n_evaluated,
             "objectives": list(self.objectives),
             "strategy": self.strategy,
+            "strategy_used": self.strategy_used or self.strategy,
             "pareto": [eval_to_dict(e) for e in self.pareto],
             "selected": (eval_to_dict(self.selected)
                          if self.selected is not None else None),

@@ -56,20 +56,37 @@ def run_search(evaluator: PartitionEvaluator, *,
                constraints: Optional[Constraints] = None,
                objectives: Sequence[str] = DEFAULT_OBJECTIVES,
                weights: Optional[Sequence[float]] = None,
-               settings: Optional[SearchSettings] = None) -> ExplorationResult:
+               settings: Optional[SearchSettings] = None,
+               candidates: Optional[Sequence[int]] = None,
+               warm_cuts: Optional[Sequence[Sequence[int]]] = None
+               ) -> ExplorationResult:
     """Run the configured strategies over a prebuilt evaluator and finish:
-    union pool → final non-dominated filter → Def.-2 selection."""
+    union pool → final non-dominated filter → Def.-2 selection.
+
+    ``candidates`` overrides the filtered candidate positions — the online
+    re-partitioner pins them to the *baseline* system's list so the gene
+    table (and hence the compiled-runner shape) stays identical across
+    drifted systems; feasibility shifts are then absorbed by constraint
+    domination instead of by re-filtering.  ``warm_cuts`` feeds a previous
+    Pareto front's cut rows to warm-startable strategies (honored when
+    ``settings.warm_start`` is on).
+    """
     constraints = constraints or Constraints()
     settings = settings or SearchSettings()
     objectives = tuple(objectives)
     weights = (tuple(weights) if weights
                else tuple(1.0 for _ in objectives))
-    cands = candidate_positions(evaluator, constraints,
-                                settings.allow_multi_tensor_cuts)
+    if candidates is None:
+        cands = candidate_positions(evaluator, constraints,
+                                    settings.allow_multi_tensor_cuts)
+    else:
+        cands = list(candidates)
     ctx = SearchContext(
         evaluator=evaluator, candidates=cands, constraints=constraints,
         objectives=objectives, settings=settings,
-        link_feas=link_feasibility(evaluator, constraints.max_link_bytes))
+        link_feas=link_feasibility(evaluator, constraints.max_link_bytes),
+        warm_cuts=(np.asarray(warm_cuts, dtype=int)
+                   if warm_cuts is not None and len(warm_cuts) else None))
 
     baselines = [single_platform_eval(evaluator, i, constraints)
                  for i in range(len(evaluator.system.platforms))]
@@ -79,6 +96,7 @@ def run_search(evaluator: PartitionEvaluator, *,
     all_evals: List[PartitionEval] = []
     nsga = None
     n_evaluated = 0
+    used: List[str] = []
     for strategy in resolve_strategies(settings, ctx.n_cuts, len(cands)):
         out = strategy.search(ctx)
         (scan_pool if out.exhaustive else search_pool).extend(out.evals)
@@ -86,6 +104,7 @@ def run_search(evaluator: PartitionEvaluator, *,
             all_evals = out.all_evals
         nsga = out.nsga or nsga
         n_evaluated += out.n_evaluated
+        used.append(out.strategy_used or strategy.name)
 
     # pool order mirrors the legacy Explorer: exact scans, then feasible
     # baselines, then heuristic-search points (first-seen wins dedupe ties)
@@ -109,7 +128,8 @@ def run_search(evaluator: PartitionEvaluator, *,
         schedule=list(evaluator.schedule), candidates=cands,
         all_evals=all_evals, pareto=pareto, selected=selected,
         baselines=baselines, objectives=objectives, nsga=nsga,
-        strategy=settings.strategy, n_evaluated=n_evaluated)
+        strategy=settings.strategy, n_evaluated=n_evaluated,
+        strategy_used="+".join(dict.fromkeys(used)) or settings.strategy)
 
 
 def explore_graph(graph: LayerGraph, system: SystemConfig, *,

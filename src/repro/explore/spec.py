@@ -43,6 +43,7 @@ class ModelRef:
 
     @property
     def label(self) -> str:
+        """Display/report key for this model."""
         return self.name
 
     def build(self):
@@ -79,6 +80,7 @@ class PlatformSpec:
     mem_capacity: Optional[int] = None
 
     def build(self) -> Platform:
+        """Resolve the accelerator-registry name into a live Platform."""
         from repro.core.hwmodel.arch import get_arch
         return Platform(self.name, get_arch(self.arch),
                         QuantSpec(bits=self.bits),
@@ -104,6 +106,7 @@ class LinkSpec:
                   "header_bytes", "p_tx_w", "p_rx_w", "e_per_byte_j")
 
     def build(self) -> LinkModel:
+        """The registry link with any non-None field overrides applied."""
         link = get_link(self.base)
         over = {f: getattr(self, f) for f in self._OVERRIDES
                 if getattr(self, f) is not None}
@@ -136,14 +139,17 @@ class SystemSpec:
 
     @property
     def label(self) -> str:
+        """Display/report key: explicit name or the platform-name join."""
         return self.name or "+".join(p.name for p in self.platforms)
 
     def build(self) -> SystemConfig:
+        """Materialize every platform and link into a SystemConfig."""
         return SystemConfig([p.build() for p in self.platforms],
                             [l.build() for l in self.links])
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "SystemSpec":
+        """Inverse of ``dataclasses.asdict``; links may be plain strings."""
         return cls(
             platforms=tuple(PlatformSpec(**p) for p in d["platforms"]),
             links=tuple(LinkSpec(**l) if isinstance(l, dict) else l
@@ -225,6 +231,11 @@ class SearchSettings:
       final fronts.
     * ``rank_devices`` — shard the ranking tile grid across this many local
       devices (``shard_map``); ``None``/1 keeps it single-device.
+    * ``warm_start`` — allow the NSGA strategies to seed the initial
+      population from a previous Pareto front when the caller provides one
+      (``run_search(..., warm_cuts=...)``, as the online re-partitioner
+      does).  ``False`` forces a cold uniform init even when warm cuts are
+      available — the A/B switch behind the warm-vs-cold quality tests.
     """
 
     strategy: str = "auto"
@@ -239,6 +250,7 @@ class SearchSettings:
     rank_impl: str = "auto"
     n_restarts: int = 1
     rank_devices: Optional[int] = None
+    warm_start: bool = True
 
     def __post_init__(self):
         if self.rank_impl not in ("auto", "ref", "pallas"):
@@ -288,13 +300,16 @@ class ExplorationSpec:
 
     # -- serialization -------------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
+        """Plain-dict form; round-trips through :meth:`from_dict`."""
         return dataclasses.asdict(self)
 
     def to_json(self, indent: Optional[int] = None) -> str:
+        """JSON form of :meth:`to_dict` (the on-disk spec format)."""
         return json.dumps(self.to_dict(), indent=indent)
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "ExplorationSpec":
+        """Inverse of :meth:`to_dict`."""
         system = SystemSpec.from_dict(d["system"])
         weights = d.get("weights")
         acc = d.get("accuracy")
@@ -311,6 +326,7 @@ class ExplorationSpec:
 
     @classmethod
     def from_json(cls, s: str) -> "ExplorationSpec":
+        """Inverse of :meth:`to_json`."""
         return cls.from_dict(json.loads(s))
 
 
@@ -344,13 +360,16 @@ class SweepSpec:
 
     # -- serialization -------------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
+        """JSON-clean plain-dict form; round-trips via :meth:`from_dict`."""
         return json.loads(json.dumps(dataclasses.asdict(self)))
 
     def to_json(self, indent: Optional[int] = None) -> str:
+        """JSON form of :meth:`to_dict` (what the fleet manifest stores)."""
         return json.dumps(self.to_dict(), indent=indent)
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "SweepSpec":
+        """Inverse of :meth:`to_dict`."""
         return cls(
             template=ExplorationSpec.from_dict(d["template"]),
             models=tuple(ModelRef(**m) for m in d.get("models", [])),
@@ -359,9 +378,12 @@ class SweepSpec:
 
     @classmethod
     def from_json(cls, s: str) -> "SweepSpec":
+        """Inverse of :meth:`to_json`."""
         return cls.from_dict(json.loads(s))
 
     def spec_hash(self) -> str:
+        """SHA-256 over the canonical JSON form — the fleet manifest's
+        sweep identity (resume refuses a mismatching manifest)."""
         import hashlib
         canon = json.dumps(self.to_dict(), sort_keys=True,
                            separators=(",", ":"))

@@ -56,23 +56,31 @@ class SearchContext:
     objectives: Tuple[str, ...]
     settings: SearchSettings
     link_feas: Optional[np.ndarray] = None   # (n_links, L-1) or None
+    warm_cuts: Optional[np.ndarray] = None   # (n, n_cuts) previous front
 
     @property
     def n_cuts(self) -> int:
+        """Number of cut genes (= platforms - 1) for this system."""
         return self.evaluator.system.n_cuts
 
     @property
     def depth(self) -> int:
+        """Schedule length L (cut positions live in [-1, L-1])."""
         return len(self.evaluator.schedule)
 
 
 @dataclasses.dataclass
 class StrategyOutput:
+    """What one strategy hands back to :func:`~repro.explore.runner
+    .run_search`: its candidate pool plus bookkeeping."""
+
     evals: List[PartitionEval]
     all_evals: List[PartitionEval] = dataclasses.field(default_factory=list)
     nsga: Optional[NSGA2Result] = None
     exhaustive: bool = False   # exact scans precede baselines in the pool
     n_evaluated: int = 0       # candidate vectors actually scored
+    strategy_used: str = ""    # actual strategy name when != the requested
+    #                            one (e.g. jit_nsga2's NumPy fallback)
 
 
 @runtime_checkable
@@ -81,7 +89,9 @@ class SearchStrategy(Protocol):
 
     name: str
 
-    def search(self, ctx: SearchContext) -> StrategyOutput: ...
+    def search(self, ctx: SearchContext) -> StrategyOutput:
+        """Produce candidate cut vectors for the runner to score."""
+        ...
 
 
 def scaled_nsga_defaults(n_candidates: int, n_cuts: int,
@@ -113,6 +123,7 @@ class ExhaustiveSearch:
     name = "exhaustive"
 
     def search(self, ctx: SearchContext) -> StrategyOutput:
+        """Enumerate every single-cut placement (Fig.-2 scan)."""
         if not ctx.candidates:
             return StrategyOutput([], exhaustive=True)
         C = np.full((len(ctx.candidates), ctx.n_cuts), ctx.depth - 1,
@@ -137,6 +148,8 @@ class MultiCutScan:
     name = "multicut"
 
     def search(self, ctx: SearchContext) -> StrategyOutput:
+        """Enumerate all sorted cut combinations when the combinatorial
+        budget allows (exact small-system solver)."""
         if not ctx.candidates:
             return StrategyOutput([], exhaustive=True)
         table = _gene_table(ctx)
@@ -232,12 +245,56 @@ def _pop_gen(ctx: SearchContext) -> Tuple[int, int]:
     return pop, n_gen
 
 
+def _cuts_to_genes(cuts: np.ndarray, table: np.ndarray) -> np.ndarray:
+    """Map cut-position rows onto nearest gene-table indices.
+
+    A drifted system keeps the same gene table (the online path pins the
+    candidate list), but warm cuts may in general fall between entries —
+    each cut snaps to the index of the nearest table value.
+    """
+    cuts = np.asarray(cuts, dtype=int)
+    idx = np.clip(np.searchsorted(table, cuts), 0, len(table) - 1)
+    left = np.maximum(idx - 1, 0)
+    use_left = (np.abs(table[left] - cuts) <= np.abs(table[idx] - cuts))
+    return np.where(use_left, left, idx)
+
+
+def _warm_genes(ctx: SearchContext, table: np.ndarray) -> Optional[np.ndarray]:
+    """Previous-front cut rows as gene rows, or None when warm starting is
+    disabled/unavailable."""
+    if not ctx.settings.warm_start or ctx.warm_cuts is None:
+        return None
+    warm = np.asarray(ctx.warm_cuts, dtype=int).reshape(-1, ctx.n_cuts)
+    if not len(warm):
+        return None
+    return _cuts_to_genes(warm, table)
+
+
+# compiled-runner cache shared across evaluators: keyed by the table shape
+# signature plus every static search knob, so re-searches over *different*
+# same-shape systems (the online drift loop's perturbed SystemSpecs) reuse
+# one XLA compilation — table values ride in as runtime pytree args
+_JIT_RUNNER_CACHE: Dict[Tuple, object] = {}
+
+
+def jit_runner_cache_size() -> int:
+    """Number of distinct compiled NSGA-II runners currently cached."""
+    return len(_JIT_RUNNER_CACHE)
+
+
+def clear_jit_runner_cache() -> None:
+    """Drop every cached compiled runner (tests / memory pressure)."""
+    _JIT_RUNNER_CACHE.clear()
+
+
 class NSGA2Search:
     """NSGA-II over gene indices into the candidate table (§IV)."""
 
     name = "nsga2"
 
     def search(self, ctx: SearchContext) -> StrategyOutput:
+        """NumPy NSGA-II over gene indices; honors ``ctx.warm_cuts`` as
+        seed individuals."""
         cands = ctx.candidates
         if not cands:
             return StrategyOutput([])
@@ -254,16 +311,22 @@ class NSGA2Search:
             return be.as_objectives(ctx.objectives), be.violation
 
         pop, n_gen = _pop_gen(ctx)
+        seeds = _gene_seeds(cands, table, n_cuts)
+        warm = _warm_genes(ctx, table)
+        if warm is not None:
+            # previous-front rows join the seed pool (nsga2 injects up to
+            # pop//2 seed individuals into the initial population)
+            seeds = [list(r) for r in warm] + seeds
         res = nsga2(_eval, n_var=n_cuts, lower=0, upper=len(table) - 1,
-                    seed=ctx.settings.seed,
-                    candidates=_gene_seeds(cands, table, n_cuts),
+                    seed=ctx.settings.seed, candidates=seeds,
                     pop_size=pop, n_gen=n_gen)
         evals: List[PartitionEval] = []
         if len(res.pareto_X):
             evals = evaluator.evaluate_batch(
                 _decode(res.pareto_X), ctx.constraints).to_evals()
         return StrategyOutput(evals, nsga=res,
-                              n_evaluated=pop * (n_gen + 1))
+                              n_evaluated=pop * (n_gen + 1),
+                              strategy_used=self.name)
 
 
 class JitNSGA2Search:
@@ -300,6 +363,10 @@ class JitNSGA2Search:
     _DENSE_PARETO_MAX = 8192
 
     def search(self, ctx: SearchContext) -> StrategyOutput:
+        """Compiled NSGA-II: one cached runner per table *shape*, gene
+        table + EvalTables as runtime args, warm start from
+        ``ctx.warm_cuts``; falls back to the NumPy path for measured
+        accuracy oracles (reported via ``strategy_used``)."""
         cands = ctx.candidates
         if not cands:
             return StrategyOutput([])
@@ -319,53 +386,75 @@ class JitNSGA2Search:
         from repro.core.nsga2_jax import (jit_nsga2, jit_nsga2_restarts,
                                           make_jit_restart_runner,
                                           make_jit_runner,
-                                          pareto_indices_blocked)
-        from repro.core.partition_jax import make_batch_eval_fn
+                                          pareto_indices_blocked,
+                                          warm_population)
+        from repro.core.partition_jax import make_runtime_eval_fn
 
         table = _gene_table(ctx)
         n_cuts = ctx.n_cuts
         pop, n_gen = _pop_gen(ctx)
         n_restarts = settings.n_restarts
         mesh = _rank_mesh(settings.rank_devices)
+        tables = evaluator.jax_tables()
 
-        # compiled-runner cache on the evaluator: repeated searches over the
-        # same evaluator (sweeps, benchmarks) pay XLA compilation once —
-        # n_gen is a traced loop bound, so budgets can vary freely
-        key = (ctx.objectives, ctx.constraints, pop, n_cuts,
-               len(table), settings.allow_multi_tensor_cuts,
+        # shared compiled-runner cache: the gene table and the evaluator
+        # tables enter the program as runtime pytree arguments, so the key
+        # holds only shape-determining statics — repeated searches over the
+        # same evaluator (sweeps, benchmarks) *and* over different
+        # same-shape systems (the online drift loop) pay XLA compilation
+        # once; n_gen is a traced loop bound, so budgets can vary freely
+        key = (tables.shape_signature(), ctx.objectives, ctx.constraints,
+               pop, n_cuts, len(table), settings.allow_multi_tensor_cuts,
                settings.rank_block, settings.rank_impl, n_restarts,
                settings.rank_devices)
-        cache = getattr(evaluator, "_jit_runner_cache", None)
-        if cache is None:
-            cache = evaluator._jit_runner_cache = {}
-        runner = cache.get(key)
+        runner = _JIT_RUNNER_CACHE.get(key)
         if runner is None:
-            eval_cuts = make_batch_eval_fn(evaluator.jax_tables(),
-                                           ctx.objectives, ctx.constraints)
-            jtable = jnp.asarray(table)
+            eval_cuts = make_runtime_eval_fn(tables, ctx.objectives,
+                                             ctx.constraints)
 
-            def _eval_genes(G):
-                return eval_cuts(jnp.sort(jtable[G], axis=1))
+            def _eval_genes(G, jtable, t):
+                return eval_cuts(jnp.sort(jtable[G], axis=1), t)
 
-            make = (make_jit_restart_runner if n_restarts > 1
-                    else make_jit_runner)
-            runner = make(_eval_genes, n_var=n_cuts, lower=0,
-                          upper=len(table) - 1, pop_size=pop,
-                          rank_block=settings.rank_block,
-                          rank_impl=settings.rank_impl, mesh=mesh)
-            cache[key] = runner
+            if n_restarts > 1:
+                runner = make_jit_restart_runner(
+                    _eval_genes, n_var=n_cuts, lower=0,
+                    upper=len(table) - 1, pop_size=pop,
+                    rank_block=settings.rank_block,
+                    rank_impl=settings.rank_impl, mesh=mesh, n_eval_args=2)
+            else:
+                runner = make_jit_runner(
+                    _eval_genes, n_var=n_cuts, lower=0,
+                    upper=len(table) - 1, pop_size=pop,
+                    rank_block=settings.rank_block,
+                    rank_impl=settings.rank_impl, mesh=mesh)
+            _JIT_RUNNER_CACHE[key] = runner
+        eval_args = (jnp.asarray(table), tables)
 
         seeds = _gene_seeds(cands, table, n_cuts)
+        warm = _warm_genes(ctx, table)
         if n_restarts > 1:
+            X0s = None
+            if warm is not None:
+                X0s = np.stack([
+                    warm_population(
+                        np.random.default_rng(settings.seed + i), pop,
+                        n_cuts, 0, len(table) - 1, warm)
+                    for i in range(n_restarts)])
             X, F, CV = jit_nsga2_restarts(
                 None, n_var=n_cuts, lower=0, upper=len(table) - 1,
                 pop_size=pop, n_gen=n_gen, n_restarts=n_restarts,
-                seed=settings.seed, candidates=seeds, runner=runner)
+                seed=settings.seed, candidates=seeds, runner=runner,
+                X0s=X0s, eval_args=eval_args)
         else:
+            X0 = None
+            if warm is not None:
+                X0 = warm_population(np.random.default_rng(settings.seed),
+                                     pop, n_cuts, 0, len(table) - 1, warm)
             X, F, CV = jit_nsga2(
                 None, n_var=n_cuts, lower=0, upper=len(table) - 1,
                 pop_size=pop, n_gen=n_gen, seed=settings.seed,
-                candidates=seeds, runner=runner)
+                candidates=seeds, runner=runner, X0=X0,
+                eval_args=eval_args)
         if len(X) > self._DENSE_PARETO_MAX:
             p_idx = pareto_indices_blocked(X, F, CV,
                                            block=settings.rank_block or 2048,
@@ -379,7 +468,8 @@ class JitNSGA2Search:
                 np.sort(table[res.pareto_X], axis=1),
                 ctx.constraints).to_evals()
         return StrategyOutput(evals, nsga=res,
-                              n_evaluated=n_restarts * pop * (n_gen + 1))
+                              n_evaluated=n_restarts * pop * (n_gen + 1),
+                              strategy_used=self.name)
 
 
 STRATEGIES: Dict[str, Type] = {

@@ -1,0 +1,143 @@
+"""Drift driver — online re-partitioning feeding the serving runtime.
+
+The paper's automotive/robotics scenarios have links that degrade and
+nodes that drop out mid-mission.  This driver plays such a mission:
+
+  1. a reduced decoder LM is resolved and the explorer cold-searches the
+     baseline embedded chain (one XLA compilation — the only slow step);
+  2. a drift schedule perturbs the system (progressive link degradation,
+     then a node dropout); each event triggers a *warm* re-partition
+     through :class:`repro.explore.OnlineRepartitioner` — same compiled
+     runner, previous front as the seed population, milliseconds of wall;
+  3. whenever the decision's block cuts change, the serving side swaps:
+     a new :class:`PartitionedLMRunner` over the new cuts, fresh replicas
+     behind the least-outstanding :class:`ReplicaRouter`, and (with
+     ``--serve``) a burst of traffic through the re-deployed pipeline.
+
+  PYTHONPATH=src python -m repro.launch.drift --arch smollm-360m
+  PYTHONPATH=src python -m repro.launch.drift --serve --requests 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.core import get_link
+from repro.explore import (ExplorationSpec, ModelRef, OnlineRepartitioner,
+                           PlatformSpec, SearchSettings, SystemSpec,
+                           degrade_link, drop_node, jit_runner_cache_size)
+from repro.models.registry import ARCH_IDS, build_model, get_config
+
+
+def drift_schedule(base: SystemSpec):
+    """The mission: link 0 degrades 4×, then 32×, then platform 1 dies,
+    then the degraded link recovers with the node still down."""
+    events = [degrade_link(base, 0, 4.0),
+              degrade_link(base, 0, 32.0),
+              drop_node(base, 1)]
+    events.append(degrade_link(events[-1], 0, 1.0))  # recovered, node down
+    return events
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m", choices=ARCH_IDS)
+    ap.add_argument("--link", default="eth10",
+                    help="baseline inter-stage link (see repro.core.link)")
+    ap.add_argument("--pop", type=int, default=128)
+    ap.add_argument("--gens", type=int, default=16)
+    ap.add_argument("--serve", action="store_true",
+                    help="serve a traffic burst through each deployment")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--replicas", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    if cfg.family not in ("dense",):
+        raise SystemExit(f"--arch {args.arch}: partitioned serving needs a "
+                         "dense decoder (block-boundary stage cuts)")
+
+    system = SystemSpec(
+        platforms=(PlatformSpec("EYR0", "eyr", bits=16),
+                   PlatformSpec("EYR1", "eyr", bits=16),
+                   PlatformSpec("SMB0", "smb", bits=8),
+                   PlatformSpec("SMB1", "smb", bits=8)),
+        links=(args.link,) * 3, name="4-chain")
+    spec = ExplorationSpec(
+        model=ModelRef("registry", args.arch,
+                       {"seq": args.prompt_len, "reduced": True}),
+        system=system,
+        objectives=("latency", "energy", "throughput"),
+        search=SearchSettings(strategy="jit_nsga2", seed=0,
+                              pop_size=args.pop, n_gen=args.gens))
+
+    # 1. cold baseline search (pays the one XLA compilation)
+    t0 = time.perf_counter()
+    rp = OnlineRepartitioner(spec)
+    d0 = rp.update(system)
+    cold_ms = (time.perf_counter() - t0) * 1e3
+    cuts = d0.block_cuts(cfg.n_layers)
+    print(f"[drift] cold search: {cold_ms:.0f} ms, cuts={d0.cuts} "
+          f"-> blocks {cuts} ({jit_runner_cache_size()} compiled runner)")
+
+    serve_ctx = None
+    if args.serve:
+        import jax
+        model = build_model(cfg)
+        params, _ = model.init(jax.random.PRNGKey(0))
+        serve_ctx = (model, params)
+        serve_burst(serve_ctx, cuts, args, cfg, tag="baseline")
+
+    # 2. the drift loop: warm re-partitions, re-deploy on change
+    for d in rp.watch(drift_schedule(system)):
+        new_cuts = d.block_cuts(cfg.n_layers)
+        action = "keep deployment"
+        if new_cuts != cuts:
+            action = f"RE-DEPLOY blocks {cuts} -> {new_cuts}"
+            cuts = new_cuts
+        print(f"[drift] {d.label}: {d.repartition_ms:.1f} ms, "
+              f"cuts={d.cuts}, feasible={d.feasible} -> {action}")
+        if serve_ctx is not None and action.startswith("RE-DEPLOY"):
+            serve_burst(serve_ctx, cuts, args, cfg, tag=d.label)
+
+    warm = [d.repartition_ms for d in rp.decisions[1:]]
+    print(f"[drift] {len(warm)} warm re-partitions, median "
+          f"{sorted(warm)[len(warm) // 2]:.1f} ms vs {cold_ms:.0f} ms cold "
+          f"(x{cold_ms / sorted(warm)[len(warm) // 2]:.0f}); compiled "
+          f"runners: {jit_runner_cache_size()}")
+    return 0
+
+
+def serve_burst(serve_ctx, cuts, args, cfg, tag: str):
+    """One traffic burst through replicas deployed on ``cuts``."""
+    from repro.serve import (PipelineServeEngine, ReplicaRouter, Request,
+                             ServeLink, poisson_traffic)
+    from repro.serving.pipeline import PartitionedLMRunner
+
+    model, params = serve_ctx
+    runner = PartitionedLMRunner(model, params, cuts=cuts)
+    replicas = []
+    for i in range(args.replicas):
+        links = [ServeLink(model=get_link(args.link))
+                 for _ in range(runner.n_stages - 1)]
+        eng = PipelineServeEngine(runner, n_slots=8, n_groups=4, eos=None,
+                                  mode="async", capacity=64, links=links,
+                                  name=f"replica{i}")
+        eng.warmup(prompt_len=args.prompt_len)
+        replicas.append(eng)
+    reqs = poisson_traffic(args.requests, rate_rps=500.0, vocab=cfg.vocab,
+                           prompt_len=args.prompt_len, max_new=args.max_new,
+                           seed=7)
+    burst = [Request(r.rid, r.prompt, r.max_new, 0.0) for r in reqs]
+    rep = ReplicaRouter(replicas).serve(burst, realtime=False)
+    s = rep.summary()
+    print(f"[drift]   serve[{tag}]: {runner.n_stages} stages, "
+          f"{rep.n_done}/{args.requests} done, "
+          f"{s['tokens_per_s']:.0f} tok/s")
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -64,27 +64,32 @@ class RequestStream:
         self._closed = False
 
     def push(self, req: Request) -> None:
+        """Append one request; raises ValueError after :meth:`close`."""
         with self._lock:
             if self._closed:
                 raise ValueError("push to a closed RequestStream")
             self._pending.append(req)
 
     def close(self) -> None:
+        """Stop accepting requests; the engine drains what remains."""
         with self._lock:
             self._closed = True
 
     def drain(self) -> List[Request]:
+        """Take (and clear) everything pushed since the last drain."""
         with self._lock:
             out, self._pending = self._pending, []
             return out
 
     @property
     def pending(self) -> int:
+        """Requests pushed but not yet drained by the engine."""
         with self._lock:
             return len(self._pending)
 
     @property
     def closed(self) -> bool:
+        """True once closed *and* fully drained."""
         with self._lock:
             return self._closed and not self._pending
 
@@ -385,6 +390,8 @@ class PipelineServeEngine:
 
     def run(self, stream: RequestStream,
             max_wall_s: float = 120.0) -> ServeReport:
+        """Serve the stream to completion (admit -> prefill -> wave decode
+        until idle and the stream closes); returns the ServeReport."""
         sched = SlotScheduler(self.n_slots, eos=self.eos)
         self._sched = sched
         for st in self.stages:                   # fresh per-run accounting

@@ -48,16 +48,19 @@ class RequestRecord:
 
     @property
     def done(self) -> bool:
+        """True once the request finished (EOS or length)."""
         return self.done_s is not None
 
     @property
     def ttft_s(self) -> Optional[float]:
+        """Time to first token (None before the first token lands)."""
         if self.first_token_s is None:
             return None
         return self.first_token_s - self.submit_s
 
     @property
     def latency_s(self) -> Optional[float]:
+        """Submit-to-finish wall seconds (None while running)."""
         if self.done_s is None:
             return None
         return self.done_s - self.submit_s
@@ -102,17 +105,22 @@ class ServeReport:
 
     @property
     def n_done(self) -> int:
+        """Requests that finished (EOS or length)."""
         return sum(1 for r in self.records if r.done)
 
     @property
     def total_tokens(self) -> int:
+        """Generated tokens summed over all records (EOS excluded)."""
         return sum(r.n_valid_tokens(self.eos) for r in self.records)
 
     @property
     def tokens_per_s(self) -> float:
+        """Aggregate decode throughput over the serving wall clock."""
         return self.total_tokens / self.wall_s if self.wall_s > 0 else 0.0
 
     def summary(self) -> Dict[str, float]:
+        """Flat metrics dict: throughput, TTFT/latency percentiles, and
+        the engine's Def.-4 stats when present."""
         done = [r for r in self.records if r.done]
         ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
         lats = [r.latency_s for r in done]

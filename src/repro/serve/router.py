@@ -20,6 +20,14 @@ from repro.serve.request import Request, ServeReport
 
 
 class ReplicaRouter:
+    """Least-outstanding load balancer over N replica serve engines.
+
+    Construct with a list of :class:`PipelineServeEngine` instances (one
+    thread each), then :meth:`serve` a request list; the merged
+    :class:`ServeReport` aggregates every replica's records.  A replica
+    failure closes its stream and surfaces as a RuntimeError after the
+    remaining replicas drain."""
+
     def __init__(self, replicas: List[PipelineServeEngine]):
         assert replicas
         self.replicas = replicas

@@ -42,6 +42,15 @@ class _SlotState:
 
 
 class SlotScheduler:
+    """Continuous-batching slot allocator + request bookkeeper.
+
+    ``n_slots`` fixed decode slots; :meth:`submit` queues a request,
+    :meth:`admit` fills free slots FIFO, :meth:`record_token` appends one
+    decoded token and evicts on EOS/length so the slot backfills next
+    admit.  Execution-agnostic: the async pipeline, the serial baseline
+    and the monolithic engine all drive the same instance (see module
+    docstring for the tested invariants)."""
+
     def __init__(self, n_slots: int, eos: Optional[int] = None):
         assert n_slots > 0
         self.n_slots = n_slots
@@ -52,6 +61,8 @@ class SlotScheduler:
 
     # -- queue side ----------------------------------------------------------
     def submit(self, req: Request, now: float = 0.0) -> RequestRecord:
+        """Enqueue a request (FIFO) and open its record; rejects duplicate
+        request ids."""
         if req.rid in self.records:
             raise ValueError(f"duplicate request id {req.rid}")
         rec = RequestRecord(rid=req.rid, prompt_len=req.prompt.shape[0],
@@ -97,16 +108,21 @@ class SlotScheduler:
 
     # -- views ---------------------------------------------------------------
     def active_slots(self) -> List[int]:
+        """Indices of slots currently owned by an in-flight request."""
         return [i for i, s in enumerate(self._slots) if s is not None]
 
     def free_slots(self) -> List[int]:
+        """Indices of unowned slots (empty unless the queue is drained)."""
         return [i for i, s in enumerate(self._slots) if s is None]
 
     def slot_request(self, slot: int) -> Optional[Request]:
+        """The request owning ``slot``, or None when it is free."""
         st = self._slots[slot]
         return st.req if st is not None else None
 
     def position(self, slot: int) -> int:
+        """Next token position of the slot's request (prompt length +
+        tokens generated); raises on a free slot."""
         st = self._slots[slot]
         if st is None:
             raise ValueError(f"position of free slot {slot}")
@@ -122,10 +138,12 @@ class SlotScheduler:
 
     @property
     def n_waiting(self) -> int:
+        """Requests queued but not yet admitted."""
         return len(self._waiting)
 
     @property
     def n_active(self) -> int:
+        """Slots currently decoding a request."""
         return self.n_slots - len(self.free_slots())
 
     @property
@@ -135,6 +153,7 @@ class SlotScheduler:
 
     @property
     def idle(self) -> bool:
+        """No work anywhere: nothing active, nothing waiting."""
         return self.n_active == 0 and self.n_waiting == 0
 
     def check_invariants(self) -> None:

@@ -169,8 +169,12 @@ def test_jit_front_equivalent_to_numpy_front(evaluator):
     converge to equivalent Pareto fronts (neither clearly dominates the
     other anywhere, same ideal point within tolerance)."""
     objectives = ("latency", "energy", "throughput")
-    settings = SearchSettings(strategy="nsga2", seed=0, pop_size=192,
-                              n_gen=50)
+    # budget chosen so both stochastic runs converge to the true front
+    # (margins go to 0 here); at pop 192 / n_gen 50 the 1-ulp float32
+    # difference between baked-constant and runtime-argument tables is
+    # enough to send the two trajectories to different front samples
+    settings = SearchSettings(strategy="nsga2", seed=0, pop_size=256,
+                              n_gen=100)
     from repro.explore import run_search
     res_np = run_search(evaluator, objectives=objectives, settings=settings)
     res_jit = run_search(
@@ -184,7 +188,7 @@ def test_jit_front_equivalent_to_numpy_front(evaluator):
     _no_clear_domination(Fn, Fj, scale)
     _no_clear_domination(Fj, Fn, scale)
     # ideal points agree to 8% of each objective's range across both fronts
-    # (different RNG streams; at this budget seed 0 converges to 0% gap)
+    # (different arithmetic streams; at this budget seed 0 hits 0% gap)
     assert (np.abs(Fj.min(axis=0) - Fn.min(axis=0)) <= 0.08 * scale).all()
 
 

@@ -1,0 +1,291 @@
+"""Online re-partitioning: runner-cache reuse, warm starts, drift loop.
+
+The tentpole guarantees under test:
+
+* two same-shape systems with different table *values* share one compiled
+  runner (zero recompilation), and the shared-runner fronts are identical
+  to what cold per-system compilations produce;
+* warm-started re-search is at least as good as cold at equal budget
+  (2-objective hypervolume);
+* the jit_nsga2 measured-accuracy fallback is *reported*, not silent;
+* the gene-snap / warm-population primitives behave;
+* the drift loop emits deterministic, bookkept decisions.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.nsga2_jax import warm_population
+from repro.explore import (ExplorationSpec, ModelRef, OnlineRepartitioner,
+                           PlatformSpec, SearchSettings, SystemSpec,
+                           clear_jit_runner_cache, degrade_link, drop_node,
+                           jit_runner_cache_size, run_search)
+from repro.explore.runner import explore_graph  # noqa: F401  (API check)
+from repro.explore.strategies import _cuts_to_genes
+
+
+def small_system(n_plat=2):
+    plats = tuple([PlatformSpec(f"EYR{i}", "eyr", bits=16)
+                   for i in range(n_plat // 2)] +
+                  [PlatformSpec(f"SMB{i}", "smb", bits=8)
+                   for i in range(n_plat - n_plat // 2)])
+    return SystemSpec(platforms=plats, links=("gige",) * (n_plat - 1))
+
+
+OBJECTIVES = ("latency", "energy", "throughput")
+
+
+def small_spec(system, pop=48, n_gen=6, **kw):
+    # throughput (Def. 4) rewards pipelined splits, so link drift actually
+    # moves the front — latency/energy alone collapse to one platform
+    return ExplorationSpec(
+        model=ModelRef("cnn", "squeezenet11", {"in_hw": 64}),
+        system=system,
+        objectives=OBJECTIVES,
+        search=SearchSettings(strategy="jit_nsga2", seed=0,
+                              pop_size=pop, n_gen=n_gen, **kw))
+
+
+def search_front(spec, system, candidates=None, warm_cuts=None):
+    """run_search on ``system`` with ``spec``'s model/settings; -> result."""
+    from repro.core.accuracy import ProxyAccuracy
+    from repro.core.graph import linearize
+    from repro.core.partition import PartitionEvaluator
+
+    graph, shared = spec.model.build()
+    schedule = linearize(graph, spec.schedule_policy)
+    built = system.build()
+    ev = PartitionEvaluator(graph, schedule, built,
+                            accuracy_fn=ProxyAccuracy(schedule, built),
+                            shared_groups=shared)
+    return run_search(ev, objectives=spec.objectives, settings=spec.search,
+                      candidates=candidates, warm_cuts=warm_cuts)
+
+
+def front_set(res):
+    return sorted(e.cuts for e in res.pareto)
+
+
+# -- compiled-runner sharing -------------------------------------------------
+
+def test_same_shape_specs_share_one_runner_and_match_cold():
+    base = small_system()
+    slow = degrade_link(base, 0, 16.0)
+    spec = small_spec(base)
+
+    # shared-cache pass: both systems through one process-wide runner
+    clear_jit_runner_cache()
+    res_base = search_front(spec, base)
+    assert jit_runner_cache_size() == 1
+    res_slow = search_front(spec, slow)
+    assert jit_runner_cache_size() == 1, \
+        "same-shape system with different values must not recompile"
+    assert res_base.strategy_used == "jit_nsga2"
+
+    # cold pass: fresh compilation for the perturbed system alone
+    clear_jit_runner_cache()
+    res_cold = search_front(spec, slow)
+    assert jit_runner_cache_size() == 1
+    assert front_set(res_slow) == front_set(res_cold), \
+        "shared-runner front must equal the cold-compile front"
+
+    # and the perturbation must actually matter: objectives differ from base
+    def objs(res):
+        return [e.as_objectives(OBJECTIVES) for e in res.pareto]
+    assert (objs(res_slow) != objs(res_base)
+            or front_set(res_slow) != front_set(res_base))
+
+
+def test_value_only_drift_keeps_shape_signature():
+    from repro.core.accuracy import ProxyAccuracy
+    from repro.core.graph import linearize
+    from repro.core.partition import PartitionEvaluator
+    from repro.core.partition_jax import build_eval_tables
+
+    base = small_system(4)
+    spec = small_spec(base)
+    graph, shared = spec.model.build()
+    schedule = linearize(graph, spec.schedule_policy)
+
+    def sig(system_spec):
+        built = system_spec.build()
+        ev = PartitionEvaluator(graph, schedule, built,
+                                accuracy_fn=ProxyAccuracy(schedule, built),
+                                shared_groups=shared)
+        return build_eval_tables(ev).shape_signature()
+
+    s0 = sig(base)
+    assert sig(degrade_link(base, 1, 64.0)) == s0
+    assert sig(drop_node(base, 2)) == s0
+    assert isinstance(hash(s0), int)
+
+
+# -- warm start --------------------------------------------------------------
+
+def hypervolume(front, ref):
+    """Exact hypervolume (minimization) by recursive slicing — fine for
+    the tiny fronts these searches produce."""
+    pts = sorted({tuple(p) for p in front
+                  if all(f <= r for f, r in zip(p, ref))})
+    if not pts:
+        return 0.0
+    if len(ref) == 1:
+        return ref[0] - pts[0][0]
+    hv = 0.0
+    for i, p in enumerate(pts):
+        hi = pts[i + 1][0] if i + 1 < len(pts) else ref[0]
+        width = hi - p[0]
+        if width > 0:
+            hv += width * hypervolume([q[1:] for q in pts[:i + 1]], ref[1:])
+    return hv
+
+
+def test_warm_hypervolume_not_worse_at_equal_budget():
+    base = small_system(4)
+    drifted = degrade_link(base, 1, 32.0)
+    spec = small_spec(base, pop=48, n_gen=4)
+
+    res_base = search_front(spec, base)
+    warm_cuts = [e.cuts for e in res_base.pareto]
+
+    res_cold = search_front(spec, drifted)
+    res_warm = search_front(spec, drifted, warm_cuts=warm_cuts)
+
+    def objs(res):
+        return [e.as_objectives(OBJECTIVES) for e in res.pareto]
+    allobjs = objs(res_cold) + objs(res_warm)
+    ref = tuple(max(o[k] for o in allobjs) + abs(max(o[k] for o in allobjs))
+                * 0.1 + 1e-12 for k in range(len(OBJECTIVES)))
+    hv_cold = hypervolume(objs(res_cold), ref)
+    hv_warm = hypervolume(objs(res_warm), ref)
+    assert hv_warm >= hv_cold * (1 - 1e-9), \
+        f"warm start regressed hypervolume: {hv_warm} < {hv_cold}"
+
+
+def test_warm_start_off_ignores_seeds():
+    base = small_system()
+    spec = small_spec(base, warm_start=False)
+    res_a = search_front(spec, base)
+    # junk warm cuts must be ignored entirely when warm_start=False
+    res_b = search_front(spec, base, warm_cuts=[(0,)] * 8)
+    assert front_set(res_a) == front_set(res_b)
+
+
+def test_warm_population_composition():
+    rng = np.random.default_rng(0)
+    warm = np.array([[3, 7], [10, 2]])
+    X0 = warm_population(rng, 8, 2, 0, 15, warm)
+    assert X0.shape == (8, 2) and X0.dtype.kind == "i"
+    # elites lead, verbatim
+    np.testing.assert_array_equal(X0[:2], warm)
+    # jittered copies stay within +/-2 of an elite row, clipped to bounds
+    for row in X0[2:4]:
+        assert any(np.all(np.abs(row - w) <= 2) for w in warm)
+    assert X0.min() >= 0 and X0.max() <= 15
+
+    # no seeds -> uniform population, in bounds, deterministic per rng seed
+    X0a = warm_population(np.random.default_rng(1), 8, 2, 0, 15, None)
+    X0b = warm_population(np.random.default_rng(1), 8, 2, 0, 15,
+                          np.empty((0, 2), dtype=int))
+    np.testing.assert_array_equal(X0a, X0b)
+
+
+def test_cuts_to_genes_snaps_to_nearest():
+    table = np.array([2, 5, 9, 14])
+    cuts = np.array([[2, 9], [3, 13], [0, 20]])
+    genes = _cuts_to_genes(cuts, table)
+    np.testing.assert_array_equal(genes, [[0, 2], [0, 3], [0, 3]])
+
+
+def test_warm_start_json_round_trip():
+    spec = small_spec(small_system(), warm_start=False)
+    back = ExplorationSpec.from_json(spec.to_json())
+    assert back.search.warm_start is False
+    assert back == spec
+    default = SearchSettings()
+    assert default.warm_start is True
+
+
+# -- strategy_used reporting -------------------------------------------------
+
+def test_measured_accuracy_fallback_is_reported():
+    from repro.core.graph import linearize
+    from repro.core.partition import PartitionEvaluator
+
+    base = small_system()
+    spec = small_spec(base)
+    graph, shared = spec.model.build()
+    schedule = linearize(graph, spec.schedule_policy)
+    # a bare callable oracle has no proxy_arrays -> tables can't be jitted
+    ev = PartitionEvaluator(graph, schedule, base.build(),
+                            accuracy_fn=lambda cuts: 0.9,
+                            shared_groups=shared)
+    res = run_search(ev, objectives=("latency", "accuracy"),
+                     settings=spec.search)
+    assert res.strategy == "jit_nsga2"          # what was requested
+    assert res.strategy_used == "nsga2"         # what actually ran
+    assert res.to_report()["strategy_used"] == "nsga2"
+
+
+# -- the drift loop ----------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def drift_run():
+    base = small_system(4)
+    spec = small_spec(base, pop=48, n_gen=6)
+    events = [degrade_link(base, 0, 8.0), drop_node(base, 1)]
+    clear_jit_runner_cache()
+    rp = OnlineRepartitioner(spec)
+    first = rp.update(base)
+    rest = list(rp.watch(events))
+    return base, spec, rp, first, rest
+
+
+def test_online_repartitioner_bookkeeping(drift_run):
+    base, spec, rp, first, rest = drift_run
+    assert jit_runner_cache_size() == 1, "drift loop recompiled"
+    assert first.step == 0 and first.changed and first.feasible
+    assert all(d.repartition_ms > 0 for d in [first] + rest)
+    assert all(d.strategy_used == "jit_nsga2" for d in [first] + rest)
+    assert rp.decisions == [first] + rest
+    # warm updates skip compilation: orders of magnitude faster
+    assert min(d.repartition_ms for d in rest) < first.repartition_ms
+
+
+def test_online_dropout_routes_off_dead_node(drift_run):
+    base, spec, rp, first, rest = drift_run
+    dropped = rest[-1]
+    assert dropped.feasible
+    b = [-1] + list(dropped.cuts)
+    assert b[2] <= b[1], \
+        f"stage on dead platform 1 still has layers: {dropped.cuts}"
+
+
+def test_online_decisions_deterministic(drift_run):
+    base, spec, rp, first, rest = drift_run
+    rp2 = OnlineRepartitioner(spec)
+    replay = [rp2.update(base)] + list(
+        rp2.watch([degrade_link(base, 0, 8.0), drop_node(base, 1)]))
+    assert [d.cuts for d in replay] == [d.cuts for d in [first] + rest]
+
+
+def test_online_forces_jit_strategy():
+    spec = small_spec(small_system())
+    spec = dataclasses.replace(
+        spec, search=dataclasses.replace(spec.search, strategy="nsga2"))
+    rp = OnlineRepartitioner(spec)
+    assert rp.settings.strategy == "jit_nsga2"
+
+
+def test_perturbation_validation():
+    base = small_system()
+    with pytest.raises(IndexError):
+        degrade_link(base, 5, 2.0)
+    with pytest.raises(ValueError):
+        degrade_link(base, 0, 0.0)
+    with pytest.raises(IndexError):
+        drop_node(base, 9)
+    assert base.links[0].build().rate_bps == \
+        degrade_link(base, 0, 4.0).links[0].build().rate_bps * 4
