@@ -265,8 +265,10 @@ def main() -> int:
     # (schema 3 added the pop-32768 jit_nsga_scale_* keys; schema 4 the
     # 2-worker fleet_sweep_wall_s; schema 5 the serve_* keys merged in by
     # serve_bench.py; schema 6 the repartition_* keys merged in by
-    # drift_bench.py)
-    out = {"mode": "quick" if args.quick else "full", "bench_schema": 6}
+    # drift_bench.py; schema 7 the fault-recovery keys — recovery_ms,
+    # requests_recovered, repartition_trigger — merged in by
+    # fault_smoke.py --json)
+    out = {"mode": "quick" if args.quick else "full", "bench_schema": 7}
     if args.quick:
         speedup = bench_eval_paths(out, n_candidates=1024, scalar_cap=128)
         np_rate = bench_nsga_run(out, pop_size=2048, n_gen=3)

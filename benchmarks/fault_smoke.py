@@ -1,0 +1,209 @@
+"""CI fault-tolerance smoke for the serve runtime (fault-smoke job).
+
+One traffic burst is served against two replicas of a 2-stage partitioned
+reduced LM while a :class:`~repro.serve.faults.FaultPlan` injects a
+mid-stream link degradation and then kills one replica outright.  A
+:class:`~repro.serve.health.DivergenceMonitor` watches the crashing
+replica's :class:`~repro.serve.health.HealthMonitor` live.  Fails loudly
+(non-zero exit) unless:
+
+* the injected faults were actually applied (the replica's fault trace
+  records the degradation and the crash);
+* **zero requests are lost** — every submitted rid comes back finished
+  (``n_failed == 0``), the crashed replica's requests failed over to the
+  survivor, and ``recovery_ms`` is reported;
+* the recovered requests' greedy tokens are **byte-identical** to a
+  no-fault single-replica run;
+* the link divergence alarm fired from *measurement* (hysteresis held:
+  ``min_breach`` consecutive observations over the enter threshold), and
+  the warm re-partition it triggers records ``trigger='measured'``.
+
+With ``--json`` the recovery metrics are merged into the explorer bench
+artifact (schema 7): ``recovery_ms``, ``requests_recovered``, and
+``repartition_trigger``.
+
+  PYTHONPATH=src python benchmarks/fault_smoke.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import threading
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+
+from benchmarks.common import chain_system_spec
+from repro.core.link import LinkModel
+from repro.explore import (ExplorationSpec, ModelRef, OnlineRepartitioner,
+                           SearchSettings)
+from repro.models.registry import build_model, get_config
+from repro.serve import (DivergenceMonitor, FaultPlan, HealthMonitor,
+                         LinkDegrade, PipelineServeEngine, ReplicaCrash,
+                         ReplicaRouter, Request, ServeLink, poisson_traffic,
+                         stream_of)
+from repro.serving.pipeline import PartitionedLMRunner
+from repro.utils.atomicio import atomic_write_json
+
+BENCH_SCHEMA = 7
+N_REQUESTS = 12
+MAX_NEW = 8
+PROMPT_LEN = 8
+DEGRADE = 8.0          # injected link slow-down factor
+DEGRADE_AT = 4         # ... from the link's 4th transfer (mid-stream)
+CRASH_STEP = 5         # replica dies after 5 decode steps: before any
+#                        completion (MAX_NEW needs 7), so every routed
+#                        request must fail over
+
+
+def slow_links(n: int):
+    """Per-gap links slow enough that wire time is measurable on CI."""
+    return [ServeLink(model=LinkModel(name="slow", rate_bps=1e9,
+                                      t_setup_s=0.02)) for _ in range(n)]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="FILE",
+                    help="merge recovery metrics into this bench artifact")
+    args = ap.parse_args()
+
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    runner = PartitionedLMRunner(model, params, cuts=[0])
+    system = chain_system_spec()
+
+    reqs = poisson_traffic(N_REQUESTS, rate_rps=2000.0, vocab=cfg.vocab,
+                           prompt_len=PROMPT_LEN, max_new=MAX_NEW, seed=7)
+    burst = [Request(r.rid, r.prompt, r.max_new, 0.0) for r in reqs]
+
+    # 1. no-fault reference: the byte-identity target
+    ref_eng = PipelineServeEngine(runner, n_slots=4, eos=None, mode="async",
+                                  capacity=32, name="ref")
+    ref_eng.warmup(prompt_len=PROMPT_LEN)
+    ref = ref_eng.run(stream_of(list(burst)))
+    ref_toks = {r.rid: list(r.tokens) for r in ref.records}
+
+    # 2. faulted fleet: crashing replica (degraded link, then death) +
+    # clean survivor; the health monitor is sized to the deployed system's
+    # links (serve link i maps to system link i)
+    plan = FaultPlan(events=(
+        LinkDegrade(0, DEGRADE, at_transfer=DEGRADE_AT),
+        ReplicaCrash(at_step=CRASH_STEP)))
+    health = HealthMonitor(runner.n_stages, len(system.links))
+    crashy = PipelineServeEngine(runner, n_slots=4, eos=None, mode="async",
+                                 capacity=32, name="crashy",
+                                 links=slow_links(runner.n_stages - 1),
+                                 faults=plan, health=health)
+    survivor = PipelineServeEngine(runner, n_slots=4, eos=None, mode="async",
+                                   capacity=32, name="survivor")
+    crashy.warmup(prompt_len=PROMPT_LEN)
+    survivor.warmup(prompt_len=PROMPT_LEN)
+
+    dm = DivergenceMonitor(system, enter=3.0, exit=1.5, min_breach=3,
+                           cooldown_s=2.0, min_samples=4)
+    stop = threading.Event()
+
+    def observer():
+        while not stop.is_set():
+            dm.observe(health)
+            time.sleep(0.02)
+
+    th = threading.Thread(target=observer, daemon=True)
+    th.start()
+    rep = ReplicaRouter([crashy, survivor]).serve(list(burst),
+                                                  realtime=False)
+    stop.set()
+    th.join(timeout=2.0)
+    dm.observe(health)               # catch a fire pending at drain time
+
+    fails = []
+    trace_kinds = {e[0] for e in crashy.fault_trace.canonical()}
+    if "link_degrade" not in trace_kinds:
+        fails.append("link degradation was never applied")
+    if "replica_crash" not in trace_kinds:
+        fails.append("replica crash was never injected")
+    if rep.extra.get("n_replica_failures") != 1:
+        fails.append(f"expected exactly 1 replica failure, got "
+                     f"{rep.extra.get('n_replica_failures')}")
+    if rep.n_failed != 0:
+        fails.append(f"{rep.n_failed} request(s) lost/shed — zero-loss "
+                     "failover violated")
+    if rep.n_done != N_REQUESTS:
+        fails.append(f"only {rep.n_done}/{N_REQUESTS} requests finished")
+    if rep.extra.get("requests_recovered", 0) < 1:
+        fails.append("no request was recovered from the dead replica")
+    if "recovery_ms" not in rep.extra:
+        fails.append("recovery_ms missing from the merged report")
+    got = {r.rid: list(r.tokens) for r in rep.records}
+    if got != ref_toks:
+        bad = [rid for rid in ref_toks if got.get(rid) != ref_toks[rid]]
+        fails.append(f"recovered tokens diverge from the no-fault run "
+                     f"(rids {bad})")
+
+    if not dm.signals:
+        fails.append(f"divergence alarm never fired (link0 divergence "
+                     f"{health.link_divergence(0):.2f}x, "
+                     f"{health.link_samples(0)} samples)")
+        decision = None
+    else:
+        sig = dm.signals[0]
+        print(f"[fault-smoke] measured {sig.divergence:.1f}x divergence on "
+              f"link {sig.link} (injected {DEGRADE:g}x)")
+        # 3. the measured-trigger warm re-partition (same search setup as
+        # drift_smoke: one cold compile, then the measured update)
+        spec = ExplorationSpec(
+            model=ModelRef("cnn", "squeezenet11", {"in_hw": 64}),
+            system=system,
+            objectives=("latency", "energy", "throughput"),
+            search=SearchSettings(strategy="jit_nsga2", seed=0,
+                                  pop_size=96, n_gen=10))
+        rp = OnlineRepartitioner(spec)
+        rp.update(system)                              # cold baseline
+        decision = rp.update(dm.drifted_system(),
+                             label=f"measured~link{sig.link}",
+                             trigger="measured")
+        if decision.trigger != "measured":
+            fails.append(f"re-partition trigger is {decision.trigger!r}, "
+                         "not 'measured'")
+        if not decision.repartition_ms > 0:
+            fails.append("measured re-partition recorded no wall time")
+        print(f"[fault-smoke] warm re-partition {decision.repartition_ms:.1f}"
+              f" ms, trigger={decision.trigger}, cuts={decision.cuts}")
+
+    for msg in fails:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    if fails:
+        return 1
+
+    print(f"[fault-smoke] OK: {rep.n_done}/{N_REQUESTS} served, "
+          f"{rep.extra['requests_recovered']} recovered in "
+          f"{rep.extra['recovery_ms']:.1f} ms, 0 lost, tokens identical, "
+          f"measured-trigger re-partition fired")
+
+    if args.json:
+        out = {}
+        if os.path.exists(args.json):
+            with open(args.json) as f:
+                out = json.load(f)
+        out.setdefault("mode", "quick")
+        out["bench_schema"] = BENCH_SCHEMA
+        out.update({
+            "recovery_ms": rep.extra["recovery_ms"],
+            "requests_recovered": rep.extra["requests_recovered"],
+            "repartition_trigger": decision.trigger,
+            "fault_divergence": round(dm.signals[0].divergence, 2),
+        })
+        atomic_write_json(args.json, out)
+        print(f"merged recovery metrics into {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -30,7 +30,7 @@ wall, link wall including emulated wire sleep), which is what the paper's
 formula consumes; the pure modeled wire time is reported alongside
 (``link_model_s`` in the engine stats).
 
-Merges ``serve_*`` keys into ``BENCH_explorer.json`` (schema 6) so
+Merges ``serve_*`` keys into ``BENCH_explorer.json`` (schema 7) so
 ``compare_bench.py`` gates ``serve_tokens_per_s`` and the trend dashboard
 plots it.
 
@@ -62,7 +62,7 @@ from repro.serve import (PipelineServeEngine, Request, ServeLink,
 from repro.serving.pipeline import PartitionedLMRunner
 from repro.utils.atomicio import atomic_write_json
 
-BENCH_SCHEMA = 6
+BENCH_SCHEMA = 7
 SERVE_LINK = "eth10"
 
 

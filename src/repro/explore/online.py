@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core.accuracy import ProxyAccuracy
 from repro.core.graph import linearize
+from repro.core.nsga2 import crowding_distance
 from repro.core.partition import PartitionEvaluator, SystemConfig
 from repro.explore.deploy import lm_block_cuts
 from repro.explore.filters import candidate_positions
@@ -119,6 +120,7 @@ class RepartitionDecision:
     pareto_size: int
     strategy_used: str
     result: ExplorationResult = dataclasses.field(repr=False)
+    trigger: str = "event"          # 'event' (told) | 'measured' (observed)
 
     def block_cuts(self, n_layers: int) -> List[int]:
         """Decoder-block cut indices for ``PartitionedLMRunner`` — the
@@ -144,7 +146,12 @@ class OnlineRepartitioner:
     """
 
     def __init__(self, spec: ExplorationSpec, *,
-                 settings: Optional[SearchSettings] = None):
+                 settings: Optional[SearchSettings] = None,
+                 max_warm_front: int = 64):
+        if max_warm_front < 1:
+            raise ValueError(
+                f"max_warm_front must be >= 1, got {max_warm_front}")
+        self.max_warm_front = max_warm_front
         self.spec = spec
         settings = settings or spec.search
         if settings.strategy != "jit_nsga2":
@@ -176,15 +183,17 @@ class OnlineRepartitioner:
             cost_cache=self._cost_cache,
             memtable=getattr(self, "_memtable", None))
 
-    def update(self, system: SystemLike,
-               label: Optional[str] = None) -> RepartitionDecision:
+    def update(self, system: SystemLike, label: Optional[str] = None,
+               trigger: str = "event") -> RepartitionDecision:
         """Re-partition for one (possibly drifted) system snapshot.
 
         ``system`` may be a declarative :class:`SystemSpec` (typically from
-        :func:`degrade_link` / :func:`drop_node`) or an already-built
-        :class:`SystemConfig`.  It must be same-shape with the baseline
-        (same platform/link counts); a different shape still works but pays
-        one fresh XLA compilation.
+        :func:`degrade_link` / :func:`drop_node`, or a
+        ``DivergenceMonitor.drifted_system()`` snapshot — in that case pass
+        ``trigger='measured'``) or an already-built :class:`SystemConfig`.
+        It must be same-shape with the baseline (same platform/link
+        counts); a different shape still works but pays one fresh XLA
+        compilation.
         """
         t0 = time.perf_counter()
         if isinstance(system, SystemSpec):
@@ -204,10 +213,21 @@ class OnlineRepartitioner:
             step=len(self.decisions), label=label, cuts=cuts,
             changed=cuts != self._last_cuts, repartition_ms=ms,
             feasible=feasible, pareto_size=len(res.pareto),
-            strategy_used=res.strategy_used, result=res)
+            strategy_used=res.strategy_used, result=res, trigger=trigger)
         self._last_cuts = cuts
         if res.pareto:
-            self._front_cuts = np.asarray([e.cuts for e in res.pareto],
+            front = res.pareto
+            if len(front) > self.max_warm_front:
+                # bound the carried warm seed: long drift histories must
+                # not grow it without limit, and crowding distance keeps
+                # the most diversity-preserving top-k of the front
+                F = np.asarray([e.as_objectives(self.spec.objectives)
+                                for e in front], dtype=float)
+                cd = crowding_distance(F)
+                keep = sorted(np.argsort(-cd, kind="stable")
+                              [:self.max_warm_front])
+                front = [front[int(i)] for i in keep]
+            self._front_cuts = np.asarray([e.cuts for e in front],
                                           dtype=int)
         self.decisions.append(decision)
         return decision

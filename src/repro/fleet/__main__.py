@@ -54,7 +54,7 @@ def _cmd_worker(args) -> int:
     # failed attempts are recorded in the manifest and retried/merged there;
     # the process itself succeeded if the loop ran to completion
     run_worker(args.manifest, worker_id=args.worker_id,
-               verbose=args.verbose)
+               verbose=args.verbose, lease_s=args.lease)
     return 0
 
 
@@ -117,6 +117,10 @@ def main(argv=None) -> int:
     p.add_argument("--manifest", required=True)
     p.add_argument("--worker-id", default=None)
     p.add_argument("--verbose", action="store_true")
+    p.add_argument("--lease", type=float, default=30.0,
+                   help="claim lease TTL seconds: the heartbeat refreshes "
+                        "at lease/3, and claims idle past the TTL are "
+                        "reclaimed as hung")
     p.set_defaults(fn=_cmd_worker)
 
     p = sub.add_parser("merge", help="merge shards into a report JSON")

@@ -279,6 +279,22 @@ class Manifest:
         finally:
             os.unlink(tmp)
 
+    def refresh_claim(self, cell_id: str) -> bool:
+        """Refresh the lease on a held claim (bump its mtime).
+
+        Workers call this periodically while executing a cell so that a
+        TTL-based :meth:`reclaim_stale` (``lease_ttl_s``) can distinguish
+        a *hung* worker (claim held, lease never refreshed) from a slow
+        but live one.  The bumped mtime also makes any in-progress
+        reclaimer's identity re-check fail, so a refresh doubles as
+        protection against a concurrent steal.  Returns False when the
+        claim no longer exists (already released or reclaimed)."""
+        try:
+            os.utime(self._claim_path(cell_id))
+            return True
+        except FileNotFoundError:
+            return False
+
     def release(self, cell_id: str) -> None:
         try:
             os.unlink(self._claim_path(cell_id))
@@ -336,18 +352,26 @@ class Manifest:
     # concurrent reclaimers
     _RECLAIM_GRACE_S = 2.0
 
-    def reclaim_stale(self, force: bool = False) -> List[str]:
-        """Remove claims whose owning process is provably gone.
+    def reclaim_stale(self, force: bool = False,
+                      lease_ttl_s: Optional[float] = None) -> List[str]:
+        """Remove claims whose owning process is provably gone or whose
+        lease expired.
 
         A claim is stale when its recorded pid is dead *on this host*
         (claims from other hosts can't be probed, so they are only removed
         with ``force=True`` — use after confirming the remote workers are
-        down).  Claims younger than a short grace period are never touched,
-        and the claim file's identity (inode + mtime) is re-verified
-        immediately before the unlink, so a claim re-acquired by a live
-        worker after this reclaimer's read cannot be deleted by mistake.
-        Returns the reclaimed cell ids.
+        down), or — with ``lease_ttl_s`` — when its mtime is older than the
+        TTL: live workers refresh their claim's mtime periodically
+        (:meth:`refresh_claim`), so an expired lease means the worker is
+        dead **or hung**, on any host.  Claims younger than a short grace
+        period are never touched, and the claim file's identity
+        (inode + mtime) is re-verified immediately before the unlink, so a
+        claim re-acquired — or lease-refreshed — by a live worker after
+        this reclaimer's read cannot be deleted by mistake.  Returns the
+        reclaimed cell ids.
         """
+        if lease_ttl_s is not None and lease_ttl_s <= 0:
+            raise ValueError(f"lease_ttl_s must be > 0, got {lease_ttl_s}")
         host = socket.gethostname()
         reclaimed = []
         for c in self.cells:
@@ -358,9 +382,10 @@ class Manifest:
                 st = os.stat(cpath)
             except FileNotFoundError:
                 continue
-            if time.time() - st.st_mtime < self._RECLAIM_GRACE_S:
+            age = time.time() - st.st_mtime
+            if age < self._RECLAIM_GRACE_S:
                 continue
-            stale = force
+            stale = force or (lease_ttl_s is not None and age > lease_ttl_s)
             if not stale:
                 try:
                     with open(cpath) as f:

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import os
 import socket
+import threading
 import time
 import traceback
 from typing import Any, Dict, Optional
@@ -78,11 +79,29 @@ def run_cell(manifest: Manifest, cell: CellInfo,
     return campaign_entry_dict(cell.model, cell.system, res, wall)
 
 
+def _lease_heartbeat(manifest: Manifest, cell_id: str, lease_s: float,
+                     stop: threading.Event) -> None:
+    """Refresh the claim's lease every ``lease_s / 3`` until stopped (or
+    until the claim disappears — released or reclaimed from under us)."""
+    period = max(lease_s / 3.0, 0.05)
+    while not stop.wait(period):
+        if not manifest.refresh_claim(cell_id):
+            return
+
+
 def run_worker(manifest_dir: str, worker_id: Optional[str] = None,
-               poll_s: float = 0.5, verbose: bool = False
-               ) -> Dict[str, int]:
+               poll_s: float = 0.5, verbose: bool = False,
+               lease_s: float = 30.0) -> Dict[str, int]:
     """The worker loop; returns ``{"done": n, "failed": n}`` attempt counts
-    for this worker's own work."""
+    for this worker's own work.
+
+    While a cell runs, a heartbeat thread refreshes the claim's lease
+    every ``lease_s / 3``, and the idle-poll reclaim passes
+    ``lease_ttl_s=lease_s`` — so a *hung* worker (process alive, cell
+    stuck, lease never refreshed) expires after the TTL just like a dead
+    one, on any host."""
+    if lease_s <= 0:
+        raise ValueError(f"lease_s must be > 0, got {lease_s}")
     manifest = Manifest.load(manifest_dir)
     wid = worker_id or default_worker_id()
     stats = {"done": 0, "failed": 0}
@@ -104,24 +123,36 @@ def run_worker(manifest_dir: str, worker_id: Optional[str] = None,
                     f"(done={stats['done']} failed={stats['failed']})")
                 return stats
             # other workers hold the remaining cells: recover any whose
-            # owner died on this host, then wait for live ones
-            if manifest.reclaim_stale():
+            # owner died on this host or whose lease expired (hung worker
+            # on any host), then wait for live ones
+            if manifest.reclaim_stale(lease_ttl_s=lease_s):
                 continue
             time.sleep(poll_s)
             continue
         say(f"claimed {claimed.id}")
+        stop_hb = threading.Event()
+        hb = threading.Thread(target=_lease_heartbeat,
+                              args=(manifest, claimed.id, lease_s, stop_hb),
+                              name=f"lease-{claimed.id}", daemon=True)
+        hb.start()
         try:
             entry = run_cell(manifest, claimed, caches)
         except KeyboardInterrupt:
+            stop_hb.set()
+            hb.join(timeout=5.0)
             manifest.release(claimed.id)
             raise
         except Exception:
+            stop_hb.set()
+            hb.join(timeout=5.0)
             n = manifest.record_failure(claimed.id, wid,
                                         traceback.format_exc())
             stats["failed"] += 1
             say(f"FAILED {claimed.id} (attempt {n}/"
                 f"{manifest.max_retries + 1})")
             continue
+        stop_hb.set()
+        hb.join(timeout=5.0)
         manifest.write_shard(claimed.id, entry, wid)
         stats["done"] += 1
         say(f"done {claimed.id} ({entry['wall_s']:.2f}s)")

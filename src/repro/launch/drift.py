@@ -14,13 +14,23 @@ nodes that drop out mid-mission.  This driver plays such a mission:
      behind the least-outstanding :class:`ReplicaRouter`, and (with
      ``--serve``) a burst of traffic through the re-deployed pipeline.
 
+With ``--measured`` the loop is driven by *measurement* instead of the
+scripted schedule: a :class:`~repro.serve.faults.FaultPlan` degrades a link
+mid-stream, a :class:`~repro.serve.health.HealthMonitor` shared with the
+engine estimates live link occupancy, and a
+:class:`~repro.serve.health.DivergenceMonitor` (hysteresis + cool-down)
+fires the warm re-partition with ``trigger='measured'`` — no explicit
+drift event anywhere.
+
   PYTHONPATH=src python -m repro.launch.drift --arch smollm-360m
   PYTHONPATH=src python -m repro.launch.drift --serve --requests 8
+  PYTHONPATH=src python -m repro.launch.drift --measured --degrade 16
 """
 
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 from repro.core import get_link
@@ -53,6 +63,13 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--measured", action="store_true",
+                    help="drive the re-partition from measured divergence "
+                         "(injected link fault, no explicit drift event)")
+    ap.add_argument("--degrade", type=float, default=8.0,
+                    help="--measured: injected link slow-down factor")
+    ap.add_argument("--degrade-at", type=int, default=8,
+                    help="--measured: link transfer index the fault starts")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -84,12 +101,17 @@ def main():
           f"-> blocks {cuts} ({jit_runner_cache_size()} compiled runner)")
 
     serve_ctx = None
-    if args.serve:
+    if args.serve or args.measured:
         import jax
         model = build_model(cfg)
         params, _ = model.init(jax.random.PRNGKey(0))
         serve_ctx = (model, params)
-        serve_burst(serve_ctx, cuts, args, cfg, tag="baseline")
+        if args.serve:
+            serve_burst(serve_ctx, cuts, args, cfg, tag="baseline")
+
+    if args.measured:
+        d = measured_drift(serve_ctx, cuts, args, cfg, rp, system)
+        return 0 if d is not None else 1
 
     # 2. the drift loop: warm re-partitions, re-deploy on change
     for d in rp.watch(drift_schedule(system)):
@@ -109,6 +131,65 @@ def main():
           f"(x{cold_ms / sorted(warm)[len(warm) // 2]:.0f}); compiled "
           f"runners: {jit_runner_cache_size()}")
     return 0
+
+
+def measured_drift(serve_ctx, cuts, args, cfg, rp, system):
+    """Serve with an injected link degradation and let *measured*
+    divergence — not an explicit drift event — trigger the warm
+    re-partition.  Returns the measured-trigger decision (None when the
+    monitor never fired)."""
+    from repro.serve import (DivergenceMonitor, FaultPlan, HealthMonitor,
+                             LinkDegrade, PipelineServeEngine, ReplicaRouter,
+                             Request, ServeLink, poisson_traffic)
+    from repro.serving.pipeline import PartitionedLMRunner
+
+    model, params = serve_ctx
+    runner = PartitionedLMRunner(model, params, cuts=cuts)
+    links = [ServeLink(model=get_link(args.link))
+             for _ in range(runner.n_stages - 1)]
+    # monitor sized to the *deployed system's* links: serve link i maps to
+    # system link i; unused system links never accumulate samples and are
+    # ignored by the divergence monitor's min_samples gate
+    health = HealthMonitor(runner.n_stages, len(system.links))
+    plan = FaultPlan(events=(
+        LinkDegrade(0, args.degrade, at_transfer=args.degrade_at),))
+    eng = PipelineServeEngine(runner, n_slots=8, n_groups=4, eos=None,
+                              mode="async", capacity=64, links=links,
+                              faults=plan, health=health)
+    eng.warmup(prompt_len=args.prompt_len)
+    dm = DivergenceMonitor(system, enter=max(2.0, args.degrade / 2),
+                           exit=1.5, min_breach=3, cooldown_s=2.0,
+                           min_samples=4)
+
+    stop = threading.Event()
+
+    def observer():                  # live sampling while traffic flows
+        while not stop.is_set():
+            dm.observe(health)
+            time.sleep(0.02)
+
+    th = threading.Thread(target=observer, daemon=True)
+    th.start()
+    reqs = poisson_traffic(args.requests, rate_rps=500.0, vocab=cfg.vocab,
+                           prompt_len=args.prompt_len, max_new=args.max_new,
+                           seed=7)
+    burst = [Request(r.rid, r.prompt, r.max_new, 0.0) for r in reqs]
+    rep = ReplicaRouter([eng]).serve(burst, realtime=False)
+    stop.set()
+    th.join(timeout=2.0)
+    dm.observe(health)               # catch a fire pending at drain time
+    if not dm.signals:
+        print(f"[drift] measured: no divergence fired "
+              f"(link0 div {health.link_divergence(0):.2f}x)")
+        return None
+    sig = dm.signals[0]
+    d = rp.update(dm.drifted_system(), label=f"measured~link{sig.link}",
+                  trigger="measured")
+    print(f"[drift] measured {sig.divergence:.1f}x divergence on link "
+          f"{sig.link} (injected {args.degrade:g}x) -> warm re-partition "
+          f"{d.repartition_ms:.1f} ms, trigger={d.trigger}, "
+          f"changed={d.changed}; served {rep.n_done}/{len(burst)}")
+    return d
 
 
 def serve_burst(serve_ctx, cuts, args, cfg, tag: str):

@@ -2,6 +2,10 @@
 slot-based continuous batching + async double-buffered stage pipelining +
 replica routing over the partitions the explorer chose."""
 
+from repro.serve.faults import (FaultPlan, FaultTrace, LinkDegrade,
+                                ReplicaCrash, ReplicaCrashError, StageStall)
+from repro.serve.health import (DivergenceMonitor, DriftSignal, Ewma,
+                                FailureDetector, HealthMonitor)
 from repro.serve.pipeline_async import (PipelineServeEngine, RequestStream,
                                         ServeLink, stream_of)
 from repro.serve.request import (Request, RequestRecord, ServeReport,

@@ -47,7 +47,9 @@ import numpy as np
 
 from repro.core.link import LinkModel
 from repro.core.quant import QuantSpec, quantize_tensor
-from repro.serve.request import Request, ServeReport
+from repro.serve.faults import FaultPlan, FaultTrace, ReplicaCrashError
+from repro.serve.health import HealthMonitor
+from repro.serve.request import Request, RequestRecord, ServeReport
 from repro.serve.scheduler import SlotScheduler
 from repro.serving.engine import _bump_pos
 from repro.serving.pipeline import (PartitionedLMRunner, def4_throughput,
@@ -133,6 +135,10 @@ class _Item:
 
 _STOP = object()
 
+# idle stage workers poll their queue at this period so they keep
+# heartbeating the HealthMonitor — a quiet queue must not look like a hang
+_IDLE_POLL_S = 0.05
+
 
 class _PrioQueue:
     """Two-priority queue: decode items overtake prefill items.
@@ -164,8 +170,11 @@ class _PrioQueue:
             self._dqs[prio].append(item)
         self._sem.release()
 
-    def get(self):
-        self._sem.acquire()
+    def get(self, timeout: Optional[float] = None):
+        """Pop the highest-priority item; with ``timeout``, returns None
+        when nothing arrives in time (lets idle workers heartbeat)."""
+        if not self._sem.acquire(timeout=timeout):
+            return None
         with self._lock:
             for dq in self._dqs:
                 if dq:
@@ -233,7 +242,9 @@ class PipelineServeEngine:
                  n_groups: Optional[int] = None, eos: Optional[int] = None,
                  links: Optional[List[ServeLink]] = None,
                  capacity: int = 128, temperature: float = 0.0,
-                 seed: int = 0, mode: str = "async", name: str = "replica0"):
+                 seed: int = 0, mode: str = "async", name: str = "replica0",
+                 faults: Optional[FaultPlan] = None,
+                 health: Optional[HealthMonitor] = None):
         if mode not in ("async", "serial"):
             raise ValueError(f"mode must be 'async' or 'serial', got {mode!r}")
         self.runner = runner
@@ -264,6 +275,18 @@ class PipelineServeEngine:
         self.link_model_s: List[List[float]] = [[] for _ in self.links]
         self._sched: Optional[SlotScheduler] = None
         self.stats: Dict[str, float] = {}
+        # fault injection + measured health; a shared HealthMonitor may be
+        # passed in so a DivergenceMonitor / FailureDetector outside the
+        # engine observes this replica live
+        self.faults = faults if faults is not None else FaultPlan()
+        self.fault_trace = FaultTrace()
+        self.health = health if health is not None else HealthMonitor(
+            self.n_stages, len(self.links))
+        self._link_xfers = [0] * len(self.links)
+        self._stage_items = [0] * self.n_stages
+        # on a crash/failure exit, records finished before death land here
+        # so the router can merge them and re-admit only the unfinished
+        self.crash_records: Dict[int, RequestRecord] = {}
 
     # -- wave helpers --------------------------------------------------------
     def _slot(self, g: int, lane: int) -> int:
@@ -301,19 +324,55 @@ class PipelineServeEngine:
         jax.block_until_ready((x, p))
 
     # -- execution backends --------------------------------------------------
+    def _stage_run(self, si: int, item: _Item) -> None:
+        """Run one work item through stage ``si``, applying any scheduled
+        stall and reporting occupancy + heartbeat to the health monitor.
+        The per-stage item counter is owned by the single thread running
+        this stage, so fault indices are exact."""
+        k = self._stage_items[si]
+        self._stage_items[si] = k + 1
+        stall = self.faults.stage_stall_s(si, k)
+        if stall > 0:
+            self.fault_trace.record("stage_stall", si, k, stall)
+            time.sleep(stall)
+        t0 = time.perf_counter()
+        self.stages[si].run_item(item)
+        self.health.record_stage(si, time.perf_counter() - t0,
+                                 time.monotonic())
+
+    def _link_run(self, li: int, item: _Item) -> None:
+        """Push one activation across link ``li``: quantize, sleep the
+        (possibly degraded + jittered) wire time, report measured vs
+        modeled occupancy.  The transfer counter is owned by the single
+        thread shuttling this link."""
+        k = self._link_xfers[li]
+        self._link_xfers[li] = k + 1
+        t0 = time.perf_counter()
+        x, nbytes, lat = self.links[li].transfer(item.x)
+        factor = self.faults.link_factor(li, k)
+        jitter = self.faults.link_jitter(li, k)
+        if factor != 1.0:
+            self.fault_trace.record("link_degrade", li, k, factor)
+        if jitter > 0.0:
+            self.fault_trace.record("link_jitter", li, k, jitter)
+        sleep_s = lat * factor + jitter
+        if sleep_s > 0:
+            time.sleep(sleep_s)
+        if item.kind == "decode":
+            wall = time.perf_counter() - t0
+            self.link_decode_s[li].append(wall)
+            self.link_model_s[li].append(lat)
+            # the monitor sees measured wall vs the *deployed spec's*
+            # prediction — divergence is how it learns about the fault
+            self.health.record_link(li, nbytes, wall, lat)
+        item.x = x
+        item.link_s += sleep_s
+
     def _serial_dispatch(self, item: _Item, done: "queue.SimpleQueue"):
-        for si, st in enumerate(self.stages):
-            st.run_item(item)
+        for si in range(self.n_stages):
+            self._stage_run(si, item)
             if si < len(self.links):
-                t0 = time.perf_counter()
-                x, _, lat = self.links[si].transfer(item.x)
-                if lat > 0:
-                    time.sleep(lat)
-                if item.kind == "decode":
-                    self.link_decode_s[si].append(time.perf_counter() - t0)
-                    self.link_model_s[si].append(lat)
-                item.x = x
-                item.link_s += lat
+                self._link_run(si, item)
         item.x = np.asarray(item.x)
         done.put(item)
 
@@ -329,12 +388,18 @@ class PipelineServeEngine:
             last = si == self.n_stages - 1
             out_q = done if last else self._qs[2 * si + 1]
             while True:
-                item = in_q.get()
+                item = in_q.get(timeout=_IDLE_POLL_S)
+                if item is None:                   # idle poll: still alive
+                    self.health.heartbeat(si, time.monotonic())
+                    continue
                 if item is _STOP:
                     out_q.put(_STOP)
                     return
                 try:
-                    self.stages[si].run_item(item)
+                    # _stage_run heartbeats on completion; a worker stuck
+                    # inside a stalled stage call heartbeats *nothing*,
+                    # which is exactly what FailureDetector catches
+                    self._stage_run(si, item)
                     if last:
                         # hand the driver host memory: the device->host copy
                         # belongs in this worker, not on the driver's
@@ -354,16 +419,7 @@ class PipelineServeEngine:
                     out_q.put(_STOP)
                     return
                 try:
-                    t0 = time.perf_counter()
-                    x, _, lat = self.links[li].transfer(item.x)
-                    if lat > 0:
-                        time.sleep(lat)
-                    if item.kind == "decode":
-                        self.link_decode_s[li].append(
-                            time.perf_counter() - t0)
-                        self.link_model_s[li].append(lat)
-                    item.x = x
-                    item.link_s += lat
+                    self._link_run(li, item)
                     out_q.put(item)
                 except BaseException as e:
                     self._errors.append(e)
@@ -388,6 +444,13 @@ class PipelineServeEngine:
         sched = self._sched
         return sched.outstanding if sched is not None else 0
 
+    @property
+    def n_submitted(self) -> int:
+        """Requests this run has drained into its scheduler so far (the
+        router's drained-everything signal; 0 outside a run)."""
+        sched = self._sched
+        return len(sched.records) if sched is not None else 0
+
     def run(self, stream: RequestStream,
             max_wall_s: float = 120.0) -> ServeReport:
         """Serve the stream to completion (admit -> prefill -> wave decode
@@ -398,6 +461,11 @@ class PipelineServeEngine:
             st.decode_s = []
         self.link_decode_s = [[] for _ in self.links]
         self.link_model_s = [[] for _ in self.links]
+        self.fault_trace = FaultTrace()          # per-run fault log
+        self._link_xfers = [0] * len(self.links)
+        self._stage_items = [0] * self.n_stages
+        self.crash_records = {}
+        crash_at = self.faults.crash_step
         done: "queue.SimpleQueue" = queue.SimpleQueue()
         if self.mode == "async":
             self._start_workers(done)
@@ -466,6 +534,10 @@ class PipelineServeEngine:
                 if self._errors:
                     raise RuntimeError(
                         "serve worker failed") from self._errors[0]
+                if crash_at is not None and len(decode_done_t) >= crash_at:
+                    self.fault_trace.record("replica_crash", 0,
+                                            len(decode_done_t))
+                    raise ReplicaCrashError(self.name, len(decode_done_t))
                 admit_and_dispatch()
                 try:
                     item = done.get(timeout=0.002)
@@ -490,6 +562,14 @@ class PipelineServeEngine:
                         f"serve run exceeded {max_wall_s}s "
                         f"({sched.outstanding} request(s) outstanding)")
             wall = now()
+        except BaseException:
+            # stash what *did* finish before death so a router can merge
+            # these records and re-admit only the genuinely unfinished
+            for rid, rec in sched.records.items():
+                if rec.done:
+                    rec.replica = self.name
+                    self.crash_records[rid] = rec
+            raise
         finally:
             # error/timeout exits must not leak worker threads (blocked in
             # _PrioQueue.get) or leave the router seeing stale outstanding
@@ -543,4 +623,5 @@ class PipelineServeEngine:
             "def4_steps_per_s": round(def4_throughput(stage_means,
                                                       link_means), 2),
             "measured_steps_per_s": round(measured, 2),
+            "faults_injected": len(self.fault_trace),
         }

@@ -25,6 +25,9 @@ class Request:
     prompt: np.ndarray          # (T_prompt,) int32
     max_new: int = 16
     arrival_s: float = 0.0      # offset from stream start
+    deadline_s: Optional[float] = None   # absolute finish-by offset; a
+    # failover router sheds (finish='shed') instead of re-admitting a
+    # recovered request whose deadline already passed
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32)
@@ -43,13 +46,20 @@ class RequestRecord:
     first_token_s: Optional[float] = None
     done_s: Optional[float] = None
     tokens: List[int] = dataclasses.field(default_factory=list)
-    finish: Optional[str] = None        # 'eos' | 'length'
+    finish: Optional[str] = None        # 'eos' | 'length' | 'lost' | 'shed'
     replica: Optional[str] = None
 
     @property
     def done(self) -> bool:
-        """True once the request finished (EOS or length)."""
+        """True once the request finished successfully (EOS or length)."""
         return self.done_s is not None
+
+    @property
+    def failed(self) -> bool:
+        """True when the request terminated without completing: ``'lost'``
+        (stranded by replica death, retry budget exhausted) or ``'shed'``
+        (deadline passed before a failover re-admission)."""
+        return self.finish in ("lost", "shed")
 
     @property
     def ttft_s(self) -> Optional[float]:
@@ -109,6 +119,12 @@ class ServeReport:
         return sum(1 for r in self.records if r.done)
 
     @property
+    def n_failed(self) -> int:
+        """Requests that terminated without completing (lost or shed) —
+        never silent: a stranded request always leaves a failed record."""
+        return sum(1 for r in self.records if r.failed)
+
+    @property
     def total_tokens(self) -> int:
         """Generated tokens summed over all records (EOS excluded)."""
         return sum(r.n_valid_tokens(self.eos) for r in self.records)
@@ -127,6 +143,7 @@ class ServeReport:
         out = {
             "n_requests": len(self.records),
             "n_done": len(done),
+            "n_failed": self.n_failed,
             "wall_s": round(self.wall_s, 4),
             "total_tokens": self.total_tokens,
             "tokens_per_s": round(self.tokens_per_s, 1),

@@ -136,6 +136,12 @@ class SlotScheduler:
             raise ValueError(f"no generated token in slot {slot}")
         return st.record.tokens[-1]
 
+    def unfinished_requests(self) -> List[Request]:
+        """In-flight then waiting requests — what a failover router must
+        re-admit elsewhere if this scheduler's engine dies."""
+        active = [s.req for s in self._slots if s is not None]
+        return active + list(self._waiting)
+
     @property
     def n_waiting(self) -> int:
         """Requests queued but not yet admitted."""

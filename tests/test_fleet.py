@@ -130,6 +130,59 @@ def test_reclaim_stale_only_dead_pids(tmp_path):
     assert m.reclaim_stale(force=True) == [a]
 
 
+def test_lease_ttl_reclaims_hung_worker(tmp_path):
+    """A claim held by a *live* pid whose lease expired (hung worker) is
+    reclaimed with ``lease_ttl_s``; a refreshed lease survives."""
+    m = make_campaign(2).to_manifest(str(tmp_path / "m"))
+    a, b = m.cells[0].id, m.cells[1].id
+    m.claim(a, "hung")                 # our own pid: provably alive
+    m.claim(b, "slow-but-live")
+    _backdate(m._claim_path(a), by_s=60.0)
+    _backdate(m._claim_path(b), by_s=60.0)
+    # pid probing alone never touches live-pid claims, however old
+    assert m.reclaim_stale() == []
+    # b's worker heartbeats; a's lease stays expired
+    assert m.refresh_claim(b)
+    assert m.reclaim_stale(lease_ttl_s=30.0) == [a]
+    assert m.cell_state(a) == "pending"
+    assert m.cell_state(b) == "running"
+    # the reclaimed claim is gone, so a further refresh reports it
+    assert not m.refresh_claim(a)
+    with pytest.raises(ValueError, match="lease_ttl_s"):
+        m.reclaim_stale(lease_ttl_s=0.0)
+
+
+def test_lease_heartbeat_refreshes_until_claim_released(tmp_path):
+    """The worker's heartbeat thread keeps bumping the claim's mtime and
+    exits on its own once the claim disappears."""
+    import threading
+    import time as _time
+
+    import repro.fleet.worker as W
+    m = make_campaign(1).to_manifest(str(tmp_path / "m"))
+    cid = m.cells[0].id
+    m.claim(cid, "w")
+    _backdate(m._claim_path(cid), by_s=60.0)
+    before = os.stat(m._claim_path(cid)).st_mtime
+    stop = threading.Event()
+    th = threading.Thread(target=W._lease_heartbeat,
+                          args=(m, cid, 0.3, stop), daemon=True)
+    th.start()
+    _time.sleep(0.4)                   # >= one heartbeat period (lease/3)
+    assert os.stat(m._claim_path(cid)).st_mtime > before
+    m.release(cid)                     # claim vanishes mid-heartbeat
+    th.join(timeout=3.0)
+    assert not th.is_alive()
+    stop.set()
+
+
+def test_run_worker_validates_lease(tmp_path):
+    d = str(tmp_path / "m")
+    make_campaign(1).to_manifest(d)
+    with pytest.raises(ValueError, match="lease_s"):
+        run_worker(d, lease_s=0.0)
+
+
 # -- merge edge cases ---------------------------------------------------------
 
 def test_merge_empty_shard_set_raises(tmp_path):

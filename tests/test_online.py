@@ -271,6 +271,27 @@ def test_online_decisions_deterministic(drift_run):
     assert [d.cuts for d in replay] == [d.cuts for d in [first] + rest]
 
 
+def test_warm_front_bounded_by_crowding_distance():
+    """The carried warm seed is capped at ``max_warm_front`` rows chosen
+    by crowding distance, and the cap holds across drift steps (a long
+    mission must not grow the seed without bound)."""
+    base = small_system(4)
+    spec = small_spec(base)
+    rp = OnlineRepartitioner(spec, max_warm_front=2)
+    d0 = rp.update(base)
+    assert d0.trigger == "event"                   # default provenance
+    assert rp._front_cuts is not None and len(rp._front_cuts) <= 2
+    # every carried row is a member of the front it was truncated from
+    front = {tuple(e.cuts) for e in d0.result.pareto}
+    assert all(tuple(int(c) for c in row) in front
+               for row in rp._front_cuts)
+    d1 = rp.update(degrade_link(base, 0, 8.0), trigger="measured")
+    assert d1.trigger == "measured"                # observed, not told
+    assert len(rp._front_cuts) <= 2
+    with pytest.raises(ValueError, match="max_warm_front"):
+        OnlineRepartitioner(spec, max_warm_front=0)
+
+
 def test_online_forces_jit_strategy():
     spec = small_spec(small_system())
     spec = dataclasses.replace(
