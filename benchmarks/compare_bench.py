@@ -12,7 +12,7 @@ Tracked keys:
   ``jit_nsga_evals_per_s``, ``jit_nsga_scale_evals_per_s``,
   ``serve_tokens_per_s``, ``requests_recovered``
 * lower is better:  ``campaign_wall_s``, ``fleet_sweep_wall_s``,
-  ``recovery_ms``
+  ``recovery_ms``, ``serve_obs_overhead_pct``
 
 Baselines are only comparable when both their ``bench_schema`` *and* their
 ``mode`` (quick vs full) match the current run's: key semantics change
@@ -56,7 +56,7 @@ HIGHER_BETTER = ("batch_evals_per_s", "nsga_evals_per_s",
                  "serve_tokens_per_s", "repartition_warm_speedup",
                  "requests_recovered")
 LOWER_BETTER = ("campaign_wall_s", "fleet_sweep_wall_s", "repartition_ms",
-                "recovery_ms")
+                "recovery_ms", "serve_obs_overhead_pct")
 
 
 def load(path: str) -> Optional[dict]:

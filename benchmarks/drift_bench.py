@@ -18,7 +18,7 @@ EfficientNet-B0:
   wall.
 
 ``repartition_warm_speedup = cold_ms / repartition_ms`` is merged into
-``BENCH_explorer.json`` (schema 7) so ``compare_bench.py`` gates it against
+``BENCH_explorer.json`` (schema 8) so ``compare_bench.py`` gates it against
 the committed floor and the trend dashboard plots ``repartition_ms``;
 ``--min-warm-speedup`` makes this run itself the hard ≥ 20× gate in CI.
 
@@ -44,7 +44,7 @@ from repro.explore import (ExplorationSpec, ModelRef, OnlineRepartitioner,
                            degrade_link, drop_node, jit_runner_cache_size)
 from repro.utils.atomicio import atomic_write_json
 
-BENCH_SCHEMA = 7
+BENCH_SCHEMA = 8
 DRIFT_MODEL = "efficientnet_b0"
 
 

@@ -267,8 +267,10 @@ def main() -> int:
     # serve_bench.py; schema 6 the repartition_* keys merged in by
     # drift_bench.py; schema 7 the fault-recovery keys — recovery_ms,
     # requests_recovered, repartition_trigger — merged in by
-    # fault_smoke.py --json)
-    out = {"mode": "quick" if args.quick else "full", "bench_schema": 7}
+    # fault_smoke.py --json; schema 8 the repro.obs tracing-overhead keys
+    # — serve_obs_overhead_pct, serve_traced_tokens_per_s — merged in by
+    # serve_bench.py)
+    out = {"mode": "quick" if args.quick else "full", "bench_schema": 8}
     if args.quick:
         speedup = bench_eval_paths(out, n_candidates=1024, scalar_cap=128)
         np_rate = bench_nsga_run(out, pop_size=2048, n_gen=3)

@@ -19,7 +19,7 @@ replica's :class:`~repro.serve.health.HealthMonitor` live.  Fails loudly
   the warm re-partition it triggers records ``trigger='measured'``.
 
 With ``--json`` the recovery metrics are merged into the explorer bench
-artifact (schema 7): ``recovery_ms``, ``requests_recovered``, and
+artifact (schema 8): ``recovery_ms``, ``requests_recovered``, and
 ``repartition_trigger``.
 
   PYTHONPATH=src python benchmarks/fault_smoke.py
@@ -50,7 +50,7 @@ from repro.serve import (DivergenceMonitor, FaultPlan, HealthMonitor,
 from repro.serving.pipeline import PartitionedLMRunner
 from repro.utils.atomicio import atomic_write_json
 
-BENCH_SCHEMA = 7
+BENCH_SCHEMA = 8
 N_REQUESTS = 12
 MAX_NEW = 8
 PROMPT_LEN = 8

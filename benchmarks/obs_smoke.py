@@ -1,0 +1,293 @@
+"""CI observability smoke for ``repro.obs`` (obs-smoke job).
+
+A traffic burst is served through a two-replica router with a live
+``Obs`` handle while a :class:`~repro.serve.faults.FaultPlan` degrades a
+link mid-stream and then kills one replica.  The exported Chrome trace
+must tell the whole failover story, and tracing must stay cheap.  Fails
+loudly (non-zero exit) unless:
+
+* **tracing is near-free**: best-of-3 async throughput with a live
+  tracer is >= ``MIN_TPS_RATIO`` (0.95x) of the untraced run on the same
+  compiled runner (the <5% budget ``serve_bench.py --max-obs-overhead``
+  gates on the explorer chain);
+* the trace-event JSON **validates** (:func:`validate_chrome_trace`) and
+  every stage/request span **nests** inside the survivor's driver span;
+* the **failover is visible**: the crashed replica's tracks end before
+  the survivor's, a ``replica_crash`` instant marks the death, salvaged
+  requests keep their spans on the crashed replica's ``requests`` track,
+  and every failed-over rid re-appears on the survivor's;
+* the **per-request breakdown reconciles**: each ``cat='request'`` span's
+  latency/TTFT matches the merged :class:`~repro.serve.request.ServeReport`
+  record, the nearest-rank p50/p95 footer matches ``report.summary()``,
+  and ``python -m repro.obs`` renders the trace with exit code 0.
+
+  PYTHONPATH=src python benchmarks/obs_smoke.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Any, Dict, List, Tuple
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+
+from repro.core.link import LinkModel
+from repro.models.registry import build_model, get_config
+from repro.obs import (NOOP_OBS, Obs, load_chrome_trace,
+                       validate_chrome_trace, write_chrome_trace)
+from repro.obs.cli import main as obs_cli_main
+from repro.obs.cli import request_rows
+from repro.obs.stats import latency_summary
+from repro.serve import (FaultPlan, LinkDegrade, PipelineServeEngine,
+                         ReplicaCrash, ReplicaRouter, Request, ServeLink,
+                         poisson_traffic, stream_of)
+from repro.serving.pipeline import PartitionedLMRunner
+
+N_REQUESTS = 12
+MAX_NEW = 8
+PROMPT_LEN = 8
+DEGRADE = 8.0          # injected link slow-down factor
+DEGRADE_AT = 4         # ... from the link's 4th transfer (mid-stream)
+CRASH_STEP = 14        # replica dies after 14 decode steps: the first
+#                        admission wave has finished (-> salvage), later
+#                        waves must fail over (the whole burst would
+#                        need ~24 steps)
+MIN_TPS_RATIO = 0.95   # traced async throughput vs untraced, best-of-3
+LAT_TOL_MS = 0.05      # trace-vs-report reconciliation tolerance
+
+
+def track_names(events: List[Dict[str, Any]]) -> Dict[Tuple[int, int], str]:
+    """(pid, tid) -> "process/thread" from the trace's metadata events
+    (the naming scheme ``repro.obs.chrome`` documents)."""
+    procs: Dict[int, str] = {}
+    out: Dict[Tuple[int, int], str] = {}
+    for ev in events:
+        if ev.get("ph") == "M" and ev.get("name") == "process_name":
+            procs[ev["pid"]] = ev["args"]["name"]
+    for ev in events:
+        if ev.get("ph") == "M" and ev.get("name") == "thread_name":
+            out[(ev["pid"], ev["tid"])] = (
+                f"{procs.get(ev['pid'], ev['pid'])}/{ev['args']['name']}")
+    return out
+
+
+def async_tokens_per_s(runner, burst, obs) -> float:
+    """One clean async run on the shared compiled runner -> tokens/s."""
+    eng = PipelineServeEngine(runner, n_slots=4, eos=None, mode="async",
+                              capacity=32, obs=obs)
+    eng.warmup(prompt_len=PROMPT_LEN)
+    rep = eng.run(stream_of([Request(r.rid, r.prompt, r.max_new, 0.0)
+                             for r in burst]))
+    return rep.summary()["tokens_per_s"]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", default="obs_trace.json", metavar="FILE",
+                    help="where to export the failover Chrome trace")
+    args = ap.parse_args()
+
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    runner = PartitionedLMRunner(model, params, cuts=[0])
+
+    reqs = poisson_traffic(N_REQUESTS, rate_rps=2000.0, vocab=cfg.vocab,
+                           prompt_len=PROMPT_LEN, max_new=MAX_NEW, seed=7)
+    burst = [Request(r.rid, r.prompt, r.max_new, 0.0) for r in reqs]
+
+    fails: List[str] = []
+
+    # 1. tracing overhead: same runner (one compile), fresh engine per
+    # run.  One discarded run shakes out cache warmth; then interleaved
+    # order-alternating pairs, best-of-N per arm — per-run noise on a
+    # shared CI core is heavy-tailed (whole runs randomly lose 30%), so
+    # the max approximates the noise-free capability of each arm.  One
+    # escalation round before failing keeps a single unlucky window from
+    # gating the job.
+    async_tokens_per_s(runner, burst, NOOP_OBS)
+    off_runs: List[float] = []
+    on_runs: List[float] = []
+
+    def ratio_round(n_pairs: int) -> float:
+        for i in range(n_pairs):
+            arms = [(off_runs, NOOP_OBS), (on_runs, Obs.on())]
+            for sink, obs_arm in (arms if i % 2 == 0 else arms[::-1]):
+                sink.append(async_tokens_per_s(runner, burst, obs_arm))
+        return max(on_runs) / max(off_runs)
+
+    ratio = ratio_round(3)
+    if ratio < MIN_TPS_RATIO:
+        ratio = ratio_round(3)
+    print(f"[obs-smoke] async tokens/s untraced={max(off_runs):.0f} "
+          f"traced={max(on_runs):.0f} ratio={ratio:.3f} "
+          f"({len(off_runs)} run(s)/arm)")
+    if ratio < MIN_TPS_RATIO:
+        fails.append(f"traced throughput ratio {ratio:.3f} < "
+                     f"{MIN_TPS_RATIO} — tracing is not near-free")
+
+    # 2. traced fault-injected routed run: degraded link, then one death
+    obs = Obs.on()
+    plan = FaultPlan(events=(
+        LinkDegrade(0, DEGRADE, at_transfer=DEGRADE_AT),
+        ReplicaCrash(at_step=CRASH_STEP)))
+    links = [ServeLink(model=LinkModel(name="slow", rate_bps=1e9,
+                                       t_setup_s=0.02))
+             for _ in range(runner.n_stages - 1)]
+    crashy = PipelineServeEngine(runner, n_slots=4, eos=None, mode="async",
+                                 capacity=32, name="crashy", links=links,
+                                 faults=plan, obs=obs)
+    survivor = PipelineServeEngine(runner, n_slots=4, eos=None,
+                                   mode="async", capacity=32,
+                                   name="survivor", obs=obs)
+    crashy.warmup(prompt_len=PROMPT_LEN)
+    survivor.warmup(prompt_len=PROMPT_LEN)
+    rep = ReplicaRouter([crashy, survivor], obs=obs).serve(
+        list(burst), realtime=False)
+
+    if rep.n_done != N_REQUESTS or rep.n_failed != 0:
+        fails.append(f"routed run lost requests: {rep.n_done} done, "
+                     f"{rep.n_failed} failed")
+
+    write_chrome_trace(args.trace, obs.tracer)
+    trace = load_chrome_trace(args.trace)
+    print(f"[obs-smoke] exported {len(trace['traceEvents'])} events "
+          f"to {args.trace}")
+
+    # 3. structural validity
+    errors = validate_chrome_trace(trace)
+    if errors:
+        fails.append(f"trace failed validation: {errors[:3]}")
+    if obs.tracer.dropped:
+        fails.append(f"{obs.tracer.dropped} span(s) dropped — ring "
+                     "capacity too small for the smoke workload")
+
+    events = trace["traceEvents"]
+    tracks = track_names(events)
+
+    def on_track(prefix: str, ph: str = "X") -> List[Dict[str, Any]]:
+        return [ev for ev in events if ev.get("ph") == ph
+                and tracks.get((ev.get("pid"), ev.get("tid")),
+                               "").startswith(prefix)]
+
+    # 4. nesting: every survivor stage/request span lies inside the
+    # survivor's single driver span (the crashed replica never completes
+    # its driver span — its death is the replica_crash instant instead)
+    drivers = [ev for ev in on_track("survivor/driver")
+               if ev.get("cat") == "driver"]
+    if len(drivers) != 1:
+        fails.append(f"expected 1 survivor driver span, got {len(drivers)}")
+    else:
+        d0 = drivers[0]["ts"]
+        d1 = d0 + drivers[0]["dur"]
+        eps = 1e3                                # 1 ms slack, in us
+        inner = [ev for ev in on_track("survivor/")
+                 if ev.get("cat") in ("stage", "request")]
+        bad = [ev for ev in inner
+               if ev["ts"] < d0 - eps or ev["ts"] + ev["dur"] > d1 + eps]
+        if not inner:
+            fails.append("no stage/request spans on the survivor")
+        if bad:
+            fails.append(f"{len(bad)} survivor span(s) fall outside the "
+                         f"driver span (e.g. {bad[0]['name']})")
+
+    # 5. the failover story: crash instant, crashy's tracks end first,
+    # salvage kept on crashy, every failed-over rid lands on the survivor
+    crash_marks = on_track("crashy/driver", ph="i")
+    if not any(ev["name"] == "replica_crash" for ev in crash_marks):
+        fails.append("no replica_crash instant on crashy/driver")
+    crashy_end = max((ev["ts"] + ev.get("dur", 0.0)
+                      for ev in on_track("crashy/")), default=0.0)
+    surv_end = max((ev["ts"] + ev.get("dur", 0.0)
+                    for ev in on_track("survivor/")), default=0.0)
+    if not crashy_end < surv_end:
+        fails.append("crashed replica's tracks do not end before the "
+                     f"survivor's ({crashy_end:.0f} !< {surv_end:.0f} us)")
+
+    router_marks = on_track("router/", ph="i")
+    by_name: Dict[str, List[Dict[str, Any]]] = {}
+    for ev in router_marks:
+        by_name.setdefault(ev["name"], []).append(ev)
+    salvaged = {ev["args"]["rid"] for ev in by_name.get("salvage", [])}
+    failed_over = {ev["args"]["rid"] for ev in by_name.get("failover", [])}
+    if not by_name.get("replica_failed"):
+        fails.append("no replica_failed instant on the router track")
+    if not salvaged:
+        fails.append("no request salvaged before the crash "
+                     f"(CRASH_STEP={CRASH_STEP} fired too early)")
+    if not failed_over:
+        fails.append("no request failed over to the survivor")
+    crashy_rids = {ev["args"]["rid"] for ev in on_track("crashy/requests")
+                   if ev.get("cat") == "request"}
+    surv_rids = {ev["args"]["rid"] for ev in on_track("survivor/requests")
+                 if ev.get("cat") == "request"}
+    if not salvaged <= crashy_rids:
+        fails.append(f"salvaged rids {sorted(salvaged - crashy_rids)} "
+                     "missing from crashy's requests track")
+    if not failed_over <= surv_rids:
+        fails.append(f"failed-over rids {sorted(failed_over - surv_rids)} "
+                     "missing from the survivor's requests track")
+
+    # 6. per-request reconciliation: the trace's breakdown is the report
+    rows = request_rows(trace)
+    recs = {r.rid: r for r in rep.records}
+    if sorted(r["rid"] for r in rows) != sorted(recs):
+        fails.append(f"trace has {len(rows)} request span(s) for "
+                     f"{len(recs)} report record(s)")
+    else:
+        for row in rows:
+            rec = recs[row["rid"]]
+            if abs(row["latency_ms"] - rec.latency_s * 1e3) > LAT_TOL_MS:
+                fails.append(f"rid {row['rid']} latency: trace "
+                             f"{row['latency_ms']:.3f} ms != report "
+                             f"{rec.latency_s * 1e3:.3f} ms")
+            if rec.ttft_s is not None and abs(
+                    row["ttft_ms"] - rec.ttft_s * 1e3) > LAT_TOL_MS:
+                fails.append(f"rid {row['rid']} TTFT: trace "
+                             f"{row['ttft_ms']:.3f} ms != report "
+                             f"{rec.ttft_s * 1e3:.3f} ms")
+        summ = rep.summary()
+        lat = latency_summary([r["latency_ms"] for r in rows])
+        ttft = latency_summary([r["ttft_ms"] for r in rows
+                                if r["ttft_ms"] is not None])
+        for key, got in (("latency_p50_ms", lat["p50"]),
+                         ("latency_p95_ms", lat["p95"]),
+                         ("ttft_p50_ms", ttft["p50"]),
+                         ("ttft_p95_ms", ttft["p95"])):
+            if abs(got - summ[key]) > LAT_TOL_MS:
+                fails.append(f"{key}: trace footer {got:.3f} != "
+                             f"report {summ[key]:.3f}")
+
+    # 7. the CLI renders the same file (its output is the CI log's copy
+    # of the breakdown; exit 2 would mean it rejected its own export)
+    rc = obs_cli_main([args.trace, "--top", "5"])
+    if rc != 0:
+        fails.append(f"python -m repro.obs exited {rc} on the trace")
+
+    snap = obs.metrics.snapshot()
+    # failed-over requests are routed twice (initial + re-admission)
+    want_routed = N_REQUESTS + len(failed_over)
+    if snap.get("router_requests_routed") != want_routed:
+        fails.append(f"router_requests_routed = "
+                     f"{snap.get('router_requests_routed')}, expected "
+                     f"{want_routed}")
+    if snap.get("serve_replica_crashes") != 1:
+        fails.append(f"serve_replica_crashes = "
+                     f"{snap.get('serve_replica_crashes')}, expected 1")
+
+    for msg in fails:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    if fails:
+        return 1
+    print(f"[obs-smoke] OK: ratio={ratio:.3f}, {len(events)} events, "
+          f"{len(salvaged)} salvaged + {len(failed_over)} failed over, "
+          f"breakdown reconciles with ServeReport")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,9 +4,9 @@ The analyzer is a plain ``ast`` pass (stdlib only — it must run in any CI
 leg without installing jax) over the repo's own source.  Rules are
 repo-specific: they encode the three contract surfaces whose breakage is
 silent or runtime-only — jit trace-safety (RPR1xx), Pallas kernel call
-contracts (RPR2xx) and the fleet/artifact atomic-write discipline
-(RPR3xx).  See ``CONTRIBUTING.md`` for the rule catalog and how to add a
-rule.
+contracts (RPR2xx), the fleet/artifact atomic-write discipline (RPR3xx)
+and monotonic-clock timing discipline (RPR4xx).  See ``CONTRIBUTING.md``
+for the rule catalog and how to add a rule.
 """
 
 from __future__ import annotations
@@ -160,6 +160,7 @@ def _load_builtin_rules() -> None:
     # imported lazily so `import repro.analysis.core` alone never cycles
     from repro.analysis import rules_fleet  # noqa: F401
     from repro.analysis import rules_kernel  # noqa: F401
+    from repro.analysis import rules_obs  # noqa: F401
     from repro.analysis import rules_trace  # noqa: F401
 
 

@@ -48,6 +48,7 @@ from repro.explore.filters import candidate_positions
 from repro.explore.result import ExplorationResult
 from repro.explore.runner import run_search
 from repro.explore.spec import ExplorationSpec, SearchSettings, SystemSpec
+from repro.obs.handle import NOOP_OBS, Obs
 
 SystemLike = Union[SystemSpec, SystemConfig]
 
@@ -147,11 +148,14 @@ class OnlineRepartitioner:
 
     def __init__(self, spec: ExplorationSpec, *,
                  settings: Optional[SearchSettings] = None,
-                 max_warm_front: int = 64):
+                 max_warm_front: int = 64,
+                 obs: Optional[Obs] = None):
         if max_warm_front < 1:
             raise ValueError(
                 f"max_warm_front must be >= 1, got {max_warm_front}")
         self.max_warm_front = max_warm_front
+        # repartition decisions land on the "health/repartition" track
+        self.obs = obs if obs is not None else NOOP_OBS
         self.spec = spec
         settings = settings or spec.search
         if settings.strategy != "jit_nsga2":
@@ -215,6 +219,16 @@ class OnlineRepartitioner:
             feasible=feasible, pareto_size=len(res.pareto),
             strategy_used=res.strategy_used, result=res, trigger=trigger)
         self._last_cuts = cuts
+        if self.obs.enabled:
+            self.obs.tracer.instant(
+                "repartition", cat="health", track="health/repartition",
+                args={"label": label, "trigger": trigger,
+                      "changed": decision.changed,
+                      "feasible": feasible, "ms": round(ms, 3)})
+            self.obs.metrics.counter("repartition_decisions").inc()
+            if decision.changed:
+                self.obs.metrics.counter("repartition_changes").inc()
+            self.obs.metrics.histogram("repartition_ms").observe(ms)
         if res.pareto:
             front = res.pareto
             if len(front) > self.max_warm_front:

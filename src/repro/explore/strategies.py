@@ -30,6 +30,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
+import time
 import warnings
 from typing import Dict, List, Optional, Protocol, Tuple, Type, runtime_checkable
 
@@ -41,6 +42,7 @@ from repro.core.partition import (Constraints, PartitionEval,
                                   PartitionEvaluator)
 from repro.explore.filters import feasible_cut_rows
 from repro.explore.spec import SearchSettings
+from repro.obs.metrics import default_registry
 
 # full per-point scans are kept (for Fig.-2-style plots) only below this size
 _ALL_EVALS_CAP = 16384
@@ -407,7 +409,12 @@ class JitNSGA2Search:
                pop, n_cuts, len(table), settings.allow_multi_tensor_cuts,
                settings.rank_block, settings.rank_impl, n_restarts,
                settings.rank_devices)
+        reg = default_registry()
+        t_search = time.perf_counter()
         runner = _JIT_RUNNER_CACHE.get(key)
+        fresh_runner = runner is None
+        reg.counter("search_jit_runner_cache_misses" if fresh_runner
+                    else "search_jit_runner_cache_hits").inc()
         if runner is None:
             eval_cuts = make_runtime_eval_fn(tables, ctx.objectives,
                                              ctx.constraints)
@@ -432,6 +439,8 @@ class JitNSGA2Search:
 
         seeds = _gene_seeds(cands, table, n_cuts)
         warm = _warm_genes(ctx, table)
+        if warm is not None:
+            reg.counter("search_warm_starts").inc()
         if n_restarts > 1:
             X0s = None
             if warm is not None:
@@ -455,6 +464,12 @@ class JitNSGA2Search:
                 pop_size=pop, n_gen=n_gen, seed=settings.seed,
                 candidates=seeds, runner=runner, X0=X0,
                 eval_args=eval_args)
+        search_s = time.perf_counter() - t_search
+        reg.histogram("search_wall_s").observe(search_s)
+        if fresh_runner:
+            # first call through a fresh runner pays the XLA compilation,
+            # so its wall is the compile-cost signal the drift loop watches
+            reg.histogram("search_jit_compile_s").observe(search_s)
         if len(X) > self._DENSE_PARETO_MAX:
             p_idx = pareto_indices_blocked(X, F, CV,
                                            block=settings.rank_block or 2048,

@@ -34,6 +34,7 @@ import traceback
 from typing import Any, Dict, Optional
 
 from repro.fleet.manifest import CellInfo, Manifest
+from repro.obs.metrics import default_registry
 
 
 def default_worker_id() -> str:
@@ -84,8 +85,12 @@ def _lease_heartbeat(manifest: Manifest, cell_id: str, lease_s: float,
     """Refresh the claim's lease every ``lease_s / 3`` until stopped (or
     until the claim disappears — released or reclaimed from under us)."""
     period = max(lease_s / 3.0, 0.05)
+    hist = default_registry().histogram("fleet_heartbeat_refresh_s")
     while not stop.wait(period):
-        if not manifest.refresh_claim(cell_id):
+        t0 = time.perf_counter()
+        ok = manifest.refresh_claim(cell_id)
+        hist.observe(time.perf_counter() - t0)
+        if not ok:
             return
 
 
@@ -106,6 +111,7 @@ def run_worker(manifest_dir: str, worker_id: Optional[str] = None,
     wid = worker_id or default_worker_id()
     stats = {"done": 0, "failed": 0}
     caches: Dict[int, _ModelCache] = {}
+    reg = default_registry()
 
     def say(msg: str) -> None:
         if verbose:
@@ -125,11 +131,14 @@ def run_worker(manifest_dir: str, worker_id: Optional[str] = None,
             # other workers hold the remaining cells: recover any whose
             # owner died on this host or whose lease expired (hung worker
             # on any host), then wait for live ones
-            if manifest.reclaim_stale(lease_ttl_s=lease_s):
+            reclaimed = manifest.reclaim_stale(lease_ttl_s=lease_s)
+            if reclaimed:
+                reg.counter("fleet_cells_reclaimed").inc(len(reclaimed))
                 continue
             time.sleep(poll_s)
             continue
         say(f"claimed {claimed.id}")
+        reg.counter("fleet_cells_claimed").inc()
         stop_hb = threading.Event()
         hb = threading.Thread(target=_lease_heartbeat,
                               args=(manifest, claimed.id, lease_s, stop_hb),
@@ -148,6 +157,7 @@ def run_worker(manifest_dir: str, worker_id: Optional[str] = None,
             n = manifest.record_failure(claimed.id, wid,
                                         traceback.format_exc())
             stats["failed"] += 1
+            reg.counter("fleet_cells_failed").inc()
             say(f"FAILED {claimed.id} (attempt {n}/"
                 f"{manifest.max_retries + 1})")
             continue
@@ -155,4 +165,6 @@ def run_worker(manifest_dir: str, worker_id: Optional[str] = None,
         hb.join(timeout=5.0)
         manifest.write_shard(claimed.id, entry, wid)
         stats["done"] += 1
+        reg.counter("fleet_cells_done").inc()
+        reg.histogram("fleet_cell_wall_s").observe(entry["wall_s"])
         say(f"done {claimed.id} ({entry['wall_s']:.2f}s)")

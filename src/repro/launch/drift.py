@@ -38,6 +38,8 @@ from repro.explore import (ExplorationSpec, ModelRef, OnlineRepartitioner,
                            PlatformSpec, SearchSettings, SystemSpec,
                            degrade_link, drop_node, jit_runner_cache_size)
 from repro.models.registry import ARCH_IDS, build_model, get_config
+from repro.obs import NOOP_OBS, Obs, write_chrome_trace
+from repro.utils.atomicio import atomic_write_json
 
 
 def drift_schedule(base: SystemSpec):
@@ -70,6 +72,14 @@ def main():
                     help="--measured: injected link slow-down factor")
     ap.add_argument("--degrade-at", type=int, default=8,
                     help="--measured: link transfer index the fault starts")
+    ap.add_argument("--timeline", default="drift_timeline.json",
+                    metavar="PATH",
+                    help="--measured: where the drift timeline artifact "
+                         "(trigger decision + measured-vs-modeled "
+                         "divergence series) is written")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="--measured: also write a Chrome trace-event JSON "
+                         "of the served burst")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -136,13 +146,16 @@ def main():
 def measured_drift(serve_ctx, cuts, args, cfg, rp, system):
     """Serve with an injected link degradation and let *measured*
     divergence — not an explicit drift event — trigger the warm
-    re-partition.  Returns the measured-trigger decision (None when the
-    monitor never fired)."""
+    re-partition.  Persists the drift timeline artifact (trigger decision
+    plus the measured-vs-modeled divergence series) to ``args.timeline``
+    and returns the measured-trigger decision (None when the monitor never
+    fired)."""
     from repro.serve import (DivergenceMonitor, FaultPlan, HealthMonitor,
                              LinkDegrade, PipelineServeEngine, ReplicaRouter,
                              Request, ServeLink, poisson_traffic)
     from repro.serving.pipeline import PartitionedLMRunner
 
+    obs = Obs.on() if getattr(args, "trace", None) else NOOP_OBS
     model, params = serve_ctx
     runner = PartitionedLMRunner(model, params, cuts=cuts)
     links = [ServeLink(model=get_link(args.link))
@@ -155,11 +168,12 @@ def measured_drift(serve_ctx, cuts, args, cfg, rp, system):
         LinkDegrade(0, args.degrade, at_transfer=args.degrade_at),))
     eng = PipelineServeEngine(runner, n_slots=8, n_groups=4, eos=None,
                               mode="async", capacity=64, links=links,
-                              faults=plan, health=health)
+                              faults=plan, health=health, obs=obs)
     eng.warmup(prompt_len=args.prompt_len)
     dm = DivergenceMonitor(system, enter=max(2.0, args.degrade / 2),
                            exit=1.5, min_breach=3, cooldown_s=2.0,
-                           min_samples=4)
+                           min_samples=4, obs=obs)
+    rp.obs = obs
 
     stop = threading.Event()
 
@@ -174,22 +188,69 @@ def measured_drift(serve_ctx, cuts, args, cfg, rp, system):
                            prompt_len=args.prompt_len, max_new=args.max_new,
                            seed=7)
     burst = [Request(r.rid, r.prompt, r.max_new, 0.0) for r in reqs]
-    rep = ReplicaRouter([eng]).serve(burst, realtime=False)
+    rep = ReplicaRouter([eng], obs=obs).serve(burst, realtime=False)
     stop.set()
     th.join(timeout=2.0)
     dm.observe(health)               # catch a fire pending at drain time
-    if not dm.signals:
+
+    d = None
+    if dm.signals:
+        sig = dm.signals[0]
+        d = rp.update(dm.drifted_system(), label=f"measured~link{sig.link}",
+                      trigger="measured")
+        print(f"[drift] measured {sig.divergence:.1f}x divergence on link "
+              f"{sig.link} (injected {args.degrade:g}x) -> warm re-partition "
+              f"{d.repartition_ms:.1f} ms, trigger={d.trigger}, "
+              f"changed={d.changed}; served {rep.n_done}/{len(burst)}")
+    else:
         print(f"[drift] measured: no divergence fired "
               f"(link0 div {health.link_divergence(0):.2f}x)")
-        return None
-    sig = dm.signals[0]
-    d = rp.update(dm.drifted_system(), label=f"measured~link{sig.link}",
-                  trigger="measured")
-    print(f"[drift] measured {sig.divergence:.1f}x divergence on link "
-          f"{sig.link} (injected {args.degrade:g}x) -> warm re-partition "
-          f"{d.repartition_ms:.1f} ms, trigger={d.trigger}, "
-          f"changed={d.changed}; served {rep.n_done}/{len(burst)}")
+
+    timeline = drift_timeline(dm, d, args, rep)
+    if getattr(args, "timeline", None):
+        atomic_write_json(args.timeline, timeline)
+        print(f"[drift] wrote drift timeline -> {args.timeline} "
+              f"({len(timeline['divergence_series'])} observation(s))")
+    if getattr(args, "trace", None):
+        write_chrome_trace(args.trace, obs.tracer)
+        print(f"[drift] wrote Chrome trace -> {args.trace}")
     return d
+
+
+def drift_timeline(dm, decision, args, rep) -> dict:
+    """The ``--measured`` run's persistent artifact: what fault was
+    injected, every (t, per-link divergence) observation the monitor saw
+    (measured wire wall vs the deployed spec's model), each fired signal,
+    and the re-partition decision the first signal triggered."""
+    t_base = dm.history[0][0] if dm.history else 0.0
+    out = {
+        "timeline_schema": 1,
+        "injected_fault": {"kind": "link_degrade", "link": 0,
+                           "factor": args.degrade,
+                           "at_transfer": args.degrade_at},
+        "monitor": {"enter": dm.enter, "exit": dm.exit,
+                    "min_breach": dm.min_breach,
+                    "cooldown_s": dm.cooldown_s,
+                    "min_samples": dm.min_samples},
+        "divergence_series": [
+            {"t_s": round(t - t_base, 4),
+             "links": [round(v, 4) for v in divs]}
+            for t, divs in dm.history],
+        "signals": [
+            {"t_s": round(s.at_s - t_base, 4), "link": s.link,
+             "divergence": round(s.divergence, 4)}
+            for s in dm.signals],
+        "served": {"n_done": rep.n_done, "n_requests": len(rep.records)},
+        "decision": None,
+    }
+    if decision is not None:
+        out["decision"] = {
+            "label": decision.label, "trigger": decision.trigger,
+            "changed": decision.changed, "feasible": decision.feasible,
+            "repartition_ms": round(decision.repartition_ms, 3),
+            "cuts": list(decision.cuts) if decision.cuts else None,
+        }
+    return out
 
 
 def serve_burst(serve_ctx, cuts, args, cfg, tag: str):

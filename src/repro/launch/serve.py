@@ -30,6 +30,7 @@ from repro.core.hwmodel.arch import EYERISS_LIKE, SIMBA_LIKE
 from repro.data.synthetic import make_batch_for
 from repro.explore import SearchSettings, explore_graph, lm_block_cuts
 from repro.models.registry import ARCH_IDS, build_model, get_config
+from repro.obs import NOOP_OBS, Obs, write_chrome_trace
 from repro.optim.optimizers import get_optimizer
 from repro.serve import (PipelineServeEngine, ReplicaRouter, ServeLink,
                          poisson_traffic)
@@ -48,7 +49,13 @@ def main():
     ap.add_argument("--link", default="eth10",
                     help="emulated inter-stage link (see repro.core.link)")
     ap.add_argument("--warm-steps", type=int, default=30)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the async run "
+                         "(open in Perfetto, or `python -m repro.obs PATH`)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write a JSON metrics snapshot after the run")
     args = ap.parse_args()
+    obs = Obs.on() if (args.trace or args.metrics) else NOOP_OBS
 
     cfg = get_config(args.arch).reduced()
     if cfg.family not in ("dense",):
@@ -90,20 +97,22 @@ def main():
                            vocab=cfg.vocab, prompt_len=args.prompt_len,
                            max_new=args.max_new, seed=123)
 
-    def make_replicas(mode):
+    def make_replicas(mode, obs=NOOP_OBS):
         reps = []
         for i in range(args.replicas):
             links = [ServeLink(model=get_link(args.link))
                      for _ in range(runner.n_stages - 1)]
             eng = PipelineServeEngine(runner, n_slots=8, n_groups=4,
                                       eos=None, mode=mode, capacity=64,
-                                      links=links, name=f"replica{i}")
+                                      links=links, name=f"replica{i}",
+                                      obs=obs)
             eng.warmup(prompt_len=args.prompt_len)
             reps.append(eng)
         return reps
 
-    rep_async = ReplicaRouter(make_replicas("async")).serve(
-        list(reqs), realtime=False)
+    # traced run: spans from every replica's stages/links plus the router
+    rep_async = ReplicaRouter(make_replicas("async", obs),
+                              obs=obs).serve(list(reqs), realtime=False)
     rep_serial = ReplicaRouter(make_replicas("serial")).serve(
         list(reqs), realtime=False)
 
@@ -120,6 +129,13 @@ def main():
     routed = rep_async.extra.get("routed_per_replica")
     if routed:
         print(f"[serve]   routed per replica: {routed}")
+    if args.trace:
+        write_chrome_trace(args.trace, obs.tracer)
+        print(f"[serve] wrote Chrome trace -> {args.trace} "
+              f"(python -m repro.obs {args.trace})")
+    if args.metrics:
+        obs.metrics.write_snapshot(args.metrics)
+        print(f"[serve] wrote metrics snapshot -> {args.metrics}")
     if rep_async.n_done != args.requests or rep_serial.n_done != args.requests:
         print("[serve] ERROR: dropped requests")
         return 1

@@ -26,12 +26,18 @@ samples and explicit timestamps.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import threading
 import time
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
 from repro.explore.spec import SystemSpec
+from repro.obs.handle import NOOP_OBS, Obs
+
+# divergence observations retained for the drift timeline artifact; at the
+# drift driver's 50 Hz poll this holds ~20 minutes of history
+_HISTORY_MAX = 65536
 
 
 class Ewma:
@@ -229,7 +235,8 @@ class DivergenceMonitor:
 
     def __init__(self, system: SystemSpec, *, enter: float = 2.0,
                  exit: float = 1.3, min_breach: int = 3,
-                 cooldown_s: float = 5.0, min_samples: int = 4):
+                 cooldown_s: float = 5.0, min_samples: int = 4,
+                 obs: Optional[Obs] = None):
         if enter <= exit:
             raise ValueError(f"need enter > exit for hysteresis, got "
                              f"enter={enter} exit={exit}")
@@ -247,6 +254,11 @@ class DivergenceMonitor:
         self._fired_div = [1.0] * n_links
         self._last_fire_s: Optional[float] = None
         self.signals: List[DriftSignal] = []
+        # every observation's (t, per-link divergence) — the
+        # measured-vs-modeled series the drift timeline artifact persists
+        self.history: Deque[Tuple[float, Tuple[float, ...]]] = \
+            collections.deque(maxlen=_HISTORY_MAX)
+        self.obs = obs if obs is not None else NOOP_OBS
 
     def observe(self, monitor: HealthMonitor,
                 now: Optional[float] = None) -> Optional[DriftSignal]:
@@ -255,12 +267,16 @@ class DivergenceMonitor:
         most one per call), else None."""
         t = time.monotonic() if now is None else now
         fired = None
-        for li in range(len(self.system.links)):
+        n_links = len(self.system.links)
+        divs = tuple(monitor.link_divergence(li) if li < monitor.n_links
+                     else 1.0 for li in range(n_links))
+        self.history.append((t, divs))
+        for li in range(n_links):
             if li >= monitor.n_links:
                 continue            # deployment uses fewer links than spec
             if monitor.link_samples(li) < self.min_samples:
                 continue
-            div = monitor.link_divergence(li)
+            div = divs[li]
             if self._alarm[li]:
                 if div <= self.exit:           # recovered: re-arm the link
                     self._alarm[li] = False
@@ -280,6 +296,13 @@ class DivergenceMonitor:
                 self._last_fire_s = t
                 fired = DriftSignal(link=li, divergence=div, at_s=t)
                 self.signals.append(fired)
+                if self.obs.enabled:
+                    self.obs.tracer.instant(
+                        "drift_signal", cat="health", track="health/drift",
+                        args={"link": li, "divergence": round(div, 3)})
+                    self.obs.metrics.counter("drift_signals_fired").inc()
+                    self.obs.metrics.gauge(
+                        f"link{li}_divergence").set(round(div, 4))
         return fired
 
     @property

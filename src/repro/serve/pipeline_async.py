@@ -47,6 +47,8 @@ import numpy as np
 
 from repro.core.link import LinkModel
 from repro.core.quant import QuantSpec, quantize_tensor
+from repro.obs.handle import NOOP_OBS, Obs
+from repro.obs.stats import mean_tail
 from repro.serve.faults import FaultPlan, FaultTrace, ReplicaCrashError
 from repro.serve.health import HealthMonitor
 from repro.serve.request import Request, RequestRecord, ServeReport
@@ -244,7 +246,8 @@ class PipelineServeEngine:
                  capacity: int = 128, temperature: float = 0.0,
                  seed: int = 0, mode: str = "async", name: str = "replica0",
                  faults: Optional[FaultPlan] = None,
-                 health: Optional[HealthMonitor] = None):
+                 health: Optional[HealthMonitor] = None,
+                 obs: Optional[Obs] = None):
         if mode not in ("async", "serial"):
             raise ValueError(f"mode must be 'async' or 'serial', got {mode!r}")
         self.runner = runner
@@ -287,6 +290,10 @@ class PipelineServeEngine:
         # on a crash/failure exit, records finished before death land here
         # so the router can merge them and re-admit only the unfinished
         self.crash_records: Dict[int, RequestRecord] = {}
+        # spans land on tracks under this replica's name: stage/link rows
+        # from the worker threads, sched/driver/requests rows from the
+        # driver; NOOP_OBS keeps every site a single attribute check
+        self.obs = obs if obs is not None else NOOP_OBS
 
     # -- wave helpers --------------------------------------------------------
     def _slot(self, g: int, lane: int) -> int:
@@ -334,11 +341,23 @@ class PipelineServeEngine:
         stall = self.faults.stage_stall_s(si, k)
         if stall > 0:
             self.fault_trace.record("stage_stall", si, k, stall)
+            if self.obs.enabled:
+                self.obs.tracer.instant(
+                    "stage_stall", cat="fault",
+                    track=f"{self.name}/stage{si}",
+                    args={"item": k, "stall_s": stall})
+                self.obs.metrics.counter("serve_faults_injected").inc()
             time.sleep(stall)
         t0 = time.perf_counter()
         self.stages[si].run_item(item)
-        self.health.record_stage(si, time.perf_counter() - t0,
-                                 time.monotonic())
+        t1 = time.perf_counter()
+        self.health.record_stage(si, t1 - t0, time.monotonic())
+        if self.obs.enabled:
+            # reuse the health clock reads: tracing adds no clock calls here
+            self.obs.tracer.complete(
+                item.kind, cat="stage", track=f"{self.name}/stage{si}",
+                start=t0, end=t1, args={"group": item.group})
+            self.obs.metrics.counter("serve_stage_items").inc()
 
     def _link_run(self, li: int, item: _Item) -> None:
         """Push one activation across link ``li``: quantize, sleep the
@@ -353,18 +372,35 @@ class PipelineServeEngine:
         jitter = self.faults.link_jitter(li, k)
         if factor != 1.0:
             self.fault_trace.record("link_degrade", li, k, factor)
+            if self.obs.enabled:
+                self.obs.tracer.instant(
+                    "link_degrade", cat="fault",
+                    track=f"{self.name}/link{li}",
+                    args={"xfer": k, "factor": factor})
+                self.obs.metrics.counter("serve_faults_injected").inc()
         if jitter > 0.0:
             self.fault_trace.record("link_jitter", li, k, jitter)
         sleep_s = lat * factor + jitter
         if sleep_s > 0:
             time.sleep(sleep_s)
+        t1 = time.perf_counter()
         if item.kind == "decode":
-            wall = time.perf_counter() - t0
+            wall = t1 - t0
             self.link_decode_s[li].append(wall)
             self.link_model_s[li].append(lat)
             # the monitor sees measured wall vs the *deployed spec's*
             # prediction — divergence is how it learns about the fault
             self.health.record_link(li, nbytes, wall, lat)
+        if self.obs.enabled:
+            # modeled wire time rides along with the measured wall so a
+            # trace viewer shows the divergence per transfer
+            self.obs.tracer.complete(
+                item.kind, cat="link", track=f"{self.name}/link{li}",
+                start=t0, end=t1,
+                args={"bytes": nbytes, "group": item.group,
+                      "wall_ms": round((t1 - t0) * 1e3, 3),
+                      "model_ms": round(lat * 1e3, 3)})
+            self.obs.metrics.counter("serve_link_transfers").inc()
         item.x = x
         item.link_s += sleep_s
 
@@ -455,7 +491,8 @@ class PipelineServeEngine:
             max_wall_s: float = 120.0) -> ServeReport:
         """Serve the stream to completion (admit -> prefill -> wave decode
         until idle and the stream closes); returns the ServeReport."""
-        sched = SlotScheduler(self.n_slots, eos=self.eos)
+        sched = SlotScheduler(self.n_slots, eos=self.eos, obs=self.obs,
+                              track=f"{self.name}/sched")
         self._sched = sched
         for st in self.stages:                   # fresh per-run accounting
             st.decode_s = []
@@ -537,6 +574,14 @@ class PipelineServeEngine:
                 if crash_at is not None and len(decode_done_t) >= crash_at:
                     self.fault_trace.record("replica_crash", 0,
                                             len(decode_done_t))
+                    if self.obs.enabled:
+                        # marks where this replica's tracks end in the trace
+                        self.obs.tracer.instant(
+                            "replica_crash", cat="fault",
+                            track=f"{self.name}/driver",
+                            args={"step": len(decode_done_t)})
+                        self.obs.metrics.counter(
+                            "serve_replica_crashes").inc()
                     raise ReplicaCrashError(self.name, len(decode_done_t))
                 admit_and_dispatch()
                 try:
@@ -569,6 +614,11 @@ class PipelineServeEngine:
                 if rec.done:
                     rec.replica = self.name
                     self.crash_records[rid] = rec
+            if self.obs.enabled:
+                # finished-before-crash requests still get their spans on
+                # this replica's track; the unfinished ones re-appear on
+                # whichever survivor the router re-admits them to
+                self._emit_request_spans(self.crash_records.values(), t0)
             raise
         finally:
             # error/timeout exits must not leak worker threads (blocked in
@@ -582,9 +632,41 @@ class PipelineServeEngine:
         self._finalize_stats(wall, decode_done_t)
         for rec in sched.records.values():
             rec.replica = self.name
+        if self.obs.enabled:
+            self.obs.tracer.complete(
+                "serve", cat="driver", track=f"{self.name}/driver",
+                start=t0, dur=wall,
+                args={"mode": self.mode,
+                      "decode_steps": len(decode_done_t)})
+            self._emit_request_spans(sched.records.values(), t0)
         return ServeReport(records=list(sched.records.values()),
                            wall_s=wall, eos=self.eos,
                            extra=dict(self.stats))
+
+    def _emit_request_spans(self, records, t0: float) -> None:
+        """One ``cat='request'`` span per finished record on this
+        replica's ``requests`` track, rebuilt from the scheduler's
+        bookkeeping (``t0``: the run's ``perf_counter`` origin).  Span
+        start/duration equal the record's submit/latency exactly, so the
+        ``python -m repro.obs`` breakdown reconciles with
+        ``ServeReport.summary()``."""
+        for rec in records:
+            if not rec.done:
+                continue
+            args = {"rid": rec.rid, "tokens": len(rec.tokens),
+                    "finish": rec.finish, "prompt_len": rec.prompt_len}
+            if rec.ttft_s is not None:
+                args["ttft_ms"] = round(rec.ttft_s * 1e3, 3)
+                self.obs.metrics.histogram("serve_ttft_ms").observe(
+                    rec.ttft_s * 1e3)
+            if rec.latency_s is not None:
+                self.obs.metrics.histogram("serve_latency_ms").observe(
+                    rec.latency_s * 1e3)
+            self.obs.tracer.complete(
+                f"req{rec.rid}", cat="request",
+                track=f"{self.name}/requests",
+                start=t0 + rec.submit_s, dur=rec.latency_s or 0.0,
+                args=args)
 
     def _finalize_stats(self, wall: float, decode_done_t: List[float]):
         """Measured step rate vs the Def.-4 prediction from per-stage /
@@ -597,15 +679,10 @@ class PipelineServeEngine:
         (``stage_step_s`` / ``link_step_s``).  The pure modeled wire time is
         reported alongside as ``link_model_s``.
         """
-
-        def _mean_tail(xs: List[float], skip: int) -> float:
-            tail = xs[skip:] or xs
-            return sum(tail) / len(tail) if tail else 0.0
-
         skip = 2 * self.n_groups
-        stage_means = [_mean_tail(st.decode_s, skip) for st in self.stages]
-        link_means = [_mean_tail(xs, skip) for xs in self.link_decode_s]
-        link_model = [_mean_tail(xs, skip) for xs in self.link_model_s]
+        stage_means = [mean_tail(st.decode_s, skip) for st in self.stages]
+        link_means = [mean_tail(xs, skip) for xs in self.link_decode_s]
+        link_model = [mean_tail(xs, skip) for xs in self.link_model_s]
         steps = len(decode_done_t)
         steady = decode_done_t[skip:]
         if len(steady) >= 2:

@@ -12,11 +12,12 @@ the benchmarks gate on.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.data.synthetic import SyntheticTokens
+from repro.obs.stats import latency_summary
 
 
 @dataclasses.dataclass
@@ -101,10 +102,6 @@ def poisson_traffic(n_requests: int, rate_rps: float, vocab: int,
             for i in range(n_requests)]
 
 
-def _percentile(values: Sequence[float], q: float) -> float:
-    return float(np.percentile(np.asarray(values, np.float64), q))
-
-
 @dataclasses.dataclass
 class ServeReport:
     """Aggregate view over a finished serving run."""
@@ -148,11 +145,15 @@ class ServeReport:
             "total_tokens": self.total_tokens,
             "tokens_per_s": round(self.tokens_per_s, 1),
         }
+        # one percentile definition for the whole repo: nearest-rank from
+        # repro.obs.stats (matches the trace CLI's breakdown exactly)
         if ttfts:
-            out["ttft_p50_ms"] = round(_percentile(ttfts, 50) * 1e3, 2)
-            out["ttft_p95_ms"] = round(_percentile(ttfts, 95) * 1e3, 2)
+            s = latency_summary(ttfts, unit=1e3)
+            out["ttft_p50_ms"] = round(s["p50"], 2)
+            out["ttft_p95_ms"] = round(s["p95"], 2)
         if lats:
-            out["latency_p50_ms"] = round(_percentile(lats, 50) * 1e3, 2)
-            out["latency_p95_ms"] = round(_percentile(lats, 95) * 1e3, 2)
+            s = latency_summary(lats, unit=1e3)
+            out["latency_p50_ms"] = round(s["p50"], 2)
+            out["latency_p95_ms"] = round(s["p95"], 2)
         out.update(self.extra)
         return out

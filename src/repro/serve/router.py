@@ -35,6 +35,7 @@ import threading
 import time
 from typing import Dict, List, Optional, Tuple
 
+from repro.obs.handle import NOOP_OBS, Obs
 from repro.serve.pipeline_async import PipelineServeEngine, RequestStream
 from repro.serve.request import Request, RequestRecord, ServeReport
 
@@ -61,12 +62,15 @@ class ReplicaRouter:
     as lost."""
 
     def __init__(self, replicas: List[PipelineServeEngine], *,
-                 max_retries: int = 2):
+                 max_retries: int = 2, obs: Optional[Obs] = None):
         assert replicas
         if max_retries < 0:
             raise ValueError(f"max_retries must be >= 0, got {max_retries}")
         self.replicas = replicas
         self.max_retries = max_retries
+        # routing / failover / salvage events land on the "router" track;
+        # pass the same handle to the replicas for per-stage spans
+        self.obs = obs if obs is not None else NOOP_OBS
 
     def _pick(self, sent: List[int],
               alive: Optional[List[bool]] = None) -> Optional[int]:
@@ -133,6 +137,12 @@ class ReplicaRouter:
                     continue        # died between pick and push: repick
                 pushed[i][req.rid] = req
                 sent[i] += 1
+                if self.obs.enabled:
+                    self.obs.tracer.instant(
+                        "route", cat="router", track="router/route",
+                        args={"rid": req.rid,
+                              "replica": self.replicas[i].name})
+                    self.obs.metrics.counter("router_requests_routed").inc()
                 return True
 
         def recover(i: int) -> bool:
@@ -141,18 +151,50 @@ class ReplicaRouter:
             nonlocal n_recovered
             crashed = self.replicas[i].crash_records
             mine, pushed[i] = pushed[i], {}
+            obs_on = self.obs.enabled
+            if obs_on:
+                self.obs.tracer.instant(
+                    "replica_failed", cat="router", track="router/failover",
+                    args={"replica": self.replicas[i].name,
+                          "unfinished": len(mine) - len(
+                              set(mine) & set(crashed))})
+                self.obs.metrics.counter("router_replica_failures").inc()
             for rid, rec in crashed.items():
                 if rid in mine:
                     salvaged[rid] = rec     # finished before the crash
                     del mine[rid]
+                    if obs_on:
+                        self.obs.tracer.instant(
+                            "salvage", cat="router", track="router/failover",
+                            args={"rid": rid})
+                        self.obs.metrics.counter(
+                            "router_requests_salvaged").inc()
             for rid, req in mine.items():
                 retries[rid] = retries.get(rid, 0) + 1
                 if retries[rid] > self.max_retries:
                     failed_records.append(_failed_record(req, "lost", now()))
+                    if obs_on:
+                        self.obs.tracer.instant(
+                            "lost", cat="router", track="router/failover",
+                            args={"rid": rid})
+                        self.obs.metrics.counter(
+                            "router_requests_lost").inc()
                 elif req.deadline_s is not None and now() > req.deadline_s:
                     failed_records.append(_failed_record(req, "shed", now()))
+                    if obs_on:
+                        self.obs.tracer.instant(
+                            "shed", cat="router", track="router/failover",
+                            args={"rid": rid})
+                        self.obs.metrics.counter(
+                            "router_requests_shed").inc()
                 elif route(req):
                     n_recovered += 1
+                    if obs_on:
+                        self.obs.tracer.instant(
+                            "failover", cat="router", track="router/failover",
+                            args={"rid": rid, "retry": retries[rid]})
+                        self.obs.metrics.counter(
+                            "router_requests_recovered").inc()
                 else:
                     return False
             return True
@@ -236,6 +278,11 @@ class ReplicaRouter:
                 failed_records.append(_failed_record(req, "lost", now()))
                 records.append(failed_records[-1])
         wall = now()
+        if self.obs.enabled:
+            self.obs.tracer.complete(
+                "serve", cat="router", track="router/route", start=t0,
+                dur=wall, args={"n_requests": len(ordered),
+                                "n_failures": len(failures)})
         extra = {"n_replicas": n, "routed_per_replica": sent,
                  "requests_recovered": n_recovered,
                  "requests_salvaged": len(salvaged),

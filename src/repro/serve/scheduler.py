@@ -26,6 +26,7 @@ import collections
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
+from repro.obs.handle import NOOP_OBS, Obs
 from repro.serve.request import Request, RequestRecord
 
 
@@ -51,13 +52,18 @@ class SlotScheduler:
     and the monolithic engine all drive the same instance (see module
     docstring for the tested invariants)."""
 
-    def __init__(self, n_slots: int, eos: Optional[int] = None):
+    def __init__(self, n_slots: int, eos: Optional[int] = None, *,
+                 obs: Optional[Obs] = None, track: str = "sched"):
         assert n_slots > 0
         self.n_slots = n_slots
         self.eos = eos
         self._slots: List[Optional[_SlotState]] = [None] * n_slots
         self._waiting: collections.deque = collections.deque()
         self.records: Dict[int, RequestRecord] = {}
+        # request-lifecycle events (submit/admit/finish instants + the
+        # submitted/admitted/finished counters) land on `track`
+        self.obs = obs if obs is not None else NOOP_OBS
+        self.track = track
 
     # -- queue side ----------------------------------------------------------
     def submit(self, req: Request, now: float = 0.0) -> RequestRecord:
@@ -69,6 +75,10 @@ class SlotScheduler:
                             max_new=req.max_new, submit_s=now)
         self.records[req.rid] = rec
         self._waiting.append(req)
+        if self.obs.enabled:
+            self.obs.tracer.instant("submit", cat="sched", track=self.track,
+                                    args={"rid": req.rid})
+            self.obs.metrics.counter("serve_requests_submitted").inc()
         return rec
 
     def admit(self) -> List[Tuple[int, Request]]:
@@ -83,6 +93,13 @@ class SlotScheduler:
             req = self._waiting.popleft()
             self._slots[i] = _SlotState(req, self.records[req.rid])
             placed.append((i, req))
+        if placed and self.obs.enabled:
+            for slot, req in placed:
+                self.obs.tracer.instant(
+                    "admit", cat="sched", track=self.track,
+                    args={"rid": req.rid, "slot": slot})
+            self.obs.metrics.counter("serve_requests_admitted").inc(
+                len(placed))
         return placed
 
     # -- decode side ---------------------------------------------------------
@@ -103,6 +120,12 @@ class SlotScheduler:
             st.record.finish = "eos" if hit_eos else "length"
             st.record.done_s = now
             self._slots[slot] = None
+            if self.obs.enabled:
+                self.obs.tracer.instant(
+                    "evict", cat="sched", track=self.track,
+                    args={"rid": st.req.rid, "slot": slot,
+                          "finish": st.record.finish})
+                self.obs.metrics.counter("serve_requests_finished").inc()
             return st.record
         return None
 

@@ -37,7 +37,7 @@ def test_rule_catalog():
     rules = all_rules()
     ids = [r.id for r in rules]
     assert len(ids) == len(set(ids))
-    for family in ("RPR1", "RPR2", "RPR3"):
+    for family in ("RPR1", "RPR2", "RPR3", "RPR4"):
         assert any(i.startswith(family) for i in ids), family
     assert ids == sorted(ids)
 
@@ -500,6 +500,103 @@ def test_rpr303_fires(tmp_path):
 
 def test_rpr303_clean_twin_silent(tmp_path):
     assert run_rules(tmp_path, RPR303_CLEAN, "RPR303") == []
+
+
+# -- RPR401/402: wall clocks measuring durations ------------------------------
+
+RPR401_BAD = """
+import time
+
+def stage_wall():
+    t0 = time.time()
+    work()
+    return time.time() - t0                 # direct operand
+
+def lease_age(started):
+    now = time.time()
+    return now - started                    # via the assigned name
+"""
+
+RPR401_CLEAN = """
+import time
+
+def stage_wall():
+    t0 = time.perf_counter()
+    work()
+    return time.perf_counter() - t0
+
+def heartbeat_gap(last):
+    return time.monotonic() - last
+
+def shard_stamp():
+    return {"time": time.time()}            # a timestamp, not a duration
+
+def other_scope_untainted():
+    t0 = time.time()                        # assigned here ...
+    return t0
+
+def uses_local(t0):
+    return t0 - 1.0                         # ... not this t0: different scope
+"""
+
+RPR402_BAD = """
+from datetime import datetime
+
+def request_latency(started):
+    return datetime.now() - started
+
+def age():
+    t0 = datetime.utcnow()
+    work()
+    return datetime.utcnow() - t0
+"""
+
+RPR402_CLEAN = """
+import time
+from datetime import datetime
+
+def report_stamp():
+    return datetime.now().isoformat()       # formatting a moment is fine
+
+def latency():
+    t0 = time.perf_counter()
+    work()
+    return time.perf_counter() - t0
+"""
+
+
+def test_rpr401_fires(tmp_path):
+    findings = run_rules(tmp_path, RPR401_BAD, "RPR401",
+                         relpath="src/repro/serve/mod.py")
+    assert rule_ids(findings) == ["RPR401"]
+    assert len(findings) == 2
+    msgs = " ".join(f.message for f in findings)
+    assert "time.time()" in msgs and "perf_counter" in msgs
+    assert "assigned from time.time" in msgs
+
+
+def test_rpr401_clean_twin_silent(tmp_path):
+    assert run_rules(tmp_path, RPR401_CLEAN, "RPR401",
+                     relpath="src/repro/fleet/mod.py") == []
+
+
+def test_rpr401_out_of_scope_silent(tmp_path):
+    # the same violating source outside serve/fleet/obs is not flagged —
+    # launch scripts legitimately print wall-clock stamps
+    assert run_rules(tmp_path, RPR401_BAD, "RPR401",
+                     relpath="src/repro/launch/mod.py") == []
+
+
+def test_rpr402_fires(tmp_path):
+    findings = run_rules(tmp_path, RPR402_BAD, "RPR402",
+                         relpath="src/repro/obs/mod.py")
+    assert rule_ids(findings) == ["RPR402"]
+    assert len(findings) == 2
+
+
+def test_rpr402_clean_twin_silent(tmp_path):
+    assert run_rules(tmp_path, RPR402_CLEAN, "RPR402",
+                     relpath="src/repro/obs/mod.py") == []
 
 
 # -- syntax errors ------------------------------------------------------------

@@ -39,6 +39,7 @@ def test_docs_exist():
     assert "docs/search.md" in DOC_FILES
     assert "docs/serving.md" in DOC_FILES
     assert "docs/drift.md" in DOC_FILES
+    assert "docs/observability.md" in DOC_FILES
 
 
 @pytest.mark.parametrize("relpath", DOC_FILES)

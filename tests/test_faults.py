@@ -299,6 +299,85 @@ def test_divergence_monitor_warmup_and_validation():
     assert dm.alarmed_links == [] and len(dm.signals) == 1
 
 
+def test_cooldown_expiry_still_requires_fresh_breaches():
+    """The cooldown gates *when* a fire may happen, never substitutes for
+    the breach count: after the cooldown expires, a dip below `enter`
+    resets the counter and min_breach fresh consecutive breaches are
+    needed before the re-fire."""
+    hm = HealthMonitor(1, 1, alpha=1.0)
+    dm = DivergenceMonitor(TWO_NODE, enter=2.0, exit=1.2, min_breach=3,
+                           cooldown_s=5.0, min_samples=1)
+    for t in range(3):
+        _feed(hm, 5.0)
+        dm.observe(hm, now=float(t))
+    assert len(dm.signals) == 1                   # fired at t=2
+    _feed(hm, 1.0)
+    dm.observe(hm, now=3.0)                       # recovered: re-armed
+    _feed(hm, 1.0)
+    dm.observe(hm, now=20.0)                      # cooldown long expired...
+    _feed(hm, 5.0)
+    assert dm.observe(hm, now=21.0) is None       # ...but breaches 1/3
+    _feed(hm, 5.0)
+    assert dm.observe(hm, now=22.0) is None       # 2/3
+    _feed(hm, 5.0)
+    sig = dm.observe(hm, now=23.0)                # 3/3: fresh fire
+    assert sig is not None and len(dm.signals) == 2
+
+
+def test_rebase_clears_cooldown_and_breach_state():
+    """After acting on a signal the monitor is rebased onto the new
+    deployment: the cooldown clock and any half-accumulated breach count
+    must not leak into the new spec's epoch."""
+    hm = HealthMonitor(1, 1, alpha=1.0)
+    dm = DivergenceMonitor(TWO_NODE, enter=2.0, exit=1.2, min_breach=2,
+                           cooldown_s=1000.0, min_samples=1)
+    for t in range(2):
+        _feed(hm, 6.0)
+        dm.observe(hm, now=float(t))
+    assert len(dm.signals) == 1
+    dm.rebase(TWO_NODE)
+    assert dm.alarmed_links == []
+    # a fire right after rebase: the old cooldown would block until
+    # t=1001, the old alarm latch would swallow it entirely
+    for t in (2.0, 3.0):
+        _feed(hm, 6.0)
+        sig = dm.observe(hm, now=t)
+    assert sig is not None and len(dm.signals) == 2
+
+
+def test_observe_records_divergence_history():
+    """Every observation lands in `history` as (t, per-link divergence) —
+    the measured-vs-modeled series the drift timeline artifact persists —
+    whether or not anything fired."""
+    hm = HealthMonitor(1, 1, alpha=1.0)
+    dm = DivergenceMonitor(TWO_NODE, enter=2.0, exit=1.2, min_breach=3,
+                           cooldown_s=10.0, min_samples=1)
+    assert list(dm.history) == []
+    for t, ratio in enumerate([1.0, 5.0, 1.0]):
+        _feed(hm, ratio)
+        dm.observe(hm, now=float(t))
+    assert [t for t, _ in dm.history] == [0.0, 1.0, 2.0]
+    assert dm.history[1][1][0] == pytest.approx(5.0)
+    assert all(len(divs) == 1 for _, divs in dm.history)
+
+
+def test_ewma_first_sample_is_raw():
+    """The first sample becomes the value verbatim — no (1-alpha) pull
+    toward a phantom zero start — so a single link transfer already
+    yields its exact measured/model divergence."""
+    from repro.serve.health import Ewma
+    e = Ewma(alpha=0.25)
+    assert e.value == 0.0 and e.n == 0            # empty: explicit zero
+    assert e.update(4.0) == pytest.approx(4.0)    # raw, not 0.75*0+0.25*4
+    assert e.n == 1
+    assert e.update(8.0) == pytest.approx(0.75 * 4.0 + 0.25 * 8.0)
+    # HealthMonitor inherits it: one transfer -> exact divergence even
+    # with smoothing enabled
+    hm = HealthMonitor(1, 1, alpha=0.25)
+    hm.record_link(0, nbytes=100, measured_s=4e-3, model_s=1e-3)
+    assert hm.link_divergence(0) == pytest.approx(4.0)
+
+
 # -- replica crash + router failover ------------------------------------------
 
 def test_engine_crash_stashes_done_records(runner, lm):

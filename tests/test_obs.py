@@ -1,0 +1,352 @@
+"""repro.obs: tracer thread-safety and ring bounds, the metrics registry,
+nearest-rank statistics (property-tested against NumPy's inverted_cdf),
+Chrome-trace export/validation round trips, the `python -m repro.obs`
+CLI, and the traced serve-engine integration (request spans reconcile
+with the engine's own RequestRecords)."""
+
+import json
+import threading
+
+import jax
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.models.registry import build_model, get_config
+from repro.obs import (NOOP_OBS, Counter, Gauge, Histogram, MetricsRegistry,
+                       NullTracer, Obs, Tracer, latency_summary,
+                       load_chrome_trace, mean_tail, percentile,
+                       to_chrome_trace, validate_chrome_trace,
+                       write_chrome_trace)
+from repro.obs.cli import main as obs_cli, request_rows, slowest_spans
+from repro.serve import (PipelineServeEngine, ReplicaRouter, Request,
+                         stream_of)
+from repro.serving.pipeline import PartitionedLMRunner
+
+
+@pytest.fixture(scope="module")
+def runner():
+    cfg = get_config("smollm-360m").reduced()
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return PartitionedLMRunner(model, params, cuts=[0])
+
+
+# -- stats --------------------------------------------------------------------
+
+def test_percentile_nearest_rank_basics():
+    vals = [10.0, 20.0, 30.0, 40.0]
+    assert percentile(vals, 0) == 10.0
+    assert percentile(vals, 50) == 20.0          # rank ceil(0.5*4)=2
+    assert percentile(vals, 75) == 30.0
+    assert percentile(vals, 100) == 40.0
+    assert percentile([7.0], 95) == 7.0
+    with pytest.raises(ValueError, match="empty"):
+        percentile([], 50)
+    with pytest.raises(ValueError, match="in \\[0, 100\\]"):
+        percentile([1.0], 101)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.floats(min_value=-1e6, max_value=1e6,
+                          allow_nan=False), min_size=1, max_size=64),
+       st.integers(min_value=0, max_value=100))
+def test_percentile_matches_numpy_inverted_cdf(vals, q):
+    """The single nearest-rank definition is exactly NumPy's
+    method='inverted_cdf' for every sample set and integer q."""
+    expect = float(np.percentile(np.asarray(vals, np.float64), q,
+                                 method="inverted_cdf"))
+    assert percentile(vals, q) == pytest.approx(expect)
+
+
+def test_latency_summary_and_mean_tail():
+    s = latency_summary([0.010, 0.020, 0.030], unit=1e3)
+    assert s["p50"] == pytest.approx(20.0)
+    assert s["max"] == pytest.approx(30.0)
+    assert s["mean"] == pytest.approx(20.0)
+    assert latency_summary([]) == {}
+    assert mean_tail([10.0, 1.0, 1.0], skip=1) == pytest.approx(1.0)
+    assert mean_tail([10.0], skip=5) == pytest.approx(10.0)  # short: use all
+    assert mean_tail([], skip=2) == 0.0
+
+
+# -- tracer -------------------------------------------------------------------
+
+def test_tracer_span_kinds_and_order():
+    tr = Tracer()
+    with tr.span("outer", cat="test", track="p/t"):
+        tr.instant("mark", cat="test", track="p/t")
+    t0 = tr.epoch + 0.5
+    tr.complete("pre", cat="test", track="p/t", start=t0, dur=0.25)
+    spans = tr.spans()
+    assert [s.name for s in spans] == ["outer", "mark", "pre"]
+    outer, mark, pre = spans
+    assert outer.ph == "X" and mark.ph == "i"
+    assert outer.ts <= mark.ts <= outer.end      # the instant nests inside
+    assert pre.ts == pytest.approx(0.5)
+    assert pre.dur == pytest.approx(0.25)
+    assert pre.end == pytest.approx(0.75)
+    assert tr.dropped == 0
+
+
+def test_tracer_thread_safety_and_ring_bound():
+    """Concurrent writers never lose each other's spans below capacity,
+    and a full per-thread ring drops oldest while counting the drops."""
+    tr = Tracer(capacity_per_thread=100)
+    n_threads, n_spans = 4, 150                  # 50 drops per thread
+
+    def work(tid):
+        for i in range(n_spans):
+            tr.instant(f"t{tid}.{i}", track=f"p/{tid}")
+
+    threads = [threading.Thread(target=work, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    spans = tr.spans()
+    assert len(spans) == n_threads * 100         # capacity kept per thread
+    assert tr.dropped == n_threads * 50
+    # the *newest* spans survive drop-oldest
+    names = {s.name for s in spans}
+    for t in range(n_threads):
+        assert f"t{t}.{n_spans - 1}" in names
+        assert f"t{t}.0" not in names
+
+
+def test_null_tracer_and_noop_obs():
+    nt = NullTracer()
+    with nt.span("x"):
+        nt.instant("y")
+    nt.complete("z", start=0.0, dur=1.0)
+    assert nt.spans() == [] and nt.dropped == 0 and not nt.enabled
+    assert not NOOP_OBS.enabled
+    NOOP_OBS.metrics.counter("anything").inc()
+    NOOP_OBS.metrics.histogram("h").observe(1.0)
+    assert NOOP_OBS.metrics.snapshot() == {}
+    on = Obs.on()
+    assert on.enabled and on.tracer.enabled
+
+
+# -- metrics ------------------------------------------------------------------
+
+def test_metrics_registry_instruments():
+    reg = MetricsRegistry()
+    reg.counter("req").inc()
+    reg.counter("req").inc(4)
+    reg.gauge("depth").set(3.5)
+    h = reg.histogram("lat_ms")
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert snap["req"] == 5
+    assert snap["depth"] == 3.5
+    assert snap["lat_ms.count"] == 4
+    assert snap["lat_ms.mean"] == pytest.approx(2.5)
+    assert snap["lat_ms.p50"] == pytest.approx(2.0)   # nearest rank
+    assert snap["lat_ms.min"] == 1.0 and snap["lat_ms.max"] == 4.0
+    assert h.quantile(100) == 4.0
+    reg.reset()
+    assert reg.snapshot() == {}
+
+
+def test_metrics_registry_kind_mismatch_raises():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(TypeError, match="already registered as Counter"):
+        reg.gauge("x")
+    with pytest.raises(TypeError, match="not Histogram"):
+        reg.histogram("x")
+
+
+def test_histogram_reservoir_bounds_memory():
+    h = Histogram("h", keep=8)
+    for v in range(100):
+        h.observe(float(v))
+    s = h.summary()
+    assert s["count"] == 100                     # exact over the stream
+    assert s["min"] == 0.0 and s["max"] == 99.0  # exact extremes
+    assert s["p50"] >= 92.0                      # quantiles: recent window
+
+
+def test_metrics_snapshot_atomic_write(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("c").inc(2)
+    path = str(tmp_path / "metrics.json")
+    reg.write_snapshot(path)
+    with open(path) as f:
+        assert json.load(f) == {"c": 2}
+
+
+# -- chrome export ------------------------------------------------------------
+
+def _sample_tracer():
+    tr = Tracer()
+    e = tr.epoch
+    tr.complete("serve", cat="driver", track="replica0/driver",
+                start=e, dur=1.0)
+    tr.complete("decode", cat="stage", track="replica0/stage0",
+                start=e + 0.1, dur=0.2, args={"group": 0})
+    tr.complete("req0", cat="request", track="replica0/requests",
+                start=e + 0.05, dur=0.5,
+                args={"rid": 0, "ttft_ms": 100.0, "tokens": 4,
+                      "finish": "length"})
+    tr.instant("admit", cat="sched", track="replica0/sched",
+               ts=e + 0.04, args={"rid": 0, "slot": 1})
+    return tr
+
+
+def test_chrome_trace_round_trip(tmp_path):
+    tr = _sample_tracer()
+    trace = to_chrome_trace(tr.spans(), dropped=tr.dropped)
+    assert validate_chrome_trace(trace) == []
+    path = str(tmp_path / "trace.json")
+    write_chrome_trace(path, tr)
+    loaded = load_chrome_trace(path)
+    assert validate_chrome_trace(loaded) == []
+    evs = loaded["traceEvents"]
+    # one process metadata entry per "process", one thread per track
+    procs = {e["args"]["name"] for e in evs
+             if e.get("ph") == "M" and e["name"] == "process_name"}
+    assert procs == {"replica0"}
+    threads = {e["args"]["name"] for e in evs
+               if e.get("ph") == "M" and e["name"] == "thread_name"}
+    assert threads == {"driver", "stage0", "requests", "sched"}
+    xs = [e for e in evs if e.get("ph") == "X"]
+    assert {e["name"] for e in xs} == {"serve", "decode", "req0"}
+    drv = next(e for e in xs if e["name"] == "serve")
+    assert drv["dur"] == pytest.approx(1e6)      # seconds -> microseconds
+    assert loaded["otherData"]["dropped_spans"] == 0
+
+
+def test_validate_chrome_trace_catches_malformed():
+    assert validate_chrome_trace({"nope": 1})
+    bad = {"traceEvents": [{"ph": "X", "name": "a", "ts": 0.0,
+                            "pid": 1, "tid": 1, "dur": -5.0}]}
+    errs = validate_chrome_trace(bad)
+    assert any("dur" in e for e in errs)
+    # pid/tid without naming metadata is flagged (Perfetto shows bare ints)
+    anon = {"traceEvents": [{"ph": "X", "name": "a", "ts": 0.0,
+                             "pid": 7, "tid": 7, "dur": 1.0}]}
+    assert any("metadata" in e for e in validate_chrome_trace(anon))
+
+
+def test_cli_renders_tables(tmp_path, capsys):
+    tr = _sample_tracer()
+    path = str(tmp_path / "trace.json")
+    write_chrome_trace(path, tr)
+    assert obs_cli([path, "--top", "5"]) == 0
+    out = capsys.readouterr().out
+    assert "per-request breakdown" in out
+    assert "slowest spans" in out
+    assert "latency_ms p50=" in out
+    trace = load_chrome_trace(path)
+    rows = request_rows(trace)
+    assert [r["rid"] for r in rows] == [0]
+    assert rows[0]["replica"] == "replica0"
+    assert rows[0]["latency_ms"] == pytest.approx(500.0)
+    slow = slowest_spans(trace, top=2)
+    assert slow[0]["name"] == "serve"            # longest non-request span
+
+
+def test_cli_rejects_invalid_trace(tmp_path, capsys):
+    path = str(tmp_path / "bad.json")
+    with open(path, "w") as f:
+        json.dump({"traceEvents": [{"ph": "X"}]}, f)
+    assert obs_cli([path]) == 2
+    assert "INVALID" in capsys.readouterr().err
+
+
+# -- serve-engine integration -------------------------------------------------
+
+def test_traced_engine_run_reconciles_with_report(runner):
+    """A traced async run produces stage/link/driver/request spans whose
+    request rows match the engine's own RequestRecords exactly, and the
+    scheduler's lifecycle instants land on the sched track."""
+    obs = Obs.on()
+    eng = PipelineServeEngine(runner, n_slots=2, n_groups=1, eos=None,
+                              mode="async", capacity=32, obs=obs)
+    eng.warmup(prompt_len=6)
+    prompts = np.random.default_rng(1).integers(
+        0, 100, size=(3, 6)).astype(np.int32)
+    reqs = [Request(i, prompts[i], max_new=3, arrival_s=0.0)
+            for i in range(3)]
+    rep = eng.run(stream_of(reqs), max_wall_s=120.0)
+    assert rep.n_done == 3
+
+    spans = obs.tracer.spans()
+    cats = {s.cat for s in spans}
+    assert {"driver", "stage", "request", "sched"} <= cats
+    driver = [s for s in spans if s.cat == "driver"]
+    assert len(driver) == 1
+    # every stage span nests inside the driver span's interval
+    for s in spans:
+        if s.cat == "stage":
+            assert s.ts >= driver[0].ts - 1e-6
+            assert s.end <= driver[0].end + 1e-6
+    # request spans mirror the records byte-for-byte
+    req_spans = {s.args["rid"]: s for s in spans if s.cat == "request"}
+    assert set(req_spans) == {0, 1, 2}
+    for rid, rec in rep_records(rep).items():
+        s = req_spans[rid]
+        assert s.dur == pytest.approx(rec.latency_s)
+        assert s.args["tokens"] == len(rec.tokens)
+        assert s.args["ttft_ms"] == pytest.approx(rec.ttft_s * 1e3,
+                                                  abs=1e-3)
+    # the scheduler's lifecycle instants
+    sched = [s.name for s in spans if s.cat == "sched"]
+    assert sched.count("submit") == 3
+    assert sched.count("admit") == 3
+    assert sched.count("evict") == 3
+    # counters followed along
+    snap = obs.metrics.snapshot()
+    assert snap["serve_requests_submitted"] == 3
+    assert snap["serve_requests_finished"] == 3
+    assert snap["serve_ttft_ms.count"] == 3
+
+    # the exported trace validates and the CLI sees the same rows
+    trace = to_chrome_trace(spans, dropped=obs.tracer.dropped)
+    assert validate_chrome_trace(trace) == []
+    rows = request_rows(trace)
+    assert [r["rid"] for r in rows] == [0, 1, 2]
+
+
+def rep_records(rep):
+    return {rec.rid: rec for rec in rep.records}
+
+
+def test_untraced_engine_records_nothing(runner):
+    eng = PipelineServeEngine(runner, n_slots=2, n_groups=1, eos=None,
+                              mode="serial", capacity=32)
+    eng.warmup(prompt_len=6)
+    reqs = [Request(0, np.zeros(6, np.int32), max_new=2, arrival_s=0.0)]
+    rep = eng.run(stream_of(reqs), max_wall_s=120.0)
+    assert rep.n_done == 1
+    assert eng.obs is NOOP_OBS
+    assert eng.obs.tracer.spans() == []
+
+
+def test_router_route_and_serve_spans(runner):
+    obs = Obs.on()
+    replicas = [PipelineServeEngine(runner, n_slots=2, n_groups=1, eos=None,
+                                    mode="serial", capacity=32,
+                                    name=f"replica{i}", obs=obs)
+                for i in range(2)]
+    for r in replicas:
+        r.warmup(prompt_len=6)
+    prompts = np.random.default_rng(2).integers(
+        0, 100, size=(4, 6)).astype(np.int32)
+    reqs = [Request(i, prompts[i], max_new=2, arrival_s=0.0)
+            for i in range(4)]
+    rep = ReplicaRouter(replicas, obs=obs).serve(reqs, realtime=False,
+                                                 max_wall_s=120.0)
+    assert rep.n_done == 4
+    spans = obs.tracer.spans()
+    routes = [s for s in spans if s.track == "router/route" and s.ph == "i"]
+    assert len(routes) == 4
+    assert {s.args["replica"] for s in routes} <= {"replica0", "replica1"}
+    serve_span = [s for s in spans
+                  if s.track == "router/route" and s.ph == "X"]
+    assert len(serve_span) == 1
+    assert obs.metrics.counter("router_requests_routed").value == 4
